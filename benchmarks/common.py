@@ -1,0 +1,42 @@
+"""Benchmark utilities: timing + subprocess meshes (benches themselves see
+one device; multi-device figures run in child processes)."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Callable, List, Tuple
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+
+def time_fn(fn: Callable[[], object], *, warmup: int = 2,
+            iters: int = 5) -> float:
+    """Median wall-time per call in microseconds (jax results blocked)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def run_in_mesh(code: str, n_devices: int = 8, timeout: int = 600) -> dict:
+    """Run code in a child with N fake devices; code must print one JSON."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if out.returncode != 0:
+        raise RuntimeError(f"bench subprocess failed:\n{out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])

@@ -1,0 +1,30 @@
+"""Paper Figure 2: allocator scalability microbenchmark.
+
+(a) execution throughput vs concurrent streams; (b) memory overhead ratio.
+Reproduction target: the single-lock design (ptmalloc analogue) degrades
+under concurrency; slab/arena scale; slab-family pays ~1.3x memory.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core.config import AllocatorKind
+from repro.memory.microbench import run_microbench
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for kind in AllocatorKind:
+        for n in (1, 4, 16, 32):
+            r = run_microbench(kind, n_streams=n, ops_per_stream=2000)
+            us_per_op = 1e6 / r.ops_per_sec
+            rows.append((
+                f"fig2a_alloc_{kind.value}_streams{n}",
+                us_per_op,
+                f"ops/s={r.ops_per_sec:.0f};contention/op={r.contention_rate:.3f}"))
+        rows.append((
+            f"fig2b_overhead_{kind.value}",
+            0.0,
+            f"overhead_ratio={r.overhead_ratio:.3f}"))
+    return rows

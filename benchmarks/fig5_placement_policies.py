@@ -1,0 +1,61 @@
+"""Paper Figure 5: placement policies x auto-rebalance (AutoNUMA analogue).
+
+Measured on a real (fake-device) 8-way mesh in a subprocess: wall time of
+W1 (holistic median) and W2 (distributive count) under each policy, plus
+the AutoNUMA analogue appended to FIRST_TOUCH, plus the LAR analogue
+(local bytes / total bytes from the compiled collective mix).
+
+Reproduction targets (paper 4.3.1): INTERLEAVE fastest for shared-state
+aggregation; auto-rebalance only helps the pathological placements;
+holistic aggregation punishes replication-based policies hardest.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, run_in_mesh
+
+CODE = """
+import json, time, numpy as np, jax, jax.numpy as jnp
+from repro.core.config import PlacementPolicy
+from repro.analytics.engine import dist_count, dist_median
+from repro.analytics.datasets import moving_cluster
+
+mesh = jax.make_mesh((8,), ("data",))
+G, N = 4096, 1 << 20
+ds = moving_cluster(N, G, seed=3)
+keys = jnp.asarray(ds.keys); vals = jnp.asarray(ds.vals)
+
+def bench(fn, *args):
+    out = jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(5):
+        t0 = time.perf_counter(); jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[2] * 1e6
+
+res = {}
+for pol in PlacementPolicy:
+    for auto in ((False, True) if pol == PlacementPolicy.FIRST_TOUCH else (False,)):
+        fn = jax.jit(dist_count(mesh, pol, G, auto_rebalance=auto))
+        hlo = fn.lower(keys).compile().as_text()
+        wire = sum(hlo.count(f" {c}(") for c in
+                   ("all-reduce", "all-gather", "all-to-all",
+                    "reduce-scatter", "collective-permute"))
+        tag = pol.value + ("+auto" if auto else "")
+        res[f"w2_{tag}"] = {"us": bench(fn, keys), "collectives": wire}
+for pol in (PlacementPolicy.FIRST_TOUCH, PlacementPolicy.INTERLEAVE,
+            PlacementPolicy.PREFERRED):
+    fn = jax.jit(dist_median(mesh, pol, G))
+    res[f"w1_{pol.value}"] = {"us": bench(fn, keys, vals)}
+print(json.dumps(res))
+"""
+
+
+def run() -> List[Row]:
+    res = run_in_mesh(CODE, n_devices=8, timeout=900)
+    rows: List[Row] = []
+    for name, d in res.items():
+        derived = ";".join(f"{k}={v}" for k, v in d.items() if k != "us")
+        rows.append((f"fig5_{name}", d["us"], derived))
+    return rows

@@ -1,0 +1,47 @@
+"""Roofline table: reads the dry-run JSON reports (experiments/dryrun) and
+emits one row per (arch x shape x mesh) — the §Roofline deliverable."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from benchmarks.common import REPO, Row
+
+DRYRUN_DIR = os.path.join(REPO, "experiments", "dryrun")
+
+
+def load_reports(pattern: str = "*.json"):
+    reports = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        try:
+            reports.append(json.load(open(f)))
+        except Exception:
+            continue
+    return reports
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for r in load_reports():
+        tag = f"{r['arch']}|{r['shape']}|{r['mesh']}"
+        if r.get("policy", "interleave") != "interleave" or \
+           not r.get("sequence_parallel", True):
+            tag += f"|{r.get('policy')}{'' if r.get('sequence_parallel', True) else '|nosp'}"
+        if r["status"] != "ok":
+            rows.append((f"roofline_{tag}", 0.0, r["status"]))
+            continue
+        rf = r["roofline"]
+        rows.append((
+            f"roofline_{tag}",
+            rf["step_s_lower_bound"] * 1e6,
+            f"bottleneck={rf['bottleneck']};compute_s={rf['compute_s']:.3f};"
+            f"memory_s={rf['memory_s']:.3f};collective_s={rf['collective_s']:.3f};"
+            f"mfu_bound={rf['mfu_bound'] or 0:.4f};"
+            f"GB/dev={r['bytes_per_device']/1e9:.1f};"
+            f"fits={r['fits_16gb']};useful={r['useful_flops_ratio'] or 0:.3f}"))
+    if not rows:
+        rows.append(("roofline_missing", 0.0,
+                     "run repro.launch.dryrun --all first"))
+    return rows

@@ -1,0 +1,59 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (assignment format). Modules:
+  fig2   allocator microbenchmark (scalability + memory overhead)
+  fig3/4 thread placement (layouts; sparse/dense undersubscription)
+  fig5   placement policies x auto-rebalance (8-device mesh, measured)
+  fig6   workload x allocator (device buffers + serving page pool)
+  fig7   index nested-loop join (three index kinds)
+  fig8/9 TPC-H default vs tuned configuration
+  roofline  the dry-run (arch x shape x mesh) table
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module substrings to run")
+    ap.add_argument("--skip-slow", action="store_true",
+                    help="skip the subprocess-mesh figures")
+    args = ap.parse_args()
+
+    from benchmarks import (fig2_allocator_microbench,
+                            fig3_fig4_thread_placement,
+                            fig5_placement_policies,
+                            fig6_workload_allocators, fig7_index_join,
+                            fig8_fig9_tpch, roofline_table)
+    modules = [
+        ("fig2", fig2_allocator_microbench),
+        ("fig3_fig4", fig3_fig4_thread_placement),
+        ("fig5", fig5_placement_policies),
+        ("fig6", fig6_workload_allocators),
+        ("fig7", fig7_index_join),
+        ("fig8_fig9", fig8_fig9_tpch),
+        ("roofline", roofline_table),
+    ]
+    if args.skip_slow:
+        modules = [m for m in modules if m[0] != "fig5"]
+    if args.only:
+        keys = args.only.split(",")
+        modules = [m for m in modules if any(k in m[0] for k in keys)]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        try:
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}_FAILED,0,{type(e).__name__}: {e}", file=sys.stderr)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

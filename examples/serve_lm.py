@@ -1,0 +1,55 @@
+"""Serving example: continuous batching with the paged KV cache under the
+THP (page size) and allocator knobs — paper Section 3.4.1 live.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.reduced import REDUCED
+from repro.core.config import AllocatorKind
+from repro.core.params import init_params
+from repro.models.lm import LMModel
+from repro.runtime import ContinuousBatcher, Request
+
+
+def serve(page_tokens, allocator):
+    arch = REDUCED["qwen2-0.5b"]
+    model = LMModel(arch, tp=1, remat="none")
+    params = init_params(model.schema(), jax.random.PRNGKey(0), jnp.float32)
+    b = ContinuousBatcher(model, params, wave_slots=8, max_len=96,
+                          page_tokens=page_tokens, n_pages=64,
+                          allocator=allocator)
+    rng = np.random.RandomState(0)
+    for i in range(32):
+        b.submit(Request(req_id=i, prompt_len=int(rng.randint(4, 24)),
+                         max_new_tokens=12))
+    t0 = time.perf_counter()
+    stats = b.run(max_steps=2000)
+    dt = time.perf_counter() - t0
+    return stats, dt
+
+
+def main():
+    print(f"{'page_tokens':>11s} {'allocator':>9s} {'tok/s':>8s} "
+          f"{'frag':>6s} {'stalls':>6s} {'util':>5s}")
+    for page_tokens in (8, 32):           # THP: small vs huge pages
+        for alloc in (AllocatorKind.BUMP, AllocatorKind.SLAB):
+            stats, dt = serve(page_tokens, alloc)
+            print(f"{page_tokens:11d} {alloc.value:>9s} "
+                  f"{stats.tokens_out/dt:8.0f} "
+                  f"{stats.fragmentation:6.2f} {stats.admission_stalls:6d} "
+                  f"{stats.lane_utilization:5.2f}")
+    print("\nsmall pages: low fragmentation, more allocator traffic; "
+          "large pages invert it — paper 3.4.1 on a TPU serving stack.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""End-to-end driver (assignment deliverable b): train a reduced LM for a
+few hundred steps on CPU with checkpointing + a failure drill mid-run.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen2-0.5b --steps 200
+"""
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_arch
+from repro.configs.reduced import reduced
+from repro.core.config import LM_SHAPES, RunConfig, TrainConfig
+from repro.models.lm import LMModel
+from repro.runtime import FailureInjector, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    arch = reduced(get_arch(args.arch))
+    model = LMModel(arch, tp=1, remat="block")
+    cfg = RunConfig(arch=arch, shape=LM_SHAPES["train_4k"],
+                    train=TrainConfig(learning_rate=1e-3,
+                                      warmup_steps=args.steps // 10))
+    with tempfile.TemporaryDirectory() as ckpt:
+        res = train(model, cfg, n_steps=args.steps, batch=args.batch,
+                    seq=args.seq, ckpt_dir=ckpt, ckpt_every=25,
+                    injector=FailureInjector(
+                        fail_at_steps=[args.steps // 2]))
+        print(f"arch={arch.name} steps={res.steps_run} "
+              f"restarts={res.restarts}")
+        k = max(1, len(res.losses) // 10)
+        for i in range(0, len(res.losses), k):
+            print(f"  step {i:4d}  loss {res.losses[i]:.4f}")
+        print(f"  final loss {res.final_loss:.4f} "
+              f"(start {res.losses[0]:.4f})")
+        assert res.final_loss < res.losses[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Generate the EXPERIMENTS.md §Roofline table from dry-run reports."""
+import glob
+import json
+import sys
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+               "long_500k": 3}
+
+
+def fmt(r):
+    if r["status"] == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — "
+                f"| — | — | skipped (full attention; DESIGN §8) |")
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — "
+                f"| — | — | ERROR |")
+    rf = r["roofline"]
+    note = []
+    if not r["fits_16gb"]:
+        note.append(f"{r['bytes_per_device']/1e9:.0f}GB/dev > 16GB")
+    return ("| {arch} | {shape} | {mesh} | {c:.3f} | {m:.3f} | {x:.3f} "
+            "| **{b}** | {mfu:.3f} | {u:.2f} | {note} |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        c=rf["compute_s"], m=rf["memory_s"], x=rf["collective_s"],
+        b=rf["bottleneck"][:4], mfu=rf["mfu_bound"] or 0,
+        u=r["useful_flops_ratio"] or 0, note="; ".join(note) or "fits")
+
+
+def main(variant_filter=None):
+    reports = []
+    for f in sorted(glob.glob("experiments/dryrun/*.json")):
+        r = json.load(open(f))
+        stem = f.split("/")[-1][:-5]
+        base = f"{r['arch']}_{r['shape']}_" + (
+            "multi" if r["mesh"] == "2x16x16" else "single")
+        r["_variant"] = stem[len(base):].lstrip("_") or "baseline"
+        reports.append(r)
+    reports.sort(key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9),
+                                r["mesh"], r["_variant"]))
+    print("| arch | shape | mesh | compute_s | memory_s | collective_s "
+          "| bound | MFU bound | useful | memory note |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in reports:
+        if variant_filter == "baseline" and r["_variant"] != "baseline":
+            continue
+        if variant_filter == "variants" and r["_variant"] == "baseline":
+            continue
+        line = fmt(r)
+        if variant_filter == "variants":
+            line = line.replace(f"| {r['arch']} |",
+                                f"| {r['arch']} ({r['_variant']}) |", 1)
+        print(line)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else None)

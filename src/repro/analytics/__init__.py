@@ -1,0 +1,15 @@
+"""In-memory analytics engine: the paper's five workloads in JAX.
+
+W1 holistic aggregation (median)      aggregate.median_direct / dist_median
+W2 distributive aggregation (count)   aggregate.count_* / dist_count
+W3 hash join                          join.hash_join / dist_hash_join
+W4 index nested-loop join             join.index_join (radix/sorted/hash)
+W5 TPC-H                              tpch.run_query (q1, q3, q5, q6, q18)
+"""
+from repro.analytics import datasets
+from repro.analytics.aggregate import (count_direct, count_partitioned,
+                                       median_direct)
+from repro.analytics.engine import dist_count, dist_hash_join, dist_median
+from repro.analytics.join import hash_join, index_join
+from repro.analytics.tpch import generate as tpch_generate
+from repro.analytics.tpch import run_query as tpch_run_query

@@ -1,0 +1,103 @@
+"""W1 (holistic MEDIAN) and W2 (distributive COUNT) aggregation operators.
+
+Two implementations per operator:
+  *_direct       XLA-native (segment ops / sort) — oracle + small inputs.
+  *_partitioned  the TPU-optimized pipeline: radix partition (Pallas
+                 histogram) -> dense partition layout -> partition-local
+                 kernel (hash_aggregate) or sort. This mirrors the paper's
+                 state-of-the-art CPU pipeline (partition -> per-thread
+                 table) with VMEM playing the role of the per-thread cache.
+
+Holistic aggregation cannot be computed from partials (paper Section 2) —
+median requires all of a group's values co-located; the sort-based
+formulation is the TPU-idiomatic equivalent of the paper's per-group
+vectors (documented adaptation, DESIGN.md Section 8).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analytics.hashing import pad_partitions, partition_of
+from repro.kernels.hash_aggregate import hash_aggregate
+from repro.kernels.radix_partition import radix_partition
+
+
+# ---------------------------------------------------------------------------
+# W2: distributive COUNT
+# ---------------------------------------------------------------------------
+def count_direct(keys: jax.Array, cardinality: int) -> jax.Array:
+    """SELECT groupkey, COUNT(*) GROUP BY groupkey — XLA segment sum."""
+    return jax.ops.segment_sum(jnp.ones_like(keys, jnp.float32), keys,
+                               num_segments=cardinality)
+
+
+@functools.partial(jax.jit, static_argnames=("cardinality", "n_partitions",
+                                             "capacity_factor", "mode"))
+def count_partitioned(keys: jax.Array, cardinality: int, *,
+                      n_partitions: int = 64, capacity_factor: float = 2.0,
+                      mode: Optional[str] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Partitioned COUNT via range partitioning + the hash_aggregate kernel.
+
+    Range partitioning on dense group ids makes the partition-local slot
+    (key % range) collision-free — the kernel result is EXACT whenever no
+    partition overflows its capacity (overflow is returned, never dropped
+    silently). Returns (counts (cardinality,), overflow)."""
+    N = keys.shape[0]
+    range_size = -(-cardinality // n_partitions)          # ceil
+    bins = max(128, -(-range_size // 128) * 128)          # kernel lane pad
+    part = jnp.clip(keys // range_size, 0, n_partitions - 1)
+    order = jnp.argsort(part, stable=True)
+    sk = keys[order]
+    counts_p = jnp.bincount(part, length=n_partitions)
+    starts = jnp.cumsum(counts_p) - counts_p
+    pad_t = int(max(256, -(-int(N // n_partitions * capacity_factor) // 256) * 256))
+    pk, _, overflow = pad_partitions(sk, jnp.ones_like(sk, jnp.float32),
+                                     starts, counts_p, n_partitions, pad_t)
+    local = jnp.where(pk < 0, bins - 1, pk % range_size)  # padding -> dead bin
+    vals = jnp.where(pk < 0, 0.0, 1.0)
+    table = hash_aggregate(local, vals, n_bins=bins, mode=mode)  # (P, bins)
+    flat = table[:, :range_size].reshape(-1)[:cardinality]
+    # padding records landed in bins-1 which lies outside range_size unless
+    # range_size == bins; mask that corner case exactly:
+    if range_size == bins:
+        pad_per_part = (pad_t - jnp.minimum(counts_p, pad_t)).astype(jnp.float32)
+        flat = flat - jnp.zeros_like(flat).at[
+            jnp.arange(n_partitions) * range_size + (bins - 1)
+        ].add(pad_per_part)[:cardinality]
+    return flat, overflow
+
+
+# ---------------------------------------------------------------------------
+# W1: holistic MEDIAN
+# ---------------------------------------------------------------------------
+def median_direct(keys: jax.Array, vals: jax.Array,
+                  cardinality: int) -> jax.Array:
+    """SELECT groupkey, MEDIAN(val) GROUP BY groupkey.
+
+    Sort by (key, val) — stable two-pass sort — then pick the middle
+    element(s) of each group run. Empty groups return NaN."""
+    order_v = jnp.argsort(vals, stable=True)
+    k1, v1 = keys[order_v], vals[order_v]
+    order_k = jnp.argsort(k1, stable=True)
+    sk, sv = k1[order_k], v1[order_k]
+    counts = jax.ops.segment_sum(jnp.ones_like(keys, jnp.float32), keys,
+                                 num_segments=cardinality)
+    starts = jnp.cumsum(counts) - counts
+    c = counts.astype(jnp.int32)
+    s = starts.astype(jnp.int32)
+    lo = s + jnp.maximum((c - 1) // 2, 0)
+    hi = s + jnp.maximum(c // 2, 0)
+    lo = jnp.clip(lo, 0, sv.shape[0] - 1)
+    hi = jnp.clip(hi, 0, sv.shape[0] - 1)
+    med = (sv[lo] + sv[hi]) * 0.5
+    return jnp.where(c > 0, med, jnp.nan)
+
+
+@functools.partial(jax.jit, static_argnames=("cardinality",))
+def median_jit(keys: jax.Array, vals: jax.Array, cardinality: int) -> jax.Array:
+    return median_direct(keys, vals, cardinality)

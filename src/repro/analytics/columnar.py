@@ -1,0 +1,94 @@
+"""Mini columnar query executor (the W5 "database system" layer).
+
+A Table is a struct-of-arrays with static length; selection is mask-based
+(TPU-friendly: no compaction, predicates become aggregation weights), joins
+are PK-FK gathers through a sorted index, and aggregations are masked
+segment ops. The executor runs the TPC-H-style queries in tpch.py under the
+same placement/allocator knobs as everything else.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class Table:
+    columns: Dict[str, jax.Array]
+    mask: Optional[jax.Array] = None     # float32 selection weights (None = 1)
+
+    def __post_init__(self):
+        lens = {c.shape[0] for c in self.columns.values()}
+        if len(lens) != 1:
+            raise ValueError(f"ragged table: {lens}")
+
+    @property
+    def n_rows(self) -> int:
+        return next(iter(self.columns.values())).shape[0]
+
+    def col(self, name: str) -> jax.Array:
+        return self.columns[name]
+
+    def weights(self) -> jax.Array:
+        if self.mask is None:
+            return jnp.ones((self.n_rows,), jnp.float32)
+        return self.mask
+
+    def filter(self, pred: jax.Array) -> "Table":
+        """AND a predicate into the selection mask (no data movement)."""
+        w = self.weights() * pred.astype(jnp.float32)
+        return Table(self.columns, w)
+
+    def with_columns(self, **cols: jax.Array) -> "Table":
+        merged = dict(self.columns)
+        merged.update(cols)
+        return Table(merged, self.mask)
+
+
+def pkfk_join(fact: Table, dim: Table, fact_key: str, dim_key: str,
+              take: Mapping[str, str]) -> Table:
+    """Gather dim columns into the fact table through the PK (sorted index).
+
+    ``take`` maps new-column-name -> dim-column-name. Misses zero the mask.
+    """
+    dk = dim.col(dim_key)
+    order = jnp.argsort(dk)
+    sk = dk[order]
+    pos = jnp.clip(jnp.searchsorted(sk, fact.col(fact_key)), 0, sk.shape[0] - 1)
+    found = sk[pos] == fact.col(fact_key)
+    dim_w = dim.weights()[order][pos]
+    new_cols = {new: dim.col(src)[order][pos] for new, src in take.items()}
+    out = fact.with_columns(**new_cols)
+    return Table(out.columns, out.weights() * found.astype(jnp.float32) * dim_w)
+
+
+def group_aggregate(table: Table, key: str, n_groups: int,
+                    aggs: Mapping[str, Tuple[str, str]]) -> Dict[str, jax.Array]:
+    """aggs: out_name -> (op, column); op in {sum, count, avg, max, min}.
+    Masked rows contribute nothing. Returns dict of (n_groups,) arrays."""
+    keys = jnp.clip(table.col(key), 0, n_groups - 1)
+    w = table.weights()
+    out: Dict[str, jax.Array] = {}
+    cnt = jax.ops.segment_sum(w, keys, num_segments=n_groups)
+    for name, (op, col) in aggs.items():
+        if op == "count":
+            out[name] = cnt
+            continue
+        v = table.col(col).astype(jnp.float32)
+        if op in ("sum", "avg"):
+            s = jax.ops.segment_sum(v * w, keys, num_segments=n_groups)
+            out[name] = s if op == "sum" else s / jnp.maximum(cnt, 1.0)
+        elif op == "max":
+            big = jnp.where(w > 0, v, -jnp.inf)
+            out[name] = jax.ops.segment_max(big, keys, num_segments=n_groups)
+        elif op == "min":
+            small = jnp.where(w > 0, v, jnp.inf)
+            out[name] = jax.ops.segment_min(small, keys, num_segments=n_groups)
+        else:
+            raise ValueError(f"unknown agg op {op!r}")
+    out["_count"] = cnt
+    return out

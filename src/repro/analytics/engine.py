@@ -1,0 +1,240 @@
+"""Distributed analytics operators under the paper's placement policies.
+
+This is the reproduction's centerpiece: the SAME logical query (W1/W2/W3)
+executes under each memory placement policy (paper Section 3.3), and the
+policies change only the *placement/communication plan*, never the query
+code — the paper's application-agnostic thesis, realized as shard_map plans:
+
+  FIRST_TOUCH  every shard aggregates into its own FULL-width table
+               (the node that first touches a group owns a whole copy);
+               merge = all-reduce over the table. Memory O(G)/shard,
+               collective O(G * n) wire bytes. The OS-default analogue.
+  LOCAL_ALLOC  same local tables, but the merge is a reduce-scatter: each
+               shard ends up owning G/n of the result where its output
+               "allocation" lives. Half the wire bytes of FIRST_TOUCH.
+  INTERLEAVE   the table is bucket-interleaved across shards up front;
+               records are routed to their owning shard (all-to-all of the
+               DATA, O(N) wire bytes, independent of G) and aggregated once.
+               Memory O(G/n)/shard. The paper's winner for shared state.
+  PREFERRED    all records converge on one submesh slice (all-gather);
+               models the paper's Preferred-x + its congestion.
+
+For HOLISTIC aggregation (W1, median) partials cannot be merged, so
+FIRST_TOUCH/LOCAL_ALLOC degrade to full record replication (all-gather of
+data) — reproducing the paper's observation that holistic functions are the
+memory system's worst case — while INTERLEAVE routes each group's records
+to one owner and sorts locally.
+
+The AutoNUMA analogue (`auto_rebalance`) appends a policy-ideal resharding
+of the result state after the query — pure extra collective traffic when
+the plan was already local (paper Fig 5a), a rescue when the plan was
+PREFERRED.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.config import PlacementPolicy
+
+
+# ---------------------------------------------------------------------------
+# record routing (the all-to-all building block of INTERLEAVE)
+# ---------------------------------------------------------------------------
+def route_records(keys: jax.Array, vals: jax.Array, n_shards: int,
+                  owner: jax.Array, capacity: int
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Bucket local records by owning shard into a dense (n, capacity) send
+    layout. Returns (keys_out, vals_out, overflow). Padding key = -1."""
+    order = jnp.argsort(owner, stable=True)
+    sk, sv, so = keys[order], vals[order], owner[order]
+    counts = jnp.bincount(owner, length=n_shards)
+    starts = jnp.cumsum(counts) - counts
+    idx = starts[:, None] + jnp.arange(capacity)[None, :]
+    valid = jnp.arange(capacity)[None, :] < jnp.minimum(counts, capacity)[:, None]
+    idx = jnp.clip(idx, 0, keys.shape[0] - 1)
+    k_out = jnp.where(valid, sk[idx], -1)
+    v_out = jnp.where(valid, sv[idx], 0)
+    overflow = jnp.maximum(counts - capacity, 0).sum()
+    return k_out, v_out, overflow
+
+
+# ---------------------------------------------------------------------------
+# W2: distributive COUNT under each policy
+# ---------------------------------------------------------------------------
+def dist_count(mesh: Mesh, policy: PlacementPolicy, cardinality: int, *,
+               axis: str = "data", capacity_factor: float = 2.0,
+               auto_rebalance: bool = False) -> Callable:
+    """Build the policy's distributed COUNT plan.
+
+    Returns fn(keys (N,) sharded over ``axis``) -> counts.
+    Output ownership differs by policy (documented per branch)."""
+    n = mesh.shape[axis]
+    G = cardinality
+
+    def first_touch(keys):
+        local = jax.ops.segment_sum(jnp.ones_like(keys, jnp.float32),
+                                    keys, num_segments=G)
+        merged = jax.lax.psum(local, axis)              # all-reduce O(G*n)
+        if auto_rebalance:  # AutoNUMA: reshard toward interleave post hoc
+            merged = _rebalance_to_interleave(merged, n, axis)
+        return merged
+
+    def local_alloc(keys):
+        local = jax.ops.segment_sum(jnp.ones_like(keys, jnp.float32),
+                                    keys, num_segments=G)
+        return jax.lax.psum_scatter(local, axis, scatter_dimension=0,
+                                    tiled=True)          # reduce-scatter
+
+    def interleave(keys):
+        owner = keys % n                                 # bucket-interleaved
+        cap = int(capacity_factor * keys.shape[0] / n)
+        cap = max(128, -(-cap // 128) * 128)
+        k_out, v_out, ovf = route_records(
+            keys, jnp.ones_like(keys, jnp.float32), n, owner, cap)
+        k_in = jax.lax.all_to_all(k_out, axis, split_axis=0, concat_axis=0,
+                                  tiled=True)
+        v_in = jax.lax.all_to_all(v_out, axis, split_axis=0, concat_axis=0,
+                                  tiled=True)
+        # owned group g maps to local slot g // n  (keys % n == my index)
+        slot = jnp.where(k_in >= 0, k_in // n, G // n)   # OOB drop slot
+        local = jax.ops.segment_sum(jnp.where(k_in >= 0, v_in, 0.0).reshape(-1),
+                                    slot.reshape(-1),
+                                    num_segments=G // n + 1)[:G // n]
+        return local                                     # shard owns G/n rows
+
+    def preferred(keys):
+        all_keys = jax.lax.all_gather(keys, axis, tiled=True)  # O(N*n) wire
+        return jax.ops.segment_sum(jnp.ones_like(all_keys, jnp.float32),
+                                   all_keys, num_segments=G)
+
+    fns = {PlacementPolicy.FIRST_TOUCH: (first_touch, P(None)),
+           PlacementPolicy.LOCAL_ALLOC: (local_alloc, P(axis)),
+           PlacementPolicy.INTERLEAVE: (interleave, P(axis)),
+           PlacementPolicy.PREFERRED: (preferred, P(None))}
+    fn, out_spec = fns[policy]
+    return shard_map(fn, mesh=mesh, in_specs=P(axis), out_specs=out_spec,
+                     check_rep=False)
+
+
+def _rebalance_to_interleave(table: jax.Array, n: int, axis: str) -> jax.Array:
+    """AutoNUMA analogue: migrate a replicated table toward interleaved
+    ownership — pure extra collective traffic on an already-merged result."""
+    shard = jax.lax.psum_scatter(table, axis, scatter_dimension=0, tiled=True)
+    return jax.lax.all_gather(shard, axis, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# W1: holistic MEDIAN under each policy
+# ---------------------------------------------------------------------------
+def dist_median(mesh: Mesh, policy: PlacementPolicy, cardinality: int, *,
+                axis: str = "data", capacity_factor: float = 2.0) -> Callable:
+    """fn(keys, vals) -> per-group medians (ownership per policy)."""
+    n = mesh.shape[axis]
+    G = cardinality
+
+    def _local_median(keys, vals, n_groups):
+        order_v = jnp.argsort(vals, stable=True)
+        k1, v1 = keys[order_v], vals[order_v]
+        order_k = jnp.argsort(k1, stable=True)
+        sk, sv = k1[order_k], v1[order_k]
+        counts = jax.ops.segment_sum(
+            jnp.ones_like(keys, jnp.float32),
+            jnp.clip(keys, 0, n_groups - 1), num_segments=n_groups)
+        # discard padding records (key < 0) from counts
+        pad = jax.ops.segment_sum(
+            jnp.where(keys < 0, 1.0, 0.0),
+            jnp.zeros_like(keys), num_segments=n_groups)
+        counts = counts - pad  # padding clipped to group 0
+        starts = jnp.cumsum(counts) - counts
+        # padded records sorted first (key -1): shift starts by total pad
+        starts = starts + pad[0]
+        c, s = counts.astype(jnp.int32), starts.astype(jnp.int32)
+        lo = jnp.clip(s + jnp.maximum((c - 1) // 2, 0), 0, sv.shape[0] - 1)
+        hi = jnp.clip(s + jnp.maximum(c // 2, 0), 0, sv.shape[0] - 1)
+        med = (sv[lo] + sv[hi]) * 0.5
+        return jnp.where(c > 0, med, jnp.nan)
+
+    def replicate_all(keys, vals):                       # FT / LOCAL / PREF
+        ak = jax.lax.all_gather(keys, axis, tiled=True)
+        av = jax.lax.all_gather(vals, axis, tiled=True)
+        return _local_median(ak, av, G)
+
+    def interleave(keys, vals):
+        owner = keys % n
+        cap = int(capacity_factor * keys.shape[0] / n)
+        cap = max(128, -(-cap // 128) * 128)
+        k_out, v_out, _ = route_records(keys, vals, n, owner, cap)
+        k_in = jax.lax.all_to_all(k_out, axis, 0, 0, tiled=True)
+        v_in = jax.lax.all_to_all(v_out, axis, 0, 0, tiled=True)
+        local_ids = jnp.where(k_in >= 0, k_in // n, -1).reshape(-1)
+        return _local_median(local_ids, v_in.reshape(-1), G // n)
+
+    if policy == PlacementPolicy.INTERLEAVE:
+        fn, out_spec = interleave, P(axis)
+    else:
+        fn, out_spec = replicate_all, P(None)
+    return shard_map(fn, mesh=mesh, in_specs=(P(axis), P(axis)),
+                     out_specs=out_spec, check_rep=False)
+
+
+# ---------------------------------------------------------------------------
+# W3: hash join under each policy
+# ---------------------------------------------------------------------------
+def dist_hash_join(mesh: Mesh, policy: PlacementPolicy, *,
+                   axis: str = "data", capacity_factor: float = 2.0) -> Callable:
+    """fn(build_keys, build_vals, probe_keys) -> (count, checksum).
+
+    FIRST_TOUCH / LOCAL_ALLOC: broadcast join — the build side is
+    all-gathered (replicated, as a first-touching shard would fault it in),
+    probes stay local. INTERLEAVE: both sides routed by key hash
+    (partitioned join). PREFERRED: everything gathered (worst case)."""
+    n = mesh.shape[axis]
+
+    def _local_join(bk, bv, pk):
+        order = jnp.argsort(bk)
+        sk, sv = bk[order], bv[order]
+        pos = jnp.clip(jnp.searchsorted(sk, pk), 0, sk.shape[0] - 1)
+        found = (sk[pos] == pk) & (pk >= 0)
+        vals = jnp.where(found, sv[pos], 0.0)
+        return found.sum(), vals.sum()
+
+    def broadcast(bk, bv, pk):
+        abk = jax.lax.all_gather(bk, axis, tiled=True)
+        abv = jax.lax.all_gather(bv, axis, tiled=True)
+        c, s = _local_join(abk, abv, pk)
+        return jax.lax.psum(c, axis), jax.lax.psum(s, axis)
+
+    def interleave(bk, bv, pk):
+        cap_b = max(128, -(-int(capacity_factor * bk.shape[0] / n) // 128) * 128)
+        cap_p = max(128, -(-int(capacity_factor * pk.shape[0] / n) // 128) * 128)
+        owner_b = (bk % n).astype(jnp.int32)
+        owner_p = (pk % n).astype(jnp.int32)
+        kb, vb, _ = route_records(bk, bv, n, owner_b, cap_b)
+        kp, _, _ = route_records(pk, jnp.ones_like(pk, jnp.float32), n,
+                                 owner_p, cap_p)
+        kb = jax.lax.all_to_all(kb, axis, 0, 0, tiled=True).reshape(-1)
+        vb = jax.lax.all_to_all(vb, axis, 0, 0, tiled=True).reshape(-1)
+        kp = jax.lax.all_to_all(kp, axis, 0, 0, tiled=True).reshape(-1)
+        kb = jnp.where(kb < 0, -1, kb)
+        c, s = _local_join(kb, vb, kp)
+        return jax.lax.psum(c, axis), jax.lax.psum(s, axis)
+
+    def preferred(bk, bv, pk):
+        abk = jax.lax.all_gather(bk, axis, tiled=True)
+        abv = jax.lax.all_gather(bv, axis, tiled=True)
+        apk = jax.lax.all_gather(pk, axis, tiled=True)
+        return _local_join(abk, abv, apk)
+
+    fn = {PlacementPolicy.FIRST_TOUCH: broadcast,
+          PlacementPolicy.LOCAL_ALLOC: broadcast,
+          PlacementPolicy.INTERLEAVE: interleave,
+          PlacementPolicy.PREFERRED: preferred}[policy]
+    return shard_map(fn, mesh=mesh,
+                     in_specs=(P(axis), P(axis), P(axis)),
+                     out_specs=(P(), P()), check_rep=False)

@@ -1,0 +1,176 @@
+"""TPC-H-style workload (W5): generated tables + five representative queries.
+
+Structure-faithful versions of Q1, Q3, Q5, Q6, Q18 (the join/aggregation
+queries the paper highlights — Q5 and Q18 are its allocator case studies)
+over synthetic tables at a scale factor: lineitem 6000*SF rows, orders
+1500*SF, customer 150*SF, supplier 10*SF, nation 25, region 5. Dates are
+day-number ints; strings are dictionary-encoded ints — the standard columnar
+executor treatment.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analytics.columnar import Table, group_aggregate, pkfk_join
+
+N_NATION, N_REGION = 25, 5
+N_SEGMENTS = 5
+DATE0, DATE1 = 0, 2557            # ~7 years of day numbers
+
+
+@dataclass(frozen=True)
+class TPCHData:
+    tables: Dict[str, Dict[str, np.ndarray]]
+    scale: float
+
+    def table(self, name: str) -> Table:
+        return Table({k: jnp.asarray(v) for k, v in self.tables[name].items()})
+
+
+def generate(scale: float = 0.01, seed: int = 0) -> TPCHData:
+    rng = np.random.RandomState(seed)
+    n_li = max(1000, int(6_000_000 * scale))
+    n_ord = max(250, int(1_500_000 * scale))
+    n_cust = max(64, int(150_000 * scale))
+    n_supp = max(16, int(10_000 * scale))
+
+    nation = {
+        "n_nationkey": np.arange(N_NATION, dtype=np.int32),
+        "n_regionkey": rng.randint(0, N_REGION, N_NATION).astype(np.int32),
+    }
+    customer = {
+        "c_custkey": np.arange(n_cust, dtype=np.int32),
+        "c_nationkey": rng.randint(0, N_NATION, n_cust).astype(np.int32),
+        "c_mktsegment": rng.randint(0, N_SEGMENTS, n_cust).astype(np.int32),
+    }
+    supplier = {
+        "s_suppkey": np.arange(n_supp, dtype=np.int32),
+        "s_nationkey": rng.randint(0, N_NATION, n_supp).astype(np.int32),
+    }
+    orders = {
+        "o_orderkey": np.arange(n_ord, dtype=np.int32),
+        "o_custkey": rng.randint(0, n_cust, n_ord).astype(np.int32),
+        "o_orderdate": rng.randint(DATE0, DATE1, n_ord).astype(np.int32),
+    }
+    lineitem = {
+        "l_orderkey": rng.randint(0, n_ord, n_li).astype(np.int32),
+        "l_suppkey": rng.randint(0, n_supp, n_li).astype(np.int32),
+        "l_quantity": rng.randint(1, 51, n_li).astype(np.float32),
+        "l_extendedprice": (rng.rand(n_li) * 1e4).astype(np.float32),
+        "l_discount": (rng.randint(0, 11, n_li) / 100).astype(np.float32),
+        "l_tax": (rng.randint(0, 9, n_li) / 100).astype(np.float32),
+        "l_returnflag": rng.randint(0, 3, n_li).astype(np.int32),
+        "l_linestatus": rng.randint(0, 2, n_li).astype(np.int32),
+        "l_shipdate": rng.randint(DATE0, DATE1, n_li).astype(np.int32),
+    }
+    return TPCHData({"nation": nation, "customer": customer,
+                     "supplier": supplier, "orders": orders,
+                     "lineitem": lineitem}, scale)
+
+
+# ---------------------------------------------------------------------------
+# queries (each returns a dict of result arrays; jit-compiled)
+# ---------------------------------------------------------------------------
+def q1(data: TPCHData, cutoff: int = DATE1 - 90) -> Dict[str, jax.Array]:
+    """Pricing summary: filter shipdate, group by (returnflag, linestatus)."""
+    li = data.table("lineitem").filter(
+        data.table("lineitem").col("l_shipdate") <= cutoff)
+    g = li.col("l_returnflag") * 2 + li.col("l_linestatus")
+    li = li.with_columns(
+        _g=g,
+        _disc_price=li.col("l_extendedprice") * (1 - li.col("l_discount")),
+    )
+    li = li.with_columns(_charge=li.col("_disc_price") * (1 + li.col("l_tax")))
+    return group_aggregate(li, "_g", 6, {
+        "sum_qty": ("sum", "l_quantity"),
+        "sum_base_price": ("sum", "l_extendedprice"),
+        "sum_disc_price": ("sum", "_disc_price"),
+        "sum_charge": ("sum", "_charge"),
+        "avg_qty": ("avg", "l_quantity"),
+        "avg_price": ("avg", "l_extendedprice"),
+        "count_order": ("count", "l_quantity"),
+    })
+
+
+def q3(data: TPCHData, segment: int = 1,
+       date: int = DATE1 // 2) -> Dict[str, jax.Array]:
+    """Shipping priority: cust ⋈ orders ⋈ lineitem, top-10 revenue orders."""
+    cust = data.table("customer")
+    cust = cust.filter(cust.col("c_mktsegment") == segment)
+    orders = data.table("orders")
+    orders = orders.filter(orders.col("o_orderdate") < date)
+    o = pkfk_join(orders, cust, "o_custkey", "c_custkey", {})
+    li = data.table("lineitem")
+    li = li.filter(li.col("l_shipdate") > date)
+    li = pkfk_join(li, o, "l_orderkey", "o_orderkey", {})
+    li = li.with_columns(
+        _rev=li.col("l_extendedprice") * (1 - li.col("l_discount")))
+    n_ord = data.tables["orders"]["o_orderkey"].shape[0]
+    agg = group_aggregate(li, "l_orderkey", n_ord, {"revenue": ("sum", "_rev")})
+    top_rev, top_keys = jax.lax.top_k(agg["revenue"], 10)
+    return {"revenue": top_rev, "o_orderkey": top_keys}
+
+
+def q5(data: TPCHData, region: int = 2, date_lo: int = 0,
+       date_hi: int = 365) -> Dict[str, jax.Array]:
+    """Local supplier volume: 5-way join, group by nation."""
+    nation = data.table("nation")
+    nation = nation.filter(nation.col("n_regionkey") == region)
+    cust = pkfk_join(data.table("customer"), nation, "c_nationkey",
+                     "n_nationkey", {})
+    orders = data.table("orders")
+    orders = orders.filter((orders.col("o_orderdate") >= date_lo)
+                           & (orders.col("o_orderdate") < date_hi))
+    o = pkfk_join(orders, cust, "o_custkey", "c_custkey",
+                  {"_c_nation": "c_nationkey"})
+    li = pkfk_join(data.table("lineitem"), o, "l_orderkey", "o_orderkey",
+                   {"_c_nation": "_c_nation"})
+    li = pkfk_join(li, data.table("supplier"), "l_suppkey", "s_suppkey",
+                   {"_s_nation": "s_nationkey"})
+    # local: supplier nation == customer nation
+    li = li.filter(li.col("_s_nation") == li.col("_c_nation"))
+    li = li.with_columns(
+        _rev=li.col("l_extendedprice") * (1 - li.col("l_discount")))
+    return group_aggregate(li, "_s_nation", N_NATION,
+                           {"revenue": ("sum", "_rev")})
+
+
+def q6(data: TPCHData, date_lo: int = 0, date_hi: int = 365,
+       disc: float = 0.06, qty: float = 24.0) -> Dict[str, jax.Array]:
+    """Forecast revenue change: pure filter + scalar aggregate."""
+    li = data.table("lineitem")
+    pred = ((li.col("l_shipdate") >= date_lo) & (li.col("l_shipdate") < date_hi)
+            & (jnp.abs(li.col("l_discount") - disc) <= 0.011)
+            & (li.col("l_quantity") < qty))
+    li = li.filter(pred)
+    w = li.weights()
+    rev = (li.col("l_extendedprice") * li.col("l_discount") * w).sum()
+    return {"revenue": rev[None]}
+
+
+def q18(data: TPCHData, qty_threshold: float = 212.0) -> Dict[str, jax.Array]:
+    """Large volume customer: big group-by on orderkey, HAVING, re-join."""
+    li = data.table("lineitem")
+    n_ord = data.tables["orders"]["o_orderkey"].shape[0]
+    per_order = group_aggregate(li, "l_orderkey", n_ord,
+                                {"qty": ("sum", "l_quantity")})
+    big = per_order["qty"] > qty_threshold
+    orders = data.table("orders").with_columns(_qty=per_order["qty"])
+    orders = Table(orders.columns, big.astype(jnp.float32))
+    o = pkfk_join(orders, data.table("customer"), "o_custkey", "c_custkey",
+                  {"_nat": "c_nationkey"})
+    n_cust = data.tables["customer"]["c_custkey"].shape[0]
+    return group_aggregate(o, "o_custkey", n_cust, {"qty": ("sum", "_qty")})
+
+
+QUERIES = {"q1": q1, "q3": q3, "q5": q5, "q6": q6, "q18": q18}
+
+
+def run_query(name: str, data: TPCHData) -> Dict[str, jax.Array]:
+    return jax.jit(lambda: QUERIES[name](data))()

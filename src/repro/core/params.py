@@ -1,0 +1,152 @@
+"""Parameter schema system: declare-then-materialize parameters.
+
+Models build a nested dict *schema* of ``ParamDef`` leaves (pure shape math —
+no device memory). The schema supports three materializations:
+
+  * ``abstract_params``  -> ShapeDtypeStruct tree (dry-run lowering; this is
+                            how 671B-parameter configs are lowered on a CPU
+                            container without allocating anything)
+  * ``init_params``      -> real arrays (smoke tests / examples, reduced dims)
+  * ``axes_tree/shapes_tree`` -> logical-axes and shape trees consumed by
+                            core.partitioning to derive PartitionSpecs
+
+Keys are split deterministically by folding the hash of the parameter path
+into the root key, so parameter values are stable under schema reordering.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | scaled | uniform
+    scale: Optional[float] = None  # stddev; default 1/sqrt(fan_in) for scaled
+    dtype: Optional[str] = None    # per-param dtype override
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"shape {self.shape} and axes {self.axes} rank mismatch")
+
+
+def pdef(shape: Sequence[int], axes: Sequence[Optional[str]],
+         init: str = "normal", scale: Optional[float] = None,
+         dtype: Optional[str] = None) -> ParamDef:
+    return ParamDef(tuple(int(s) for s in shape), tuple(axes), init, scale,
+                    dtype)
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _iter_items(schema: Dict[str, Any], prefix: str = ""):
+    for k in sorted(schema):
+        v = schema[k]
+        path = f"{prefix}/{k}" if prefix else k
+        if is_def(v):
+            yield path, v
+        elif isinstance(v, dict):
+            yield from _iter_items(v, path)
+        else:
+            raise TypeError(f"schema leaf {path} has type {type(v)}")
+
+
+def _path_key(root: jax.Array, path: str) -> jax.Array:
+    digest = hashlib.sha256(path.encode()).digest()
+    return jax.random.fold_in(root, int.from_bytes(digest[:4], "little"))
+
+
+def _materialize(d: ParamDef, key: jax.Array, dtype: Any) -> jax.Array:
+    out_dtype = jnp.dtype(d.dtype or dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, out_dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, out_dtype)
+    if d.init == "uniform":
+        scale = d.scale if d.scale is not None else 1.0
+        return jax.random.uniform(key, d.shape, jnp.float32,
+                                  -scale, scale).astype(out_dtype)
+    if d.init == "scaled":
+        # conservative fan-in: product of all non-output dims (never
+        # over-scales, even for stacked/3D projection tensors)
+        fan_in = 1
+        for s in d.shape[:-1]:
+            fan_in *= s
+        scale = d.scale if d.scale is not None else float(np.sqrt(1.0 / max(1, fan_in)))
+        return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(out_dtype)
+    # default: normal
+    scale = d.scale if d.scale is not None else 0.02
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(out_dtype)
+
+
+def init_params(schema: Dict[str, Any], key: jax.Array,
+                dtype: Any = jnp.bfloat16) -> Dict[str, Any]:
+    """Materialize real parameter arrays (smoke tests / small runs)."""
+    def build(node: Dict[str, Any], prefix: str) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        for k in sorted(node):
+            v = node[k]
+            path = f"{prefix}/{k}" if prefix else k
+            if is_def(v):
+                out[k] = _materialize(v, _path_key(key, path), dtype)
+            else:
+                out[k] = build(v, path)
+        return out
+    return build(schema, "")
+
+
+def abstract_params(schema: Dict[str, Any],
+                    dtype: Any = jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree — zero allocation, for .lower() dry-runs."""
+    def build(node):
+        out = {}
+        for k, v in node.items():
+            if is_def(v):
+                out[k] = jax.ShapeDtypeStruct(v.shape, jnp.dtype(v.dtype or dtype))
+            else:
+                out[k] = build(v)
+        return out
+    return build(schema)
+
+
+def axes_tree(schema: Dict[str, Any]) -> Dict[str, Any]:
+    def build(node):
+        return {k: (v.axes if is_def(v) else build(v)) for k, v in node.items()}
+    return build(schema)
+
+
+def shapes_tree(schema: Dict[str, Any]) -> Dict[str, Any]:
+    def build(node):
+        return {k: (v.shape if is_def(v) else build(v)) for k, v in node.items()}
+    return build(schema)
+
+
+def param_count(schema: Dict[str, Any]) -> int:
+    total = 0
+    for _, d in _iter_items(schema):
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+    return total
+
+
+def param_bytes(schema: Dict[str, Any], default_bytes: int = 2) -> int:
+    total = 0
+    for _, d in _iter_items(schema):
+        n = 1
+        for s in d.shape:
+            n *= s
+        itemsize = jnp.dtype(d.dtype).itemsize if d.dtype else default_bytes
+        total += n * itemsize
+    return total

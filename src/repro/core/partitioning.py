@@ -1,0 +1,192 @@
+"""Logical-axis partitioning engine (t5x-style) + placement policies.
+
+Models annotate every parameter with *logical* axis names (("vocab","embed"),
+("heads","head_dim","embed"), ...). This module maps logical axes onto mesh
+axes through a rule table, applies the NUMA placement policy to *state*
+arrays (optimizer moments, caches, shared tables), and provides the padding
+helpers that keep every dimension divisible by its mesh axis.
+
+The placement policies are the heart of the reproduction (paper Section 3.3):
+
+  FIRST_TOUCH  state inherits the producing computation's sharding and is
+               replicated along the data axes — each data-parallel group
+               "first-touches" its own copy. Default-OS analogue.
+  INTERLEAVE   state is additionally sharded round-robin over the data axes
+               (ZeRO-1 for optimizer state; bucket-interleave for tables).
+  LOCAL_ALLOC  per-shard private state (no cross-shard sharing).
+  PREFERRED    pinned to one submesh slice. XLA SPMD cannot express "resident
+               on slice x" inside one mesh, so PREFERRED lowers as replicated
+               and its true cost (capacity pressure on x, remote access from
+               everyone else) is priced by core.topology + the memory ledger.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.config import PlacementPolicy
+
+# ---------------------------------------------------------------------------
+# Logical-axis rules
+# ---------------------------------------------------------------------------
+# Default rule table for the production mesh ("pod", "data", "model").
+# None -> replicated along that logical axis.
+DEFAULT_RULES: Dict[str, Optional[Any]] = {
+    # embeddings / projections
+    "vocab": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "d_rnn": "model",
+    # MoE
+    "expert": "model",            # overridden to ("data","model") for big EP
+    "expert_ff": None,
+    # MLA latents
+    "q_lora": None,
+    "kv_lora": None,
+    # rwkv
+    "rwkv_heads": "model",
+    "lora": None,
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_sp": "model",            # sequence-parallel residual stream
+    # scan-stacked layer dim
+    "layers": None,
+}
+
+
+def rules_with(overrides: Mapping[str, Any]) -> Dict[str, Any]:
+    rules = dict(DEFAULT_RULES)
+    rules.update(overrides)
+    return rules
+
+
+def _present(mesh: Mesh, axis: Any) -> Optional[Any]:
+    """Drop mesh axes that don't exist (e.g. 'pod' on the single-pod mesh)."""
+    if axis is None:
+        return None
+    if isinstance(axis, (tuple, list)):
+        kept = tuple(a for a in axis if a in mesh.axis_names)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+    return axis if axis in mesh.axis_names else None
+
+
+def spec_for(logical_axes: Sequence[Optional[str]], rules: Mapping[str, Any],
+             mesh: Mesh) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec on ``mesh``."""
+    parts = []
+    used: set = set()
+    for name in logical_axes:
+        axis = _present(mesh, rules.get(name)) if name else None
+        # a mesh axis may appear at most once in a spec
+        if axis is not None:
+            flat = axis if isinstance(axis, tuple) else (axis,)
+            if any(a in used for a in flat):
+                axis = None
+            else:
+                used.update(flat)
+        parts.append(axis)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def axis_size(mesh: Mesh, axis: Any) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def validate_spec(shape: Sequence[int], spec: P, mesh: Mesh) -> P:
+    """Drop sharding on any dim the axis size does not divide (with a
+    preference for keeping the spec; callers pad dims ahead of time)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    fixed = []
+    for dim, axis in zip(shape, parts):
+        size = axis_size(mesh, axis)
+        fixed.append(axis if size > 1 and dim % size == 0 else
+                     (axis if size == 1 else None))
+    while fixed and fixed[-1] is None:
+        fixed.pop()
+    return P(*fixed)
+
+
+# ---------------------------------------------------------------------------
+# Placement policies applied to state arrays
+# ---------------------------------------------------------------------------
+def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def policy_state_spec(policy: PlacementPolicy, base_spec: P,
+                      shape: Sequence[int], mesh: Mesh) -> P:
+    """Sharding for a *state* array whose computation-sharding is base_spec.
+
+    FIRST_TOUCH keeps base_spec. INTERLEAVE additionally spreads the largest
+    unsharded-and-divisible dimension over the data axes (round-robin page
+    interleave analogue / ZeRO-1). LOCAL_ALLOC and PREFERRED lower the same
+    as FIRST_TOUCH / replicated; their semantics live in the cost model.
+    """
+    base_spec = validate_spec(shape, base_spec, mesh)
+    if policy != PlacementPolicy.INTERLEAVE:
+        return base_spec
+    parts = list(base_spec) + [None] * (len(shape) - len(base_spec))
+    used: set = set()
+    for axis in parts:
+        if axis is None:
+            continue
+        for a in (axis if isinstance(axis, tuple) else (axis,)):
+            used.add(a)
+    data_axes = tuple(a for a in _data_axes(mesh) if a not in used)
+    if not data_axes:
+        return base_spec
+    dsize = axis_size(mesh, data_axes)
+    # pick the largest dim that is unsharded and divisible by the data axes
+    best_dim, best_len = -1, 0
+    for i, (dim, axis) in enumerate(zip(shape, parts)):
+        if axis is None and dim % dsize == 0 and dim > best_len:
+            best_dim, best_len = i, dim
+    if best_dim < 0:
+        return base_spec
+    parts[best_dim] = data_axes if len(data_axes) > 1 else data_axes[0]
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+# ---------------------------------------------------------------------------
+# Tree utilities over (schema | params, logical-axes) trees
+# ---------------------------------------------------------------------------
+def tree_specs(axes_tree: Any, rules: Mapping[str, Any], mesh: Mesh,
+               shapes_tree: Any) -> Any:
+    """Build a PartitionSpec tree from logical-axes + shapes trees."""
+    def one(axes, shape):
+        return validate_spec(shape, spec_for(axes, rules, mesh), mesh)
+    return jax.tree.map(one, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        all(isinstance(e, (str, type(None))) for e in x))
+
+
+def tree_shardings(axes_tree: Any, rules: Mapping[str, Any], mesh: Mesh,
+                   shapes_tree: Any) -> Any:
+    specs = tree_specs(axes_tree, rules, mesh, shapes_tree)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

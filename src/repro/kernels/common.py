@@ -1,0 +1,39 @@
+"""Kernel dispatch: TPU Pallas kernel | interpret mode | pure-jnp reference.
+
+The container is CPU-only, so the policy is:
+  * mode="auto":      Pallas on a TPU backend, reference everywhere else
+                      (the dry-run lowers the reference path — its chunked
+                      formulations are shaped to match the kernels' working
+                      sets so memory analysis stays honest).
+  * mode="interpret": run the actual kernel body in the Pallas interpreter
+                      (used by the kernel test suites on CPU).
+  * mode="ref":       force the pure-jnp oracle.
+  * mode="pallas":    force compiled Pallas (TPU only).
+
+Set globally via env REPRO_KERNEL_MODE or per-call with the ``mode`` kwarg.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+_VALID = ("auto", "pallas", "interpret", "ref")
+
+
+def kernel_mode(mode: Optional[str] = None) -> str:
+    mode = mode or os.environ.get("REPRO_KERNEL_MODE", "auto")
+    if mode not in _VALID:
+        raise ValueError(f"kernel mode {mode!r} not in {_VALID}")
+    if mode == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return mode
+
+
+def pick_block(size: int, preferred: int, minimum: int = 8) -> int:
+    """Largest divisor-block <= preferred for a dimension of ``size``."""
+    b = min(preferred, size)
+    while size % b and b > minimum:
+        b -= 1
+    return max(b, 1) if size % max(b, 1) == 0 else size

@@ -1,0 +1,138 @@
+"""Pallas TPU flash-attention forward kernel.
+
+TPU-native adaptation notes (vs the CUDA flash-attention formulation):
+  * tiling is chosen for VMEM (not shared memory/warps): one (block_q, D)
+    query tile and one (block_k, D) K/V tile resident per step, fp32
+    accumulators in VMEM scratch — working set ~ (bq + 2*bk) * D * 2B
+    + bq * D * 4B, sized to sit well under ~16 MB VMEM.
+  * matmul dims aligned to the 128x128 MXU: D is a lane multiple for every
+    assigned arch (64..256); block_q/block_k default to 512.
+  * the softmax running max/denominator live in VMEM scratch carried across
+    the innermost grid dimension (kv blocks) — the Pallas revisiting-output
+    pattern — instead of CUDA's per-warp registers.
+  * causal + local-window blocks that are fully masked are skipped with
+    pl.when (block-level early-out, the TPU version of CUDA block skipping).
+
+Grid: (batch * kv_heads * group, num_q_blocks, num_kv_blocks).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, window: Optional[int],
+               q_offset: int, block_q: int, block_k: int, n_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, m_scr.dtype)
+        l_scr[...] = jnp.zeros(l_scr.shape, l_scr.dtype)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, acc_scr.dtype)
+
+    q_start = q_offset + qi * block_q
+    k_start = ki * block_k
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, D)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        msk = jnp.ones((block_q, block_k), dtype=jnp.bool_)
+        if causal:
+            msk &= kpos <= qpos
+        if window is not None:
+            msk &= kpos > qpos - window
+        s = jnp.where(msk, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(msk, p, 0.0)  # fully-masked rows must not add exp(0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    if causal or window is not None:
+        reachable = jnp.bool_(True)
+        if causal:
+            reachable &= k_start <= q_start + block_q - 1
+        if window is not None:
+            reachable &= k_start + block_k - 1 > q_start - window
+        pl.when(reachable)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _emit():
+        denom = jnp.maximum(l_scr[...], 1e-37)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        q_offset: int = 0, scale: Optional[float] = None,
+                        block_q: int = 512, block_k: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D). Returns (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} must be a multiple of Hkv={Hkv}")
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    bq = max(1, min(block_q, Sq))
+    while Sq % bq:
+        bq //= 2
+    bk = max(1, min(block_k, Skv))
+    while Skv % bk:
+        bk //= 2
+    nq, nk = Sq // bq, Skv // bk
+
+    # heads-major layout; flatten (B, Hkv, G) into the leading grid dim so
+    # consecutive grid rows for one kv head reuse the same streamed K/V
+    qh = jnp.moveaxis(q, 2, 1).reshape(B * Hkv * G, Sq, D)
+    kh = jnp.moveaxis(k, 2, 1).reshape(B * Hkv, Skv, D)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * Hkv, Skv, D)
+
+    grid = (B * Hkv * G, nq, nk)
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, block_q=bq, block_k=bk, n_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, qi, ki, G=G: (h // G, ki, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, qi, ki, G=G: (h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv * G, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return jnp.moveaxis(out.reshape(B, Hq, Sq, D), 1, 2)

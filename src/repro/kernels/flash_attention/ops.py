@@ -1,0 +1,72 @@
+"""Jit'd public attention op with mode dispatch + custom VJP.
+
+Forward: Pallas kernel on TPU (or interpret mode in kernel tests), chunked
+online-softmax jnp elsewhere (CPU lowering / dry-run). Backward: VJP of the
+chunked formulation (recompute-based, memory-bounded) — so training works on
+every backend and the TPU forward kernel is drop-in.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import kernel_mode
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _attention(q, k, v, causal, window, q_offset, scale, mode):
+    resolved = kernel_mode(mode)
+    if resolved == "pallas":
+        return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, scale=scale)
+    if resolved == "interpret":
+        return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, scale=scale,
+                                   interpret=True)
+    return ref.attention_chunked(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset, scale=scale)
+
+
+def _attention_fwd(q, k, v, causal, window, q_offset, scale, mode):
+    out = _attention(q, k, v, causal, window, q_offset, scale, mode)
+    return out, (q, k, v)
+
+
+def _attention_bwd(causal, window, q_offset, scale, mode, res, g):
+    # Manual flash backward: recompute (out, lse) once, then blockwise
+    # dq/dk/dv with O(block^2) transients — NO autodiff residuals. This is
+    # what keeps the per-device training memory footprint flat in seq_len.
+    q, k, v = res
+    out, lse = ref.attention_chunked_with_lse(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        scale=scale)
+    return ref.attention_chunked_bwd(
+        q, k, v, out, lse, g, causal=causal, window=window,
+        q_offset=q_offset, scale=scale)
+
+
+_attention.defvjp(_attention_fwd, _attention_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0, scale: Optional[float] = None,
+                    mode: Optional[str] = None) -> jax.Array:
+    """Multi-head / grouped-query attention.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+    """
+    return _attention(q, k, v, causal, window, q_offset, scale, mode)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     cache_len: jax.Array, *, window: Optional[int] = None,
+                     scale: Optional[float] = None) -> jax.Array:
+    """One-token decode against a KV cache (bandwidth-bound; jnp path)."""
+    return ref.decode_attention_ref(q, k, v, cache_len, window=window,
+                                    scale=scale)

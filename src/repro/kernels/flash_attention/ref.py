@@ -1,0 +1,298 @@
+"""Pure-jnp oracles for flash attention.
+
+``attention_naive``   materializes the full score matrix — the ground truth
+                      for the kernel test sweeps (small shapes only).
+``attention_chunked`` exact online-softmax over KV blocks via lax.scan —
+                      the memory-bounded formulation used for CPU lowering
+                      and as the differentiable training path. Its working
+                      set (one q block x one kv block) matches the Pallas
+                      kernel's BlockSpec, so dry-run memory analysis reflects
+                      the kernel the TPU would run.
+
+Shapes: q (B, Sq, Hq, D); k, v (B, Skv, Hkv, D); Hq = G * Hkv (GQA).
+``q_offset`` is the absolute position of q[0] (decode / chunked prefill).
+``window`` (if set) masks keys older than ``window`` positions (local attn).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(qpos: jax.Array, kpos: jax.Array, causal: bool,
+          window: Optional[int]) -> jax.Array:
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), dtype=bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    return m
+
+
+def attention_naive(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0, scale: Optional[float] = None) -> jax.Array:
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg, kf) * scale
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Skv)
+    mask = _mask(qpos, kpos, causal, window)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, vf)
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: Optional[int] = None,
+                      q_offset: int = 0, scale: Optional[float] = None,
+                      block_q: int = 512, block_k: int = 1024) -> jax.Array:
+    """Exact online-softmax attention, O(block_q * block_k) live memory."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    bq = min(block_q, Sq)
+    while Sq % bq:
+        bq -= 1
+    bk = min(block_k, Skv)
+    while Skv % bk:
+        bk -= 1
+    nq, nk = Sq // bq, Skv // bk
+
+    qg = q.reshape(B, nq, bq, Hkv, G, D)
+    kb = k.reshape(B, nk, bk, Hkv, D)
+    vb = v.reshape(B, nk, bk, Hkv, D)
+
+    def q_block(qi, qblk):
+        qpos = q_offset + qi * bq + jnp.arange(bq)
+        # blocks stay in the input dtype (bf16 in production); the dots
+        # accumulate in fp32 via preferred_element_type — exactly the MXU
+        # behaviour of the Pallas kernel, and half the HBM block traffic
+        qf = qblk * jnp.asarray(scale, qblk.dtype)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ki, kblk, vblk = inputs
+            kpos = ki * bk + jnp.arange(bk)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kblk,
+                           preferred_element_type=jnp.float32)
+            msk = jnp.ones((bq, bk), dtype=bool)
+            if causal:
+                msk &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                msk &= kpos[None, :] > (qpos[:, None] - window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            # fully-masked positions would otherwise contribute exp(0)=1
+            p = jnp.where(msk[None, None, None], p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(qblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, bq, D), jnp.float32)
+        ks = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (ks, jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-37)
+        return jnp.moveaxis(out, 3, 1).reshape(B, bq, Hq, D)  # b h g q d -> b q (h g) d
+
+    outs = jax.lax.map(lambda args: q_block(*args),
+                       (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def attention_chunked_with_lse(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                               causal: bool = True,
+                               window: Optional[int] = None,
+                               q_offset: int = 0,
+                               scale: Optional[float] = None,
+                               block_q: int = 512, block_k: int = 1024):
+    """attention_chunked + per-row logsumexp stats (needed by the manual
+    flash backward). Returns (out (B,Sq,Hq,D), lse fp32 (B,Sq,Hq))."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(block_q, Sq)
+    while Sq % bq:
+        bq -= 1
+    bk = min(block_k, Skv)
+    while Skv % bk:
+        bk -= 1
+    nq, nk = Sq // bq, Skv // bk
+    qg = q.reshape(B, nq, bq, Hkv, G, D)
+    kb = jnp.moveaxis(k.reshape(B, nk, bk, Hkv, D), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, bk, Hkv, D), 1, 0)
+
+    def q_block(qi, qblk):
+        qpos = q_offset + qi * bq + jnp.arange(bq)
+        qf = qblk * jnp.asarray(scale, qblk.dtype)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ki, kblk, vblk = inputs
+            kpos = ki * bk + jnp.arange(bk)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kblk,
+                           preferred_element_type=jnp.float32)
+            msk = jnp.ones((bq, bk), dtype=bool)
+            if causal:
+                msk &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                msk &= kpos[None, :] > (qpos[:, None] - window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.where(msk[None, None, None],
+                          jnp.exp(s - m_new[..., None]), 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(qblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, bq, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l[..., None], 1e-37)
+        lse = m + jnp.log(jnp.maximum(l, 1e-37))
+        return (jnp.moveaxis(out, 3, 1).reshape(B, bq, Hq, D),
+                jnp.moveaxis(lse, 3, 1).reshape(B, bq, Hq))
+
+    outs, lses = jax.lax.map(lambda args: q_block(*args),
+                             (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hq, D).astype(q.dtype)
+    lse = jnp.moveaxis(lses, 0, 1).reshape(B, Sq, Hq)
+    return out, lse
+
+
+def attention_chunked_bwd(q, k, v, out, lse, dout, *, causal=True,
+                          window=None, q_offset=0, scale=None,
+                          block_q: int = 512, block_k: int = 1024):
+    """Manual flash-attention backward: recompute scores blockwise from
+    (q, k, v, lse); O(block_q x block_k) transients, no saved inner-scan
+    residuals (this is what keeps the training memory roofline honest —
+    XLA autodiff of the chunked forward would save every kv-step carry).
+
+    Outer scan over kv blocks (emitting dk_j, dv_j), inner scan over q
+    blocks (accumulating dq in-place). Causal block skipping is left to
+    the TPU kernel; here fully-masked blocks simply contribute zeros.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(block_q, Sq)
+    while Sq % bq:
+        bq -= 1
+    bk = min(block_k, Skv)
+    while Skv % bk:
+        bk -= 1
+    nq, nk = Sq // bq, Skv // bk
+
+    qg = jnp.moveaxis(q.reshape(B, nq, bq, Hkv, G, D), 1, 0)
+    og = jnp.moveaxis(out.reshape(B, nq, bq, Hkv, G, D), 1, 0)
+    dog = jnp.moveaxis(dout.reshape(B, nq, bq, Hkv, G, D), 1, 0)
+    lseg = jnp.moveaxis(lse.reshape(B, nq, bq, Hkv, G), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, bk, Hkv, D), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, bk, Hkv, D), 1, 0)
+    # delta = rowsum(dout * out)  (B, nq, bq, Hkv, G) — O(S) stats
+    delta = jnp.einsum("nbqhgd,nbqhgd->nbqhg",
+                       dog.astype(jnp.float32), og.astype(jnp.float32))
+
+    def kv_block(dq_acc, kv_inputs):
+        kj, kblk, vblk = kv_inputs
+        kpos = kj * bk + jnp.arange(bk)
+        kf = kblk
+        vf = vblk
+
+        def q_step(carry, q_inputs):
+            dq_acc, dk_j, dv_j = carry
+            qi, qblk, doblk, lseblk, dblk = q_inputs
+            qpos = q_offset + qi * bq + jnp.arange(bq)
+            qf = qblk
+            dof = doblk
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf,
+                           preferred_element_type=jnp.float32) * scale
+            msk = jnp.ones((bq, bk), dtype=bool)
+            if causal:
+                msk &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                msk &= kpos[None, :] > (qpos[:, None] - window)
+            lse_t = jnp.moveaxis(lseblk.astype(jnp.float32), 1, -1)  # b h g q
+            p = jnp.where(msk[None, None, None],
+                          jnp.exp(s - lse_t[..., None]), 0.0)
+            pc = p.astype(qf.dtype)
+            dv_j = dv_j + jnp.einsum("bhgqk,bqhgd->bkhd", pc, dof,
+                                     preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", dof, vf,
+                            preferred_element_type=jnp.float32)
+            d_t = jnp.moveaxis(dblk.astype(jnp.float32), 1, -1)      # b h g q
+            ds = (p * (dp - d_t[..., None]) * scale)
+            dsc = ds.astype(qf.dtype)
+            dq_i = jnp.einsum("bhgqk,bkhd->bqhgd", dsc, kf,
+                              preferred_element_type=jnp.float32)
+            dk_j = dk_j + jnp.einsum("bhgqk,bqhgd->bkhd", dsc, qf,
+                                     preferred_element_type=jnp.float32)
+            dq_acc = dq_acc.at[qi].add(dq_i)
+            return (dq_acc, dk_j, dv_j), None
+
+        dk0 = jnp.zeros((B, bk, Hkv, D), jnp.float32)
+        dv0 = jnp.zeros((B, bk, Hkv, D), jnp.float32)
+        (dq_acc, dk_j, dv_j), _ = jax.lax.scan(
+            q_step, (dq_acc, dk0, dv0),
+            (jnp.arange(nq), qg, dog, lseg, delta))
+        return dq_acc, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((nq, B, bq, Hkv, G, D), jnp.float32)
+    dq_acc, (dks, dvs) = jax.lax.scan(kv_block, dq0,
+                                      (jnp.arange(nk), kb, vb))
+    dq = jnp.moveaxis(dq_acc, 0, 1).reshape(B, Sq, Hq, D).astype(q.dtype)
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, Skv, Hkv, D).astype(k.dtype)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Skv, Hkv, D).astype(v.dtype)
+    return dq, dk, dv
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         cache_len: jax.Array, *,
+                         window: Optional[int] = None,
+                         scale: Optional[float] = None) -> jax.Array:
+    """Single-token decode: q (B, 1, Hq, D); k/v (B, Smax, Hkv, D) ring/linear
+    buffer with ``cache_len`` valid entries (the new token already appended).
+    Bandwidth-bound; XLA handles it well so this is also the production path
+    on TPU (no Pallas kernel needed — see DESIGN.md)."""
+    B, _, Hq, D = q.shape
+    _, Smax, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, k.astype(jnp.float32)) * scale
+    tpos = jnp.arange(Smax)
+    valid = tpos[None, :] < cache_len[:, None]  # (B, Smax)
+    if window is not None:
+        valid &= tpos[None, :] > (cache_len[:, None] - 1 - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.hash_aggregate.ops import hash_aggregate

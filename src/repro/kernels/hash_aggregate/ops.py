@@ -1,0 +1,22 @@
+"""Public partitioned-aggregation op with mode dispatch."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.common import kernel_mode
+from repro.kernels.hash_aggregate.kernel import hash_aggregate_pallas
+from repro.kernels.hash_aggregate.ref import hash_aggregate_ref
+
+
+def hash_aggregate(ids: jax.Array, vals: jax.Array, *, n_bins: int,
+                   block: int = 512, mode: Optional[str] = None) -> jax.Array:
+    """Partition-local segment sums. ids, vals: (P, T) -> (P, n_bins)."""
+    resolved = kernel_mode(mode)
+    if resolved == "pallas":
+        return hash_aggregate_pallas(ids, vals, n_bins=n_bins, block=block)
+    if resolved == "interpret":
+        return hash_aggregate_pallas(ids, vals, n_bins=n_bins, block=block,
+                                     interpret=True)
+    return hash_aggregate_ref(ids, vals, n_bins=n_bins)

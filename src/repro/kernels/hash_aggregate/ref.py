@@ -1,0 +1,18 @@
+"""Oracle for partitioned hash aggregation (distributive: SUM / COUNT).
+
+Inputs are pre-partitioned: ids[p, t] in [0, n_bins) are partition-local
+group slots, vals[p, t] the aggregated measure (1.0 for COUNT). A padding
+slot id == n_bins-1 with val 0 is the convention for ragged partitions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hash_aggregate_ref(ids: jax.Array, vals: jax.Array, *,
+                       n_bins: int) -> jax.Array:
+    """ids: (P, T) int32; vals: (P, T) f32. Returns (P, n_bins) f32 sums."""
+    def one(i, v):
+        return jax.ops.segment_sum(v, i, num_segments=n_bins)
+    return jax.vmap(one)(ids, vals.astype(jnp.float32))

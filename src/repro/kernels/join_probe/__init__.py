@@ -1,0 +1,1 @@
+from repro.kernels.join_probe.ops import join_probe

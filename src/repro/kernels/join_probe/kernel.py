@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: partition-wise join probe.
+
+TPU adaptation of the W3 hash-join probe. The CPU version (Blanas '11)
+chases hash buckets per tuple — per-lane random access that the paper speeds
+up with allocators and placement. TPUs have no per-lane gather worth using,
+so the partition-local probe is recast as a *blocked broadcast compare*:
+the build partition's (keys, vals) tile stays resident in VMEM while probe
+blocks stream through; an (bp x bb) equality matrix (VPU) followed by a
+matmul against build values (MXU) yields matched values — effectively a
+tiny nested-loop join per partition, which on the MXU is faster than any
+scatter/gather hash probe for build tiles <= ~2K keys. Radix partitioning
+(kernels/radix_partition) guarantees that bound.
+
+Grid: (n_partitions, n_probe_blocks); the build tile is re-fetched per
+partition (index_map keyed on partition only).
+Working set: bb*(2) + bp + bp*bb fp32 ~ (1024 x 1024) -> ~4.2 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _probe_kernel(bkeys_ref, bvals_ref, pkeys_ref, vals_ref, found_ref):
+    bk = bkeys_ref[0]                                  # (Bk,)
+    bv = bvals_ref[0].astype(jnp.float32)
+    pk = pkeys_ref[0]                                  # (bp,)
+    eq = (pk[:, None] == bk[None, :])                  # (bp, Bk)
+    eqf = eq.astype(jnp.float32)
+    vals = jax.lax.dot_general(eqf, bv[:, None], (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    vals_ref[0] = vals[:, 0]
+    found_ref[0] = eq.any(axis=-1)
+
+
+def join_probe_pallas(build_keys: jax.Array, build_vals: jax.Array,
+                      probe_keys: jax.Array, *, block_p: int = 1024,
+                      interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """build_keys/vals: (P, Bk); probe_keys: (P, Pk), Pk % block_p == 0."""
+    P, Bk = build_keys.shape
+    _, Pk = probe_keys.shape
+    bp = max(1, min(block_p, Pk))
+    while Pk % bp:
+        bp //= 2
+    n_blocks = Pk // bp
+
+    vals, found = pl.pallas_call(
+        _probe_kernel,
+        grid=(P, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, Bk), lambda p, b: (p, 0)),
+            pl.BlockSpec((1, Bk), lambda p, b: (p, 0)),
+            pl.BlockSpec((1, bp), lambda p, b: (p, b)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bp), lambda p, b: (p, b)),
+            pl.BlockSpec((1, bp), lambda p, b: (p, b)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P, Pk), jnp.float32),
+            jax.ShapeDtypeStruct((P, Pk), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(build_keys, build_vals, probe_keys)
+    return vals, found

@@ -1,0 +1,24 @@
+"""Oracle for the partition-wise join probe (W3/W4, paper Section 2.1).
+
+Both relations arrive radix-partitioned on the join key; within a partition
+the build side is small enough to broadcast. Build keys are unique (the
+paper's Blanas dataset is a PK-FK join). Probe misses return value 0 and
+found=False. A build-side padding convention of key == -1 marks empty slots.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def join_probe_ref(build_keys: jax.Array, build_vals: jax.Array,
+                   probe_keys: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """build_keys/vals: (P, Bk); probe_keys: (P, Pk).
+    Returns (vals (P, Pk) f32, found (P, Pk) bool)."""
+    eq = probe_keys[:, :, None] == build_keys[:, None, :]     # (P, Pk, Bk)
+    found = eq.any(axis=-1)
+    vals = jnp.einsum("pqb,pb->pq", eq.astype(jnp.float32),
+                      build_vals.astype(jnp.float32))
+    return vals, found

@@ -1,0 +1,1 @@
+from repro.kernels.radix_partition.ops import block_histograms, radix_partition

@@ -1,0 +1,45 @@
+"""Public radix-partition ops: histogram pass (kernel) + scatter pass (XLA
+sort) composed into a full partitioner."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import kernel_mode
+from repro.kernels.radix_partition.kernel import block_histograms_pallas
+from repro.kernels.radix_partition.ref import block_histograms_ref
+
+
+def block_histograms(keys: jax.Array, *, n_bins: int, shift: int = 0,
+                     block: int = 1024,
+                     mode: Optional[str] = None) -> jax.Array:
+    resolved = kernel_mode(mode)
+    if resolved == "pallas":
+        return block_histograms_pallas(keys, n_bins=n_bins, shift=shift,
+                                       block=block)
+    if resolved == "interpret":
+        return block_histograms_pallas(keys, n_bins=n_bins, shift=shift,
+                                       block=block, interpret=True)
+    return block_histograms_ref(keys, n_bins=n_bins, shift=shift, block=block)
+
+
+def radix_partition(keys: jax.Array, values: jax.Array, *, n_bins: int,
+                    shift: int = 0, block: int = 1024,
+                    mode: Optional[str] = None
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Partition (keys, values) by radix digit.
+
+    Returns (keys_out, values_out, bin_starts) with records stably grouped
+    by digit. Histogram via the kernel; scatter via a stable sort on the
+    digit (XLA's radix sort — the TPU-native scatter)."""
+    digits = jax.lax.shift_right_logical(keys, shift) & (n_bins - 1)
+    hist = block_histograms(keys, n_bins=n_bins, shift=shift, block=block,
+                            mode=mode) if keys.shape[0] % block == 0 else None
+    counts = (hist.sum(axis=0) if hist is not None
+              else jnp.bincount(digits, length=n_bins))
+    starts = jnp.cumsum(counts) - counts
+    order = jnp.argsort(digits, stable=True)
+    return keys[order], values[order], starts

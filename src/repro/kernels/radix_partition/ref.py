@@ -1,0 +1,21 @@
+"""Oracle for the radix-histogram pass of partitioning.
+
+Radix partitioning is the memory-bound hot loop of every NUMA-aware
+join/aggregation in the paper's lineage (Blanas'11, Balkesen'13, Schuh'16):
+pass 1 counts keys per radix digit per block, pass 2 scatters. The count
+pass is what the Pallas kernel accelerates; the scatter is a sort (XLA).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_histograms_ref(keys: jax.Array, *, n_bins: int, shift: int,
+                         block: int) -> jax.Array:
+    """keys: (N,) int32, N % block == 0. Returns (N//block, n_bins) int32
+    histograms of the radix digit (keys >> shift) & (n_bins-1) per block."""
+    digits = (keys >> shift) & (n_bins - 1)
+    blocks = digits.reshape(-1, block)
+    oh = jax.nn.one_hot(blocks, n_bins, dtype=jnp.int32)
+    return oh.sum(axis=1)

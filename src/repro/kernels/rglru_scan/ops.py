@@ -1,0 +1,57 @@
+"""Public linear-scan op with mode dispatch + custom VJP.
+
+The VJP of h_t = a_t h_{t-1} + b_t is itself a (reversed) linear scan:
+  db_t = g_t + a_{t+1} db_{t+1}         (suffix scan of gradients)
+  da_t = db_t * h_{t-1}
+so the backward pass reuses the same primitive (kernel-accelerated on TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import kernel_mode
+from repro.kernels.rglru_scan.kernel import rglru_scan_pallas
+from repro.kernels.rglru_scan.ref import linear_scan_ref
+
+
+def _dispatch(a, b, mode):
+    resolved = kernel_mode(mode)
+    if resolved == "pallas":
+        return rglru_scan_pallas(a, b)
+    if resolved == "interpret":
+        return rglru_scan_pallas(a, b, interpret=True)
+    return linear_scan_ref(a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def linear_scan(a: jax.Array, b: jax.Array,
+                mode: Optional[str] = None) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t along axis 1. a, b: (B, S, D) -> fp32 h."""
+    return _dispatch(a, b, mode)
+
+
+def _fwd(a, b, mode):
+    h = _dispatch(a, b, mode)
+    return h, (a, h)
+
+
+def _bwd(mode, res, g):
+    a, h = res
+    af = a.astype(jnp.float32)
+    # suffix scan: db_t = g_t + a_{t+1} db_{t+1}  == reversed prefix scan
+    a_next = jnp.concatenate(
+        [af[:, 1:], jnp.zeros_like(af[:, :1])], axis=1)
+    db = _dispatch(jnp.flip(a_next, 1), jnp.flip(g.astype(jnp.float32), 1),
+                   mode)
+    db = jnp.flip(db, 1)
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h[:, :1]), h[:, :-1]], axis=1)
+    da = db * h_prev
+    return da.astype(a.dtype), db.astype(a.dtype)
+
+
+linear_scan.defvjp(_fwd, _bwd)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the RG-LRU linear recurrence h_t = a_t h_{t-1} + b_t.
+
+Parallel-prefix formulation via ``jax.lax.associative_scan`` over the
+associative combine  (a2,b2) o (a1,b1) = (a1*a2, b1*a2 + b2)  — O(S log S)
+work, O(log S) depth, fully vectorized over (batch, d_rnn).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """a, b: (B, S, D) fp32. Returns h with h_{-1} = 0."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def linear_scan_sequential(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Step-by-step lax.scan version (independent second oracle)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    a_t = jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+    b_t = jnp.moveaxis(b.astype(jnp.float32), 1, 0)
+    h0 = jnp.zeros(a.shape[:1] + a.shape[2:], jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (a_t, b_t))
+    return jnp.moveaxis(hs, 0, 1)

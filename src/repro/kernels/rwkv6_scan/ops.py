@@ -1,0 +1,59 @@
+"""Public WKV6 op with mode dispatch.
+
+Backward: differentiating through the ref lax.scan (recompute-friendly under
+remat). The Pallas kernel accelerates forward (inference/prefill); training
+on TPU can keep the kernel forward via this custom_vjp whose backward uses
+the scan formulation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import kernel_mode
+from repro.kernels.rwkv6_scan.kernel import wkv6_pallas
+from repro.kernels.rwkv6_scan.ref import wkv6_ref, wkv6_step_ref
+
+
+def _dispatch(r, k, v, w, u, mode):
+    resolved = kernel_mode(mode)
+    if resolved == "pallas":
+        return wkv6_pallas(r, k, v, w, u)
+    if resolved == "interpret":
+        return wkv6_pallas(r, k, v, w, u, interpret=True)
+    return wkv6_ref(r, k, v, w, u)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _wkv6(r, k, v, w, u, mode):
+    return _dispatch(r, k, v, w, u, mode)
+
+
+def _fwd(r, k, v, w, u, mode):
+    out = _dispatch(r, k, v, w, u, mode)
+    return out, (r, k, v, w, u)
+
+
+def _bwd(mode, res, g):
+    r, k, v, w, u = res
+    gy, gs = g
+    _, vjp = jax.vjp(lambda *args: wkv6_ref(*args), r, k, v, w, u)
+    return vjp((gy, gs))
+
+
+_wkv6.defvjp(_fwd, _bwd)
+
+
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, mode: Optional[str] = None
+         ) -> Tuple[jax.Array, jax.Array]:
+    """WKV6 scan. r,k,v,w: (B,S,H,N); u: (H,N) -> (y, final_state)."""
+    return _wkv6(r, k, v, w, u, mode)
+
+
+def wkv6_step(r, k, v, w, u, state):
+    """Decode step (jnp; bandwidth-bound)."""
+    return wkv6_step_ref(r, k, v, w, u, state)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence.
+
+Per (batch, head), with state S in R^{N x N} (key dim i, value dim j):
+    y_t[j]  = sum_i r_t[i] * (S[i,j] + u[i] * k_t[i] * v_t[j])
+    S[i,j] <- w_t[i] * S[i,j] + k_t[i] * v_t[j]
+w_t in (0,1) is the data-dependent per-channel decay (the Finch novelty).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, state: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """r,k,v,w: (B, S, H, N) ; u: (H, N).  Returns (y (B,S,H,N) fp32, S_out)."""
+    B, S, H, N = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def step(S_c, inp):
+        r_t, k_t, v_t, w_t = inp                       # (B, H, N)
+        kv = k_t[..., :, None] * v_t[..., None, :]     # (B, H, N, N)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S_c + uf[..., :, None] * kv)
+        S_n = w_t[..., :, None] * S_c + kv
+        return S_n, y
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (rf, kf, vf, wf))
+    S_out, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), S_out
+
+
+def wkv6_step_ref(r, k, v, w, u, state):
+    """Single decode step. r,k,v,w: (B, H, N); state: (B, H, N, N) fp32."""
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    kv = kf[..., :, None] * vf[..., None, :]
+    y = jnp.einsum("bhi,bhij->bhj", rf, state + uf[..., :, None] * kv)
+    state = wf[..., :, None] * state + kv
+    return y, state

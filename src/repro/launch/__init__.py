@@ -1,0 +1,3 @@
+"""Launchers: production mesh, dry-run driver, train/serve entry points."""
+from repro.launch.mesh import (make_host_mesh, make_layout_mesh,
+                               make_production_mesh)

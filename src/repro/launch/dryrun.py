@@ -1,0 +1,516 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh ((16,16) "data","model" or (2,16,16)
+     "pod","data","model"),
+  2. builds the model at TP=16 with the cell's RunConfig,
+  3. lowers the right step (train_step / prefill / serve decode_step) with
+     ShapeDtypeStruct inputs — ZERO device allocation at any model size,
+  4. compiles, prints memory_analysis() (proves the cell fits) and
+     cost_analysis() (FLOPs/bytes for the roofline),
+  5. parses the post-SPMD HLO for collective wire bytes,
+  6. emits a JSON report consumed by EXPERIMENTS.md and benchmarks/roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod both --out-dir experiments/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_arch
+from repro.core.config import (ArchConfig, AttentionKind, LM_SHAPES,
+                               PlacementPolicy, RunConfig, ShapeConfig,
+                               ShardingConfig, StepKind, TrainConfig)
+from repro.core.params import abstract_params
+from repro.core import topology
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding_plan import (batch_specs, cache_shardings,
+                                        data_axes_for, opt_state_shardings,
+                                        param_shardings)
+from repro.models.lm import LMModel
+from repro.optim import adamw
+from repro.runtime.train_loop import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# per-cell configuration (paper-faithful defaults; §Perf overrides via CLI)
+# ---------------------------------------------------------------------------
+def cell_config(arch: ArchConfig, shape: ShapeConfig, *,
+                policy: str = "interleave", sequence_parallel: bool = True,
+                accum: Optional[int] = None,
+                strategy: str = "tp",
+                accum_bf16: Optional[bool] = None) -> RunConfig:
+    is_deepseek = arch.name == "deepseek-v3"
+    is_moe = arch.moe is not None
+    big_dense = arch.param_count() > 20e9
+    default_accum = 8 if is_deepseek else (4 if is_moe else
+                                           (2 if big_dense else 1))
+    train = TrainConfig(
+        accum_steps=accum if accum is not None else default_accum,
+        grad_accum_dtype="bfloat16" if (accum_bf16 if accum_bf16 is not None
+                                        else is_deepseek) else "float32",
+        moment_dtype="bfloat16" if is_deepseek else "float32",
+        master_weights=not is_deepseek,
+        remat="block",
+    )
+    sharding = ShardingConfig(
+        policy=PlacementPolicy(policy),
+        strategy=strategy,
+        sequence_parallel=sequence_parallel and strategy == "tp",
+        expert_parallel_data=is_deepseek,
+    )
+    return RunConfig(arch=arch, shape=shape, sharding=sharding, train=train)
+
+
+def skip_reason(arch: ArchConfig, shape: ShapeConfig) -> Optional[str]:
+    if shape.name == "long_500k" and not arch.sub_quadratic:
+        return ("skipped: pure full-attention arch — 512k-token dense KV at "
+                "batch 1 is not a sub-quadratic-serving shape (DESIGN.md §8)")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|"
+                       r"u64|u32|u16|u8|pred)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "f16": 2, "bf16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "f8e4m3fn": 1, "f8e5m2": 1, "pred": 1}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_GROUPS_GRID_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_GRID_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_bytes(hlo_text: str, n_chips: int) -> Dict[str, Any]:
+    """Per-device operand + wire bytes per collective kind, from the
+    post-SPMD optimized HLO.
+
+    Operands are referenced by name (no inline types), so operand size is
+    recovered from the RESULT type and the op semantics:
+      all-gather      operand = result / g      wire = result * (g-1)/g
+      all-reduce      operand = result          wire = 2 * result * (g-1)/g
+      reduce-scatter  operand = result * g      wire = result * (g-1)
+      all-to-all      operand = result          wire = result * (g-1)/g
+      collective-permute operand = result       wire = result
+    (g = replica group size; the partitioned HLO is already per-device.)
+    """
+    out = {k: {"count": 0, "operand_bytes": 0.0, "wire_bytes": 0.0}
+           for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        eq = s.find(" = ")
+        if eq < 0:
+            continue
+        rhs = s[eq + 3:]
+        for kind in _COLLECTIVES:
+            # result may be a bare type or a tuple "(t1, t2)"
+            m = re.match(r"([^ ]+|\([^)]*\)) " + kind + r"(-start)?\(", rhs)
+            if not m:
+                continue
+            result_b = _shape_bytes(m.group(1))
+            g = _group_size(s, n_chips)
+            if kind == "all-gather":
+                operand = result_b / max(g, 1)
+                wire = result_b * (g - 1) / max(g, 1)
+            elif kind == "all-reduce":
+                operand = result_b
+                wire = 2.0 * result_b * (g - 1) / max(g, 1)
+            elif kind == "reduce-scatter":
+                operand = result_b * g
+                wire = result_b * (g - 1)
+            elif kind == "all-to-all":
+                operand = result_b
+                wire = result_b * (g - 1) / max(g, 1)
+            else:  # collective-permute
+                operand = result_b
+                wire = result_b
+            out[kind]["count"] += 1
+            out[kind]["operand_bytes"] += operand
+            out[kind]["wire_bytes"] += wire
+            break
+    out["operand_bytes"] = sum(v["operand_bytes"] for v in out.values()
+                               if isinstance(v, dict))
+    out["wire_bytes"] = sum(v["wire_bytes"] for v in out.values()
+                            if isinstance(v, dict))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell lowering
+# ---------------------------------------------------------------------------
+def build_cell(arch: ArchConfig, shape: ShapeConfig, mesh, cfg: RunConfig,
+               unroll_layers: bool = False):
+    """Returns (jitted_fn, example_args) ready to .lower()."""
+    tp = mesh.shape["model"]
+    # shard_map MoE needs the SP token layout and a full-sequence pass
+    use_sharded_moe = (arch.moe is not None
+                       and cfg.sharding.sequence_parallel
+                       and shape.kind != StepKind.DECODE)
+    # EP group excludes "pod": experts replicate across pods (see
+    # sharding_plan.make_rules)
+    expert_axes = (("data", "model")
+                   if cfg.sharding.expert_parallel_data else ("model",))
+    if cfg.sharding.strategy == "fsdp":
+        data_axes = data_axes_for(mesh) + ("model",)
+        tp = 1  # no tensor parallelism: pad only to MXU lanes
+    else:
+        data_axes = data_axes_for(mesh)
+    if getattr(cfg.sharding, "decode_dshard", False):
+        tp = 1  # head_dim sharding needs NO head padding
+    model = LMModel(arch, tp=tp,
+                    sequence_parallel=cfg.sharding.sequence_parallel,
+                    data_axes=data_axes,
+                    kernel_mode="ref", remat=cfg.train.remat,
+                    unroll_layers=unroll_layers,
+                    moe_mesh=mesh if use_sharded_moe else None,
+                    expert_axes=expert_axes)
+    params_abs = abstract_params(model.schema(),
+                                 jnp.dtype(cfg.param_dtype))
+    pshard = param_shardings(model, cfg, mesh)
+    binfo = batch_specs(arch, shape, mesh, cfg.sharding.strategy)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == StepKind.TRAIN:
+        opt_abs = adamw.abstract_state(params_abs, cfg.train)
+        oshard = opt_state_shardings(model, cfg, mesh, params_abs, opt_abs)
+        step_fn = make_train_step(model, cfg)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(pshard, oshard, binfo["shardings"], repl),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1))
+        args = (params_abs, opt_abs, binfo["specs"],
+                jax.ShapeDtypeStruct((), jnp.int32))
+        return jitted, args
+
+    if shape.kind == StepKind.PREFILL:
+        jitted = jax.jit(
+            lambda p, b: model.prefill(p, b),
+            in_shardings=(pshard, binfo["shardings"]),
+        )
+        return jitted, (params_abs, binfo["specs"])
+
+    # DECODE: one token against a cache of seq_len
+    B = shape.global_batch
+    cap = shape.seq_len
+    cache_abs = model.cache_spec(B, cap)
+    cshard = cache_shardings(model, cfg, mesh, B, cap)
+    jitted = jax.jit(
+        lambda p, c, b: model.decode_step(p, c, b),
+        in_shardings=(pshard, cshard, binfo["shardings"]),
+        donate_argnums=(1,))
+    return jitted, (params_abs, cache_abs, binfo["specs"])
+
+
+# ---------------------------------------------------------------------------
+# cost calibration: XLA cost_analysis counts a lax.scan body ONCE, so the
+# scanned full-depth module under-reports FLOPs/bytes by ~n_layers. We lower
+# shallow UNROLLED variants of the same cell and extrapolate linearly in
+# depth (exact for homogeneous stacks; hybrid gets per-superblock and
+# per-tail terms). Memory analysis and the compile proof still come from
+# the real scanned module.
+# ---------------------------------------------------------------------------
+def _cell_costs(arch, shape, mesh, cfg, n_chips, unroll=True):
+    jitted, args = build_cell(arch, shape, mesh, cfg, unroll_layers=unroll)
+    compiled = jitted.lower(*args).compile()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text(), n_chips)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_operand": coll["operand_bytes"],
+        "coll_wire": coll["wire_bytes"],
+        "collectives": coll,
+    }
+
+
+def _lin(base, per, n):
+    # per-layer deltas can dip slightly negative when XLA optimizes the
+    # 1-layer and 2-layer modules differently; clamp at the base cost
+    return {k: max(base[k] + per[k] * n, base[k], 0.0)
+            for k in ("flops", "bytes", "coll_operand", "coll_wire")}
+
+
+def _sub(a, b):
+    return {k: a[k] - b[k]
+            for k in ("flops", "bytes", "coll_operand", "coll_wire")}
+
+
+def calibrate_costs(arch: ArchConfig, shape: ShapeConfig, mesh,
+                    cfg: RunConfig, n_chips: int) -> Dict[str, Any]:
+    """Extrapolated full-depth costs from shallow unrolled lowerings."""
+    L = arch.n_layers
+    if arch.family == "hybrid":
+        pat_len = len(arch.hybrid.pattern)
+        n_super, n_tail = L // pat_len, L % pat_len
+        c1 = _cell_costs(dataclasses.replace(arch, n_layers=pat_len),
+                         shape, mesh, cfg, n_chips)
+        c2 = _cell_costs(dataclasses.replace(arch, n_layers=2 * pat_len),
+                         shape, mesh, cfg, n_chips)
+        per_super = _sub(c2, c1)
+        total = _lin(c1, per_super, n_super - 1)
+        if n_tail:
+            ct = _cell_costs(
+                dataclasses.replace(arch, n_layers=pat_len + n_tail),
+                shape, mesh, cfg, n_chips)
+            per_tail_group = _sub(ct, c1)
+            total = {k: total[k] + per_tail_group[k] for k in total}
+        return total
+    if arch.moe is not None and arch.moe.n_dense_layers:
+        nd = arch.moe.n_dense_layers
+        c1 = _cell_costs(dataclasses.replace(arch, n_layers=nd + 1),
+                         shape, mesh, cfg, n_chips)
+        c2 = _cell_costs(dataclasses.replace(arch, n_layers=nd + 2),
+                         shape, mesh, cfg, n_chips)
+        per_moe = _sub(c2, c1)
+        return _lin(c1, per_moe, (L - nd) - 1)
+    c1 = _cell_costs(dataclasses.replace(arch, n_layers=1),
+                     shape, mesh, cfg, n_chips)
+    c2 = _cell_costs(dataclasses.replace(arch, n_layers=2),
+                     shape, mesh, cfg, n_chips)
+    per_layer = _sub(c2, c1)
+    return _lin(c1, per_layer, L - 1)
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+             policy: str = "interleave", sequence_parallel: bool = True,
+             accum: Optional[int] = None, strategy: str = "tp",
+             accum_bf16: Optional[bool] = None,
+             decode_dshard: bool = False,
+             verbose: bool = True) -> Dict[str, Any]:
+    arch = get_arch(arch_name)
+    shape = LM_SHAPES[shape_name]
+    report: Dict[str, Any] = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "policy": policy, "sequence_parallel": sequence_parallel,
+        "strategy": strategy,
+    }
+    reason = skip_reason(arch, shape)
+    if reason:
+        report["status"] = "skipped"
+        report["reason"] = reason
+        return report
+
+    cfg = cell_config(arch, shape, policy=policy,
+                      sequence_parallel=sequence_parallel, accum=accum,
+                      strategy=strategy, accum_bf16=accum_bf16)
+    if decode_dshard:
+        report["decode_dshard"] = True
+        cfg = dataclasses.replace(
+            cfg, sharding=dataclasses.replace(cfg.sharding,
+                                              decode_dshard=True))
+    report["accum_steps"] = cfg.train.accum_steps
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+
+    t0 = time.time()
+    with mesh:
+        jitted, args = build_cell(arch, shape, mesh, cfg)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+
+    report["status"] = "ok"
+    report["lower_s"] = round(t_lower, 1)
+    report["compile_s"] = round(t_compile, 1)
+
+    # ---- memory (proves it fits) ---------------------------------------
+    mem_fields = {}
+    for field in ("temp_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+        mem_fields[field] = getattr(mem, field, None)
+    args_b = mem_fields.get("argument_size_in_bytes") or 0
+    temp_b = mem_fields.get("temp_size_in_bytes") or 0
+    out_b = mem_fields.get("output_size_in_bytes") or 0
+    alias_b = mem_fields.get("alias_size_in_bytes") or 0
+    # memory_analysis is PER-DEVICE on the partitioned module (verified
+    # against analytic shard sizes); live bytes = args + temps + outputs
+    # minus donated aliases (outputs reusing argument buffers)
+    per_device = args_b + temp_b + out_b - alias_b
+    report["memory"] = mem_fields
+    report["bytes_per_device"] = per_device
+    report["fits_16gb"] = bool(per_device < 16e9)
+
+    # ---- raw cost + collective schedule of the real (scanned) module -----
+    flops_raw = float(cost.get("flops", 0.0)) if cost else 0.0
+    bytes_raw = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+    hlo = compiled.as_text()
+    report["raw"] = {"hlo_flops": flops_raw, "hlo_bytes": bytes_raw,
+                     "collectives": collective_bytes(hlo, n_chips),
+                     "hlo_lines": hlo.count("\n")}
+    del hlo, compiled, lowered, jitted
+
+    # ---- depth-calibrated costs (see calibrate_costs docstring) -----------
+    t0 = time.time()
+    with mesh:
+        cal = calibrate_costs(arch, shape, mesh, cfg, n_chips)
+    report["calibrate_s"] = round(time.time() - t0, 1)
+    # the gradient-accumulation lax.scan body is ALSO counted once by
+    # cost_analysis (verified empirically: scan cost is trip-count
+    # invariant); microbatch bodies are identical, so scale by accum.
+    # The opt-update tail gets overcounted by the same factor — a <1%
+    # error at these sizes, noted in EXPERIMENTS.md.
+    if shape.kind == StepKind.TRAIN and cfg.train.accum_steps > 1:
+        a = cfg.train.accum_steps
+        cal = {k: v * a for k, v in cal.items()}
+        report["accum_scaled"] = a
+    # cost_analysis on the partitioned module reports PER-DEVICE numbers;
+    # record both per-device and global
+    report["hlo_flops_per_device"] = cal["flops"]
+    report["hlo_flops"] = cal["flops"] * n_chips
+    report["hlo_bytes_per_device"] = cal["bytes"]
+    report["hlo_bytes"] = cal["bytes"] * n_chips
+    report["collective_operand_bytes_per_device"] = cal["coll_operand"]
+    report["collective_wire_bytes_per_device"] = cal["coll_wire"]
+
+    # ---- roofline terms ---------------------------------------------------
+    compute_s = report["hlo_flops"] / (n_chips * topology.PEAK_FLOPS_BF16)
+    memory_s = report["hlo_bytes"] / (n_chips * topology.HBM_BW)
+    # assignment form: collective_bytes / (chips x link_bw); per-device wire
+    # bytes already divide by chips, and each chip drives ICI_LINKS_PER_CHIP
+    # links — report the per-link-pessimistic (1 link) number as the term
+    collective_s = cal["coll_wire"] / topology.ICI_LINK_BW
+    report["roofline"] = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": max(
+            (("compute", compute_s), ("memory", memory_s),
+             ("collective", collective_s)), key=lambda kv: kv[1])[0],
+    }
+    # model flops: 6ND (dense) / 6 N_active D (MoE) per trained token;
+    # decode/prefill use 2ND per generated/prefilled token
+    n_active = arch.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind == StepKind.TRAIN else
+                                   (shape.seq_len
+                                    if shape.kind == StepKind.PREFILL else 1))
+    mult = 6.0 if shape.kind == StepKind.TRAIN else 2.0
+    model_flops = mult * n_active * tokens
+    report["model_flops"] = model_flops
+    report["useful_flops_ratio"] = (model_flops / report["hlo_flops"]
+                                    if report["hlo_flops"] else None)
+    step_s = max(compute_s, memory_s, collective_s)
+    report["roofline"]["step_s_lower_bound"] = step_s
+    report["roofline"]["mfu_bound"] = (
+        model_flops / (step_s * n_chips * topology.PEAK_FLOPS_BF16)
+        if step_s > 0 else None)
+    if verbose:
+        print(json.dumps(report, indent=2, default=str))
+    return report
+
+
+# ---------------------------------------------------------------------------
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"],
+                    default="off")
+    ap.add_argument("--policy", default="interleave",
+                    choices=[p.value for p in PlacementPolicy])
+    ap.add_argument("--no-sp", action="store_true",
+                    help="disable sequence parallelism")
+    ap.add_argument("--strategy", default="tp", choices=["tp", "fsdp"])
+    ap.add_argument("--accum-bf16", action="store_true")
+    ap.add_argument("--decode-dshard", action="store_true",
+                    help="shard decode KV caches over head_dim (INTERLEAVE "
+                         "applied to the cache: avoids kv-head padding)")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--out-dir", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(LM_SHAPES) if (args.all or not args.shape) else [args.shape]
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in pods:
+                cells.append((a, s, mp))
+
+    failures = 0
+    for a, s, mp in cells:
+        tag = f"{a}|{s}|{'multi' if mp else 'single'}"
+        try:
+            rep = run_cell(a, s, multi_pod=mp, policy=args.policy,
+                           sequence_parallel=not args.no_sp,
+                           accum=args.accum, strategy=args.strategy,
+                           accum_bf16=args.accum_bf16 or None,
+                           decode_dshard=args.decode_dshard)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            rep = {"arch": a, "shape": s,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            failures += 1
+            print(f"[FAIL] {tag}: {e}", file=sys.stderr)
+        if args.out_dir:
+            os.makedirs(args.out_dir, exist_ok=True)
+            fname = f"{a}_{s}_{'multi' if mp else 'single'}"
+            if args.policy != "interleave":
+                fname += f"_{args.policy}"
+            if args.no_sp:
+                fname += "_nosp"
+            if args.strategy != "tp":
+                fname += f"_{args.strategy}"
+            if args.accum_bf16:
+                fname += "_accbf16"
+            if args.decode_dshard:
+                fname += "_dshard"
+            with open(os.path.join(args.out_dir, fname + ".json"), "w") as f:
+                json.dump(rep, f, indent=2, default=str)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

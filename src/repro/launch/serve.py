@@ -1,0 +1,64 @@
+"""Serving launcher: continuous batching with a paged KV budget.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+      --requests 32 --wave-slots 8 --page-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.configs.reduced import reduced as make_reduced
+from repro.core.config import AllocatorKind
+from repro.core.params import init_params
+from repro.models.lm import LMModel
+from repro.runtime import ContinuousBatcher, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--wave-slots", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--page-tokens", type=int, default=16,
+                    help="THP analogue: tokens per KV page")
+    ap.add_argument("--n-pages", type=int, default=512)
+    ap.add_argument("--allocator", default="slab",
+                    choices=[a.value for a in AllocatorKind])
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    if args.reduced:
+        arch = make_reduced(arch)
+    model = LMModel(arch, tp=1, remat="none")
+    params = init_params(model.schema(), jax.random.PRNGKey(args.seed),
+                         jnp.float32)
+    batcher = ContinuousBatcher(
+        model, params, wave_slots=args.wave_slots, max_len=args.max_len,
+        page_tokens=args.page_tokens, n_pages=args.n_pages,
+        allocator=AllocatorKind(args.allocator))
+    rng = np.random.RandomState(args.seed)
+    for i in range(args.requests):
+        batcher.submit(Request(req_id=i,
+                               prompt_len=int(rng.randint(4, 32)),
+                               max_new_tokens=args.max_new))
+    stats = batcher.run(max_steps=5000)
+    out = dataclasses.asdict(stats)
+    out["allocator"] = args.allocator
+    out["page_tokens"] = args.page_tokens
+    out["allocator_contentions"] = batcher.kv.allocator_stats.contentions
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

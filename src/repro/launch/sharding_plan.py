@@ -1,0 +1,161 @@
+"""Build the full sharding plan for one (arch x shape x mesh x policy) cell.
+
+One place decides every placement:
+  params      logical axes -> mesh axes via partitioning rules (TP over
+              "model"; MoE experts over "model" or ("data","model") for
+              deepseek-scale EP)
+  opt state   params plan + the NUMA placement policy (FIRST_TOUCH =
+              replicated over data = naive DP; INTERLEAVE = ZeRO-1)
+  batch       batch dim over the data axes
+  kv cache    batch over data, kv_heads over model, recurrent state ditto
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.config import (ArchConfig, PlacementPolicy, RunConfig,
+                               ShapeConfig, StepKind)
+from repro.core.params import abstract_params, axes_tree, shapes_tree
+from repro.core.partitioning import (policy_state_spec, rules_with, spec_for,
+                                     tree_specs, validate_spec)
+from repro.models.lm import LMModel
+from repro.optim import adamw
+
+
+def data_axes_for(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_rules(cfg: RunConfig, mesh: Mesh) -> Dict[str, Any]:
+    overrides: Dict[str, Any] = {}
+    if cfg.sharding.expert_parallel_data:
+        # EP group = ("data","model") = 256; the pod axis replicates experts
+        # (grads all-reduce over "pod" automatically) — 256 experts cannot
+        # shard over 512 chips
+        overrides["expert"] = ("data", "model")
+    if getattr(cfg.sharding, "decode_dshard", False):
+        # decode: shard head_dim instead of (padded) heads — removes the
+        # kv-head padding waste entirely; per-head dots become partial sums
+        # + a psum over "model" (flash-decoding layout)
+        overrides["heads"] = None
+        overrides["kv_heads"] = None
+        overrides["head_dim"] = "model"
+        overrides["kv_lora"] = "model"   # MLA latent cache: 576/16 divides
+    return rules_with(overrides)
+
+
+def _dp(mesh: Mesh, strategy: str = "tp"):
+    axes = data_axes_for(mesh)
+    if strategy == "fsdp":               # batch over EVERY axis
+        axes = axes + ("model",)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def _fsdp_spec(shape, mesh: Mesh) -> P:
+    """FSDP storage sharding: largest divisible dim over "data", second
+    largest over "model" (2D keeps divisibility easy at 16x16). Compute
+    gathers parameters per use (XLA inserts the all-gathers)."""
+    dims = sorted(range(len(shape)), key=lambda i: -shape[i])
+    parts = [None] * len(shape)
+    for axis in ("data", "model"):
+        size = mesh.shape.get(axis, 1)
+        for i in dims:
+            if parts[i] is None and shape[i] % size == 0 and shape[i] >= size:
+                parts[i] = axis
+                break
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_specs(model: LMModel, cfg: RunConfig, mesh: Mesh):
+    schema = model.schema()
+    if cfg.sharding.strategy == "fsdp":
+        shapes = shapes_tree(schema)
+        return jax.tree.map(
+            lambda shp: _fsdp_spec(shp, mesh), shapes,
+            is_leaf=lambda x: isinstance(x, tuple) and
+            all(isinstance(e, int) for e in x))
+    rules = make_rules(cfg, mesh)
+    return tree_specs(axes_tree(schema), rules, mesh, shapes_tree(schema))
+
+
+def param_shardings(model: LMModel, cfg: RunConfig, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(model, cfg, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_shardings(model: LMModel, cfg: RunConfig, mesh: Mesh,
+                        params_abs: Any, opt_abs: adamw.AdamWState):
+    """Placement policy applied to optimizer moments + master weights."""
+    pspecs = param_specs(model, cfg, mesh)
+    policy = cfg.sharding.policy
+
+    def state_shard(spec_tree, abs_tree):
+        def one(spec, ab):
+            s = policy_state_spec(policy, spec, ab.shape, mesh)
+            return NamedSharding(mesh, s)
+        return jax.tree.map(one, spec_tree, abs_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    mu = state_shard(pspecs, opt_abs.mu)
+    nu = state_shard(pspecs, opt_abs.nu)
+    master = (state_shard(pspecs, opt_abs.master)
+              if opt_abs.master is not None else None)
+    step = NamedSharding(mesh, P())
+    return adamw.AdamWState(step, mu, nu, master)
+
+
+def batch_specs(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                strategy: str = "tp") -> Dict[str, Any]:
+    """ShapeDtypeStructs + shardings for the input batch of this cell."""
+    dp = _dp(mesh, strategy)
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != StepKind.DECODE else 1
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    shards: Dict[str, NamedSharding] = {}
+
+    def add(name, shp, dtype, spec):
+        specs[name] = jax.ShapeDtypeStruct(shp, dtype)
+        shards[name] = NamedSharding(mesh, validate_spec(shp, spec, mesh))
+
+    if arch.n_codebooks:
+        if shape.kind == StepKind.DECODE:
+            add("codes", (B, 1, arch.n_codebooks), jnp.int32, P(dp))
+        else:
+            add("embeds", (B, S, arch.d_model), jnp.bfloat16, P(dp))
+            if shape.kind == StepKind.TRAIN:
+                add("labels", (B, S, arch.n_codebooks), jnp.int32, P(dp))
+    elif arch.vlm and shape.kind != StepKind.DECODE:
+        Ptch = arch.n_patches
+        add("tokens", (B, S - Ptch), jnp.int32, P(dp))
+        add("patch_embeds", (B, Ptch, arch.d_model), jnp.bfloat16, P(dp))
+        add("patch_pos", (B, Ptch, 3), jnp.int32, P(dp))
+        if shape.kind == StepKind.TRAIN:
+            add("labels", (B, S - Ptch), jnp.int32, P(dp))
+    else:
+        add("tokens", (B, S), jnp.int32, P(dp))
+        if shape.kind == StepKind.TRAIN:
+            add("labels", (B, S), jnp.int32, P(dp))
+    return {"specs": specs, "shardings": shards}
+
+
+def cache_shardings(model: LMModel, cfg: RunConfig, mesh: Mesh,
+                    batch: int, cap: int):
+    rules = make_rules(cfg, mesh)  # includes the decode_dshard overrides
+    spec_tree = model.cache_spec(batch, cap)
+    axes = model.cache_axes()
+
+    def one(ax, s):
+        return NamedSharding(mesh, validate_spec(s.shape,
+                                                 spec_for(ax, rules, mesh),
+                                                 mesh))
+    return jax.tree.map(one, axes, spec_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        all(isinstance(e, (str, type(None))) for e in x))

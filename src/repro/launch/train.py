@@ -1,0 +1,70 @@
+"""Training launcher (CPU-runnable reduced configs; production flags doc'd).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
+      --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+
+On a real TPU fleet the same entry point runs under `jax.distributed` with
+the production mesh; recommended XLA flags for overlap (recorded here, they
+are inert on CPU):
+  --xla_tpu_enable_latency_hiding_scheduler=true
+  --xla_tpu_spmd_rng_bit_generator_unsafe=true   (faster dropout RNG)
+  --xla_tpu_megacore_fusion_allow_ags=true       (AG overlap)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.configs.reduced import reduced as make_reduced
+from repro.core.config import (LM_SHAPES, PlacementPolicy, RunConfig,
+                               ShardingConfig, TrainConfig)
+from repro.models.lm import LMModel
+from repro.runtime import FailureInjector, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="shrink the config for CPU execution")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--policy", default="interleave",
+                    choices=[p.value for p in PlacementPolicy])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[],
+                    help="inject failures at these steps (FT drill)")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    if args.reduced:
+        arch = make_reduced(arch)
+    cfg = RunConfig(
+        arch=arch, shape=LM_SHAPES["train_4k"],
+        sharding=ShardingConfig(policy=PlacementPolicy(args.policy)),
+        train=TrainConfig(learning_rate=args.lr, accum_steps=args.accum,
+                          warmup_steps=max(2, args.steps // 10)))
+    model = LMModel(arch, tp=1, remat="block")
+    injector = FailureInjector(fail_at_steps=args.fail_at) if args.fail_at \
+        else None
+    res = train(model, cfg, n_steps=args.steps, batch=args.batch,
+                seq=args.seq, ckpt_dir=args.ckpt_dir,
+                ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
+                injector=injector)
+    print(json.dumps({
+        "arch": arch.name, "steps": res.steps_run,
+        "first_loss": res.losses[0] if res.losses else None,
+        "final_loss": res.final_loss, "restarts": res.restarts,
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

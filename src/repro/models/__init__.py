@@ -1,0 +1,5 @@
+"""Composable LM model definitions for all assigned architectures."""
+from repro.models.lm import (
+    LMModel,
+    build_model,
+)

@@ -1,0 +1,280 @@
+"""Attention blocks: GQA (with qk-norm / bias / local window) and MLA.
+
+Schema + forward are kept together so each block owns its parameter layout.
+Head counts arrive already TP-padded (core.config.PaddedDims): padded query
+heads have zero Wq rows and zero Wo columns, so padded heads contribute
+exactly zero to the output.
+
+KV caches:
+  GQA   k/v buffers (B, Smax, KVp, Dh) + scalar lengths (B,)
+  MLA   latent cache (B, Smax, kv_lora + rope_dim): decode runs the
+        *absorbed* formulation (score and mix directly in latent space),
+        prefill/train expand per-head K/V (matmul-friendly). This is the
+        memory-optimal MLA serving layout.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ArchConfig, AttentionKind, PaddedDims, RopeKind
+from repro.core.params import pdef
+from repro.kernels.flash_attention import decode_attention, flash_attention
+from repro.models.layers import apply_mrope, apply_rope, head_rms_norm, rms_norm
+
+
+def _constrain(x, spec):
+    """Best-effort sharding constraint (no-op outside a mesh context)."""
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+def gqa_schema(arch: ArchConfig, padded: PaddedDims) -> Dict[str, Any]:
+    d, hd = arch.d_model, arch.resolved_head_dim
+    H, KV = padded.n_heads, padded.n_kv_heads
+    s = {
+        "wq": pdef((d, H, hd), ("embed", "heads", "head_dim"), "scaled"),
+        "wk": pdef((d, KV, hd), ("embed", "kv_heads", "head_dim"), "scaled"),
+        "wv": pdef((d, KV, hd), ("embed", "kv_heads", "head_dim"), "scaled"),
+        "wo": pdef((H, hd, d), ("heads", "head_dim", "embed"), "scaled"),
+    }
+    if arch.qkv_bias:
+        s["bq"] = pdef((H, hd), ("heads", "head_dim"), "zeros")
+        s["bk"] = pdef((KV, hd), ("kv_heads", "head_dim"), "zeros")
+        s["bv"] = pdef((KV, hd), ("kv_heads", "head_dim"), "zeros")
+    if arch.qk_norm:
+        s["q_norm"] = pdef((hd,), ("head_dim",), "ones")
+        s["k_norm"] = pdef((hd,), ("head_dim",), "ones")
+    return s
+
+
+def _project_qkv(p: Dict[str, Any], x: jax.Array, arch: ArchConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if arch.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if arch.qk_norm:
+        q = head_rms_norm(q, p["q_norm"], arch.norm_eps)
+        k = head_rms_norm(k, p["k_norm"], arch.norm_eps)
+    return q, k, v
+
+
+def _positions_rope(arch: ArchConfig, q, k, q_positions, k_positions):
+    if arch.rope == RopeKind.ROPE:
+        q = apply_rope(q, q_positions, arch.rope_theta)
+        k = apply_rope(k, k_positions, arch.rope_theta)
+    elif arch.rope == RopeKind.MROPE:
+        q = apply_mrope(q, q_positions, arch.rope_theta)
+        k = apply_mrope(k, k_positions, arch.rope_theta)
+    return q, k
+
+
+def gqa_forward(p: Dict[str, Any], x: jax.Array, arch: ArchConfig, *,
+                positions: jax.Array, window: Optional[int] = None,
+                kernel_mode: Optional[str] = None) -> jax.Array:
+    """Full-sequence (train / prefill) GQA pass. x: (B, S, d)."""
+    q, k, v = _project_qkv(p, x, arch)
+    q, k = _positions_rope(arch, q, k, positions, positions)
+    scale = arch.resolved_head_dim ** -0.5
+    # positions may be per-example (B, S) or flat (S,): rope handles both;
+    # the kernel needs scalar offsets, contiguous positions assumed.
+    out = flash_attention(q, k, v, causal=True, window=window, scale=scale,
+                          mode=kernel_mode)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def gqa_init_cache(arch: ArchConfig, padded: PaddedDims, batch: int,
+                   max_len: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    hd = arch.resolved_head_dim
+    buf_len = min(max_len, arch.max_seq_len)
+    return {
+        "k": jnp.zeros((batch, buf_len, padded.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, buf_len, padded.n_kv_heads, hd), dtype),
+    }
+
+
+def gqa_cache_spec(arch: ArchConfig, padded: PaddedDims, batch: int,
+                   max_len: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    hd = arch.resolved_head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, max_len, padded.n_kv_heads, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, max_len, padded.n_kv_heads, hd), dtype),
+    }
+
+
+CACHE_AXES_GQA = {
+    "k": ("batch", "seq", "kv_heads", "head_dim"),
+    "v": ("batch", "seq", "kv_heads", "head_dim"),
+}
+
+
+def gqa_decode(p: Dict[str, Any], x: jax.Array, cache: Dict[str, Any],
+               cache_len: jax.Array, arch: ArchConfig, *,
+               window: Optional[int] = None,
+               ring: bool = False) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-token decode. x: (B, 1, d); cache_len: (B,) absolute positions.
+
+    ``ring=True`` (local-attention layers): the buffer holds exactly the
+    last ``buf`` tokens; the new entry lands at ``pos % buf`` and every
+    filled slot is valid (keys are roped at absolute positions, so slot
+    order is irrelevant to the attention math). Otherwise the buffer is
+    linear and the new entry lands at ``pos``.
+    """
+    q, k, v = _project_qkv(p, x, arch)
+    pos = cache_len[:, None]  # (B, 1) absolute position of the new token
+    if arch.rope == RopeKind.MROPE:
+        pos3 = jnp.broadcast_to(pos[..., None], pos.shape + (3,))
+        q, k = _positions_rope(arch, q, k, pos3, pos3)
+    else:
+        q, k = _positions_rope(arch, q, k, pos, pos)
+    # dynamic_update_slice needs a shared index; serving batches are
+    # position-aligned per wave, so use example 0's length (documented).
+    buf = cache["k"].shape[1]
+    idx = cache_len[0] % buf if ring else cache_len[0]
+    new_k = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+    if ring:
+        valid = jnp.minimum(cache_len + 1, buf)
+        out = decode_attention(q, new_k, new_v, valid, window=None,
+                               scale=arch.resolved_head_dim ** -0.5)
+    else:
+        out = decode_attention(q, new_k, new_v, cache_len + 1, window=window,
+                               scale=arch.resolved_head_dim ** -0.5)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": new_k, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3)
+# ---------------------------------------------------------------------------
+def mla_schema(arch: ArchConfig, padded: PaddedDims) -> Dict[str, Any]:
+    m = arch.mla
+    d, H = arch.d_model, padded.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": pdef((d, m.q_lora_rank), ("embed", "q_lora"), "scaled"),
+        "q_a_norm": pdef((m.q_lora_rank,), ("q_lora",), "ones"),
+        "wq_b": pdef((m.q_lora_rank, H, qk_head), ("q_lora", "heads", "head_dim"), "scaled"),
+        "wkv_a": pdef((d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed", "kv_lora"), "scaled"),
+        "kv_a_norm": pdef((m.kv_lora_rank,), ("kv_lora",), "ones"),
+        "wk_b": pdef((m.kv_lora_rank, H, m.qk_nope_head_dim), ("kv_lora", "heads", "head_dim"), "scaled"),
+        "wv_b": pdef((m.kv_lora_rank, H, m.v_head_dim), ("kv_lora", "heads", "head_dim"), "scaled"),
+        "wo": pdef((H, m.v_head_dim, d), ("heads", "head_dim", "embed"), "scaled"),
+    }
+
+
+def _mla_latent(p, x, arch):
+    """Shared latent path: returns (c_kv normed, k_rope roped-later)."""
+    m = arch.mla
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv, k_rope = kv[..., :m.kv_lora_rank], kv[..., m.kv_lora_rank:]
+    c_kv = rms_norm(c_kv, p["kv_a_norm"], arch.norm_eps)
+    return c_kv, k_rope
+
+
+def _mla_queries(p, x, arch):
+    m = arch.mla
+    cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+    cq = rms_norm(cq, p["q_a_norm"], arch.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])
+    return q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+
+
+def mla_forward(p: Dict[str, Any], x: jax.Array, arch: ArchConfig, *,
+                positions: jax.Array,
+                kernel_mode: Optional[str] = None) -> jax.Array:
+    """Train/prefill MLA: expand per-head K/V (matmul-friendly)."""
+    m = arch.mla
+    q_nope, q_rope = _mla_queries(p, x, arch)
+    c_kv, k_rope = _mla_latent(p, x, arch)
+    q_rope = apply_rope(q_rope, positions, arch.rope_theta)
+    k_rope = apply_rope(k_rope[..., None, :], positions, arch.rope_theta)  # 1 shared head
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"])
+    H = q_nope.shape[2]
+    k_rope_b = jnp.broadcast_to(k_rope, k_rope.shape[:2] + (H, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    # v is narrower than qk head dim; pad v to qk width then slice back (the
+    # kernel assumes uniform D) — zero columns are exact.
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_head - m.v_head_dim)))
+    out = flash_attention(q, k, v_pad, causal=True, scale=scale,
+                          mode=kernel_mode)[..., :m.v_head_dim]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_cache_spec(arch: ArchConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> Dict[str, Any]:
+    m = arch.mla
+    return {
+        "latent": jax.ShapeDtypeStruct(
+            (batch, max_len, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+    }
+
+
+CACHE_AXES_MLA = {"latent": ("batch", "seq", "kv_lora")}
+
+
+def mla_init_cache(arch: ArchConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> Dict[str, Any]:
+    m = arch.mla
+    return {"latent": jnp.zeros(
+        (batch, max_len, m.kv_lora_rank + m.qk_rope_head_dim), dtype)}
+
+
+def mla_decode(p: Dict[str, Any], x: jax.Array, cache: Dict[str, Any],
+               cache_len: jax.Array, arch: ArchConfig,
+               score_spec=None) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Absorbed-MLA decode: score and mix in the 512-d latent space.
+
+    Per head h:  logits = (q_nope[h] @ wk_b[:,h,:].T) . c_kv  +  q_rope . k_rope
+                 out[h] = (attn @ c_kv) @ wv_b[:,h,:]
+    Memory: O(S * kv_lora) cache, no per-head KV expansion.
+    """
+    m = arch.mla
+    q_nope, q_rope = _mla_queries(p, x, arch)      # (B,1,H,*)
+    c_new, kr_new = _mla_latent(p, x, arch)        # (B,1,r), (B,1,rope)
+    pos = cache_len[:, None]
+    q_rope = apply_rope(q_rope, pos, arch.rope_theta)
+    kr_new = apply_rope(kr_new[..., None, :], pos, arch.rope_theta)[..., 0, :]
+    new_entry = jnp.concatenate([c_new, kr_new], axis=-1)
+    latent = jax.lax.dynamic_update_slice(
+        cache["latent"], new_entry.astype(cache["latent"].dtype),
+        (0, cache_len[0], 0))
+    c_kv = latent[..., :m.kv_lora_rank]            # (B, S, r)
+    k_rope = latent[..., m.kv_lora_rank:]          # (B, S, rope)
+    # absorb wk_b into q: q_lat (B, H, r)
+    q_lat = jnp.einsum("bshk,rhk->bhr", q_nope, p["wk_b"])
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat, c_kv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bshk,btk->bhst", q_rope, k_rope,
+                      preferred_element_type=jnp.float32)[:, :, 0]) * scale
+    # the (B, H, S) score matrix is the decode working set: keep it sharded
+    # (batch x heads) or XLA may replicate ~TBs of it at deepseek scale
+    s = _constrain(s, score_spec)
+    tpos = jnp.arange(latent.shape[1])
+    valid = tpos[None, :] < (cache_len + 1)[:, None]
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    attn = jax.nn.softmax(s, axis=-1)
+    out_lat = jnp.einsum("bhs,bsr->bhr", attn,
+                         c_kv.astype(jnp.float32))   # (B, H, r)
+    out = jnp.einsum("bhr,rhk->bhk", out_lat, p["wv_b"].astype(jnp.float32))
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(jnp.float32))
+    return y[:, None, :].astype(x.dtype), {"latent": latent}

@@ -1,0 +1,135 @@
+"""Shared layer primitives: norms, activations, RoPE / M-RoPE, losses.
+
+Numerics policy: parameters and activations live in ``bfloat16``; every
+reduction that decides stability (norm denominators, softmax, logsumexp,
+router probabilities) is computed in ``float32`` and cast back.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9  # additive-mask value; safe in fp32 softmax accumulators
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * weight.astype(jnp.float32)).astype(dtype)
+
+
+def head_rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head qk-norm (qwen3): normalize the trailing head_dim."""
+    return rms_norm(x, weight, eps)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": functools.partial(jax.nn.gelu, approximate=True),
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array, act: str = "silu") -> jax.Array:
+    """Gated FFN used by every assigned dense architecture."""
+    f = activation(act)
+    h = f(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for the rotate-half RoPE convention (fp32)."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim // 2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Tuple[int, int, int] = (1, 1, 2)) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl): 3 position streams (t, h, w) rotate
+    disjoint sections of the head dimension.
+
+    x: (..., seq, heads, head_dim); positions: (..., seq, 3).
+    ``sections`` gives relative widths of the (t, h, w) frequency bands.
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    total = sum(sections)
+    widths = [half * s // total for s in sections]
+    widths[-1] = half - sum(widths[:-1])
+    inv_freq = rope_frequencies(head_dim, theta)
+    # build a per-frequency position by selecting the section's stream
+    section_id = jnp.concatenate([
+        jnp.full((w,), i, dtype=jnp.int32) for i, w in enumerate(widths)])
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        jnp.broadcast_to(section_id, positions.shape[:-1] + (half,)).astype(jnp.int32),
+        axis=-1)  # (..., seq, half): per-frequency position stream
+    angles = pos * inv_freq            # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]  # add heads axis
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab_size: int,
+                  z_loss: float = 0.0,
+                  mask: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Next-token CE over a (possibly padded) vocab dimension.
+
+    ``logits``: (..., V_padded) bf16; ``labels``: (...) int32 < vocab_size.
+    Padded vocab columns are masked additively before the fp32 logsumexp.
+    One-hot contraction (iota==label fusion) instead of gather keeps the
+    vocab dimension sharded under SPMD.
+    Returns (mean loss, mean z-term).
+    """
+    vpad = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vpad != vocab_size:
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(col < vocab_size, logits, NEG_INF)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, vpad, dtype=jnp.float32)
+    label_logit = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - label_logit
+    z = jnp.square(lse)
+    if mask is not None:
+        denom = jnp.maximum(mask.sum(), 1.0)
+        loss = jnp.sum(nll * mask) / denom
+        zterm = jnp.sum(z * mask) / denom
+    else:
+        loss = jnp.mean(nll)
+        zterm = jnp.mean(z)
+    return loss + z_loss * zterm, zterm

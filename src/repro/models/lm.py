@@ -1,0 +1,593 @@
+"""The decoder LM stack: one composable implementation, ten architectures.
+
+Families and their blocks:
+  dense  (yi-34b, qwen2-0.5b, qwen3-1.7b, granite-3-8b):  GQA + SwiGLU
+  moe    (phi3.5-moe):                                    GQA + MoE
+  moe+mla(deepseek-v3):            MLA + MoE(shared expert) + MTP head
+  hybrid (recurrentgemma-2b):      (RG-LRU, RG-LRU, local-attn) pattern + GeGLU
+  ssm    (rwkv6-7b):               time-mix + channel-mix (attention-free)
+  audio  (musicgen-large):         GQA over precomputed frame embeddings,
+                                   4 parallel codebook heads
+  vlm    (qwen2-vl-2b):            GQA + M-RoPE over [patch; text] stream
+
+Engineering choices that matter at scale:
+  * homogeneous layer stacks are *scanned* (stacked params, one layer HLO)
+    — compile time and HLO size stay O(1) in depth; remat wraps the body.
+  * all head counts / vocab sizes arrive TP-padded from core.config (exact
+    zero-padding — see PaddedDims docstring).
+  * sequence-parallel residual stream: optional sharding constraint
+    P(data, "model", None) between blocks.
+  * decode caches are stacked along layers and scanned jointly with params.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.config import (ArchConfig, AttentionKind, PaddedDims,
+                               RopeKind, ShapeConfig, StepKind)
+from repro.core.params import ParamDef, pdef
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.layers import cross_entropy, rms_norm, swiglu
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _stack_schema(schema: Dict[str, Any], n: int) -> Dict[str, Any]:
+    """Prepend a scanned 'layers' dimension to every ParamDef."""
+    def rec(node):
+        out = {}
+        for k, v in node.items():
+            if isinstance(v, ParamDef):
+                out[k] = pdef((n,) + v.shape, ("layers",) + v.axes, v.init,
+                              v.scale, v.dtype)
+            else:
+                out[k] = rec(v)
+        return out
+    return rec(schema)
+
+
+def _maybe_constrain(x: jax.Array, spec: Optional[P]) -> jax.Array:
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):  # no mesh context (CPU smoke tests)
+        return x
+
+
+def _mlp_schema(arch: ArchConfig, padded: PaddedDims,
+                d_ff: Optional[int] = None) -> Dict[str, Any]:
+    d = arch.d_model
+    f = d_ff if d_ff is not None else padded.d_ff
+    return {
+        "w_gate": pdef((d, f), ("embed", "ff"), "scaled"),
+        "w_up": pdef((d, f), ("embed", "ff"), "scaled"),
+        "w_down": pdef((f, d), ("ff", "embed"), "scaled"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+class LMModel:
+    """Pure-functional model: schema + apply functions, no owned state."""
+
+    def __init__(self, arch: ArchConfig, tp: int = 1, *,
+                 sequence_parallel: bool = False,
+                 data_axes: Tuple[str, ...] = ("data",),
+                 kernel_mode: Optional[str] = None,
+                 remat: str = "block", unroll_layers: bool = False,
+                 moe_mesh=None, expert_axes: Tuple[str, ...] = ("model",),
+                 cache_dtype=jnp.bfloat16):
+        self.arch = arch
+        self.tp = tp
+        self.padded = PaddedDims.for_tp(arch, tp)
+        self.kernel_mode = kernel_mode
+        self.remat = remat
+        # unroll_layers: python-loop the stack instead of lax.scan — used by
+        # the dry-run's cost calibration (XLA cost_analysis counts a scan
+        # body once; unrolled shallow variants let us recover per-layer cost)
+        self.unroll_layers = unroll_layers
+        # moe_mesh != None selects the shard_map expert-parallel dispatch
+        # (requires the SP token layout); decode always uses the gather path
+        self.moe_mesh = moe_mesh
+        self.expert_axes = expert_axes
+        self.cache_dtype = cache_dtype
+        dp = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+        self.sp_spec = P(dp, "model", None) if sequence_parallel else None
+        self.act_spec = P(dp, None, None)
+
+    # ------------------------------------------------------------------ --
+    # schema
+    # ----------------------------------------------------------------------
+    def _attn_schema(self) -> Dict[str, Any]:
+        if self.arch.attention == AttentionKind.MLA:
+            return attn_mod.mla_schema(self.arch, self.padded)
+        return attn_mod.gqa_schema(self.arch, self.padded)
+
+    def _layer_schema(self, kind: str) -> Dict[str, Any]:
+        arch, padded = self.arch, self.padded
+        d = arch.d_model
+        ln = lambda: pdef((d,), ("embed",), "ones")
+        if kind == "rwkv":
+            # channel-mix params (cm_*) live inside rwkv_schema
+            return {"ln1": ln(), "tm": rwkv_mod.rwkv_schema(arch),
+                    "ln2": ln()}
+        if kind == "rglru":
+            return {"ln1": ln(), "rglru": rglru_mod.rglru_schema(arch),
+                    "ln2": ln(), "mlp": _mlp_schema(arch, padded)}
+        if kind == "local_attn":
+            return {"ln1": ln(), "attn": self._attn_schema(),
+                    "ln2": ln(), "mlp": _mlp_schema(arch, padded)}
+        if kind == "moe":
+            expert_axis = "expert"
+            return {"ln1": ln(), "attn": self._attn_schema(),
+                    "ln2": ln(), "moe": moe_mod.moe_schema(arch, expert_axis)}
+        # dense (leading dense layers of an MoE stack may override d_ff)
+        d_ff = None
+        if arch.moe is not None and arch.moe.dense_d_ff is not None:
+            from repro.core.config import pad_to
+            d_ff = pad_to(arch.moe.dense_d_ff, self.tp)
+        return {"ln1": ln(), "attn": self._attn_schema(),
+                "ln2": ln(), "mlp": _mlp_schema(arch, padded, d_ff)}
+
+    def _layer_plan(self) -> Dict[str, Any]:
+        """Describe the layer stack: scanned groups + unrolled tails."""
+        arch = self.arch
+        L = arch.n_layers
+        if arch.family == "hybrid":
+            pat = arch.hybrid.pattern
+            n_super = L // len(pat)
+            tail = [pat[i % len(pat)] for i in range(n_super * len(pat), L)]
+            return {"kind": "hybrid", "n_super": n_super, "pattern": pat,
+                    "tail": tail}
+        if arch.moe is not None:
+            nd = arch.moe.n_dense_layers
+            return {"kind": "moe", "n_dense": nd, "n_moe": L - nd}
+        if arch.family == "ssm":
+            return {"kind": "rwkv", "n": L}
+        return {"kind": "dense", "n": L}
+
+    def schema(self) -> Dict[str, Any]:
+        arch, padded = self.arch, self.padded
+        d, Vp = arch.d_model, padded.vocab_size
+        s: Dict[str, Any] = {}
+        if arch.n_codebooks:
+            s["embed_codes"] = pdef((arch.n_codebooks, Vp, d),
+                                    (None, "vocab", "embed"))
+            s["head_codes"] = pdef((arch.n_codebooks, d, Vp),
+                                   (None, "embed", "vocab"), "scaled")
+        else:
+            s["embed"] = pdef((Vp, d), ("vocab", "embed"))
+            if not arch.tie_embeddings:
+                s["lm_head"] = pdef((d, Vp), ("embed", "vocab"), "scaled")
+        s["final_norm"] = pdef((d,), ("embed",), "ones")
+
+        plan = self._layer_plan()
+        if plan["kind"] == "hybrid":
+            super_schema = {f"sub{i}": self._layer_schema(k)
+                            for i, k in enumerate(plan["pattern"])}
+            s["blocks"] = _stack_schema(super_schema, plan["n_super"])
+            for i, k in enumerate(plan["tail"]):
+                s[f"tail{i}"] = self._layer_schema(k)
+        elif plan["kind"] == "moe":
+            if plan["n_dense"]:
+                s["dense_blocks"] = _stack_schema(
+                    self._layer_schema("dense"), plan["n_dense"])
+            s["blocks"] = _stack_schema(self._layer_schema("moe"),
+                                        plan["n_moe"])
+        elif plan["kind"] == "rwkv":
+            s["blocks"] = _stack_schema(self._layer_schema("rwkv"), plan["n"])
+        else:
+            s["blocks"] = _stack_schema(self._layer_schema("dense"), plan["n"])
+
+        if arch.mtp:
+            s["mtp"] = {
+                "proj": pdef((2 * d, d), (None, "embed"), "scaled"),
+                "norm_h": pdef((d,), ("embed",), "ones"),
+                "norm_e": pdef((d,), ("embed",), "ones"),
+                "layer": self._layer_schema("dense"),
+            }
+        return s
+
+    # ----------------------------------------------------------------------
+    # blocks (full sequence)
+    # ----------------------------------------------------------------------
+    def _block_fwd(self, kind: str, p: Dict[str, Any], x: jax.Array,
+                   positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Returns (x_out, aux_loss)."""
+        arch = self.arch
+        aux = jnp.zeros((), jnp.float32)
+        x = _maybe_constrain(x, self.sp_spec)
+        h = rms_norm(x, p["ln1"], arch.norm_eps)
+        if kind == "rwkv":
+            mix = rwkv_mod.time_mix_forward(p["tm"], h, arch, self.kernel_mode)
+        elif kind == "rglru":
+            mix = rglru_mod.rglru_forward(p["rglru"], h, arch, self.kernel_mode)
+        elif arch.attention == AttentionKind.MLA:
+            mix = attn_mod.mla_forward(p["attn"], h, arch, positions=positions,
+                                       kernel_mode=self.kernel_mode)
+        else:
+            window = arch.hybrid.window if (kind == "local_attn" and arch.hybrid) else None
+            mix = attn_mod.gqa_forward(p["attn"], h, arch, positions=positions,
+                                       window=window,
+                                       kernel_mode=self.kernel_mode)
+        x = x + mix
+        x = _maybe_constrain(x, self.sp_spec)
+        h = rms_norm(x, p["ln2"], arch.norm_eps)
+        if kind == "rwkv":
+            y = rwkv_mod.channel_mix_forward(p["tm"], h)
+        elif kind == "moe":
+            if self.moe_mesh is not None and self.sp_spec is not None:
+                y, aux = moe_mod.moe_forward_sharded(
+                    p["moe"], h, arch, mesh=self.moe_mesh,
+                    expert_axes=self.expert_axes, token_spec=self.sp_spec)
+                if arch.moe.n_shared_experts:
+                    y = y + moe_mod.shared_expert_forward(p["moe"], h, arch)
+            else:
+                y, aux = moe_mod.moe_forward(p["moe"], h, arch)
+        else:
+            y = swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                       p["mlp"]["w_down"], arch.act)
+        # constrain the block OUTPUT too: the scan carry (= saved remat
+        # residual) must live sequence-sharded, not gathered — this is what
+        # keeps 60-layer residual storage at 1/TP of the naive footprint
+        return _maybe_constrain(x + y, self.sp_spec), aux
+
+    def _scan_blocks(self, blocks: Dict[str, Any], x: jax.Array,
+                     positions: jax.Array, kind: str) -> Tuple[jax.Array, jax.Array]:
+        def body(carry, lp):
+            x, aux = carry
+            x, a = self._block_fwd(kind, lp, x, positions)
+            return (x, aux + a), None
+        if self.remat != "none":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        init = (x, jnp.zeros((), jnp.float32))
+        if self.unroll_layers:
+            n = jax.tree.leaves(blocks)[0].shape[0]
+            carry = init
+            for i in range(n):
+                carry, _ = body(carry, jax.tree.map(lambda p: p[i], blocks))
+            return carry
+        (x, aux), _ = jax.lax.scan(body, init, blocks)
+        return x, aux
+
+    def _scan_hybrid(self, blocks: Dict[str, Any], x, positions, pattern):
+        def body(carry, lp):
+            x, aux = carry
+            for i, kind in enumerate(pattern):
+                x, a = self._block_fwd(kind, lp[f"sub{i}"], x, positions)
+                aux = aux + a
+            return (x, aux), None
+        if self.remat != "none":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        init = (x, jnp.zeros((), jnp.float32))
+        if self.unroll_layers:
+            n = jax.tree.leaves(blocks)[0].shape[0]
+            carry = init
+            for i in range(n):
+                carry, _ = body(carry, jax.tree.map(lambda p: p[i], blocks))
+            return carry
+        (x, aux), _ = jax.lax.scan(body, init, blocks)
+        return x, aux
+
+    # ----------------------------------------------------------------------
+    # embedding / head
+    # ----------------------------------------------------------------------
+    def _embed(self, params: Dict[str, Any], batch: Dict[str, Any]) -> jax.Array:
+        arch = self.arch
+        if arch.n_codebooks:
+            # audio stub: precomputed frame embeddings (EnCodec frontend)
+            return batch["embeds"]
+        tok = jnp.take(params["embed"], batch["tokens"], axis=0)
+        if arch.vlm and "patch_embeds" in batch:
+            tok = jnp.concatenate(
+                [batch["patch_embeds"].astype(tok.dtype), tok], axis=1)
+        if arch.family == "hybrid":
+            tok = tok * jnp.asarray(arch.d_model ** 0.5, tok.dtype)
+        return tok
+
+    def _positions(self, batch: Dict[str, Any], seq_len: int) -> jax.Array:
+        arch = self.arch
+        if arch.rope == RopeKind.MROPE:
+            if "patch_pos" in batch:
+                B, Ptch = batch["patch_pos"].shape[:2]
+                n_text = seq_len - Ptch
+                t = Ptch + jnp.arange(n_text)
+                text_pos = jnp.broadcast_to(t[None, :, None], (B, n_text, 3))
+                return jnp.concatenate(
+                    [batch["patch_pos"], text_pos], axis=1).astype(jnp.int32)
+            B = batch["tokens"].shape[0]
+            t = jnp.arange(seq_len)
+            return jnp.broadcast_to(t[None, :, None], (B, seq_len, 3)).astype(jnp.int32)
+        return jnp.arange(seq_len)
+
+    def _head(self, params: Dict[str, Any], x: jax.Array) -> jax.Array:
+        arch = self.arch
+        x = rms_norm(x, params["final_norm"], arch.norm_eps)
+        if arch.n_codebooks:
+            return jnp.einsum("bsd,cdv->bscv", x, params["head_codes"])
+        if arch.tie_embeddings:
+            return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+        return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+    # ----------------------------------------------------------------------
+    # full forward
+    # ----------------------------------------------------------------------
+    def forward(self, params: Dict[str, Any], batch: Dict[str, Any]
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Full-sequence pass -> (logits, hidden, aux_loss)."""
+        arch = self.arch
+        x = self._embed(params, batch)
+        x = _maybe_constrain(x, self.act_spec)
+        S = x.shape[1]
+        positions = self._positions(batch, S)
+        plan = self._layer_plan()
+        aux = jnp.zeros((), jnp.float32)
+        if plan["kind"] == "hybrid":
+            x, aux = self._scan_hybrid(params["blocks"], x, positions,
+                                       plan["pattern"])
+            for i, kind in enumerate(plan["tail"]):
+                x, a = self._block_fwd(kind, params[f"tail{i}"], x, positions)
+                aux = aux + a
+        elif plan["kind"] == "moe":
+            if plan["n_dense"]:
+                x, a = self._scan_blocks(params["dense_blocks"], x, positions,
+                                         "dense")
+                aux = aux + a
+            x, a = self._scan_blocks(params["blocks"], x, positions, "moe")
+            aux = aux + a
+        elif plan["kind"] == "rwkv":
+            x, aux = self._scan_blocks(params["blocks"], x, positions, "rwkv")
+        else:
+            x, aux = self._scan_blocks(params["blocks"], x, positions, "dense")
+        logits = self._head(params, x)
+        return logits, x, aux
+
+    # ----------------------------------------------------------------------
+    # losses
+    # ----------------------------------------------------------------------
+    def loss_fn(self, params: Dict[str, Any], batch: Dict[str, Any],
+                z_loss: float = 0.0) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        arch = self.arch
+        logits, hidden, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        if arch.n_codebooks:
+            # (B, S, C, V) vs (B, S, C)
+            loss, z = cross_entropy(logits, labels, arch.vocab_size, z_loss)
+        elif arch.vlm and "patch_embeds" in batch:
+            n_text = labels.shape[1]
+            text_logits = logits[:, -n_text:]
+            loss, z = cross_entropy(text_logits, labels, arch.vocab_size, z_loss)
+        else:
+            loss, z = cross_entropy(logits, labels, arch.vocab_size, z_loss)
+        metrics = {"ce": loss, "aux": aux, "z": z}
+        total = loss + aux
+        if arch.mtp:
+            mtp_loss = self._mtp_loss(params, hidden, batch)
+            metrics["mtp"] = mtp_loss
+            total = total + 0.3 * mtp_loss
+        return total, metrics
+
+    def _mtp_loss(self, params: Dict[str, Any], hidden: jax.Array,
+                  batch: Dict[str, Any]) -> jax.Array:
+        """DeepSeek multi-token prediction: predict labels[t+1] (= token t+2)
+        from [norm(h_t) ; norm(embed(labels_t))] through one extra block."""
+        arch = self.arch
+        p = params["mtp"]
+        labels = batch["labels"]
+        e_next = jnp.take(params["embed"], labels, axis=0)
+        h = rms_norm(hidden, p["norm_h"], arch.norm_eps)
+        e = rms_norm(e_next, p["norm_e"], arch.norm_eps)
+        comb = jnp.concatenate([h[:, :-1], e[:, :-1]], axis=-1) @ p["proj"]
+        positions = jnp.arange(comb.shape[1])
+        comb, _ = self._block_fwd("dense", p["layer"], comb, positions)
+        logits = self._head(params, comb)
+        loss, _ = cross_entropy(logits, labels[:, 1:], arch.vocab_size)
+        return loss
+
+    # ----------------------------------------------------------------------
+    # KV / state caches
+    # ----------------------------------------------------------------------
+    def _layer_cache_spec(self, kind: str, batch: int, cap: int):
+        arch, padded = self.arch, self.padded
+        if kind == "rwkv":
+            return rwkv_mod.rwkv_cache_spec(arch, batch, self.cache_dtype)
+        if kind == "rglru":
+            return rglru_mod.rglru_cache_spec(arch, batch, self.cache_dtype)
+        if arch.attention == AttentionKind.MLA:
+            return attn_mod.mla_cache_spec(arch, batch, cap, self.cache_dtype)
+        if kind == "local_attn":
+            cap = min(cap, arch.hybrid.window)
+        return attn_mod.gqa_cache_spec(arch, padded, batch, cap,
+                                       self.cache_dtype)
+
+    def _layer_cache_axes(self, kind: str):
+        arch = self.arch
+        if kind == "rwkv":
+            return rwkv_mod.CACHE_AXES_RWKV
+        if kind == "rglru":
+            return rglru_mod.CACHE_AXES_RGLRU
+        if arch.attention == AttentionKind.MLA:
+            return attn_mod.CACHE_AXES_MLA
+        return attn_mod.CACHE_AXES_GQA
+
+    def _stack_struct(self, spec, n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), spec,
+            is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))
+
+    def cache_spec(self, batch: int, cap: int) -> Dict[str, Any]:
+        plan = self._layer_plan()
+        out: Dict[str, Any] = {"len": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+        if plan["kind"] == "hybrid":
+            super_spec = {f"sub{i}": self._layer_cache_spec(k, batch, cap)
+                          for i, k in enumerate(plan["pattern"])}
+            out["blocks"] = self._stack_struct(super_spec, plan["n_super"])
+            for i, k in enumerate(plan["tail"]):
+                out[f"tail{i}"] = self._layer_cache_spec(k, batch, cap)
+        elif plan["kind"] == "moe":
+            if plan["n_dense"]:
+                out["dense_blocks"] = self._stack_struct(
+                    self._layer_cache_spec("dense", batch, cap), plan["n_dense"])
+            out["blocks"] = self._stack_struct(
+                self._layer_cache_spec("moe", batch, cap), plan["n_moe"])
+        elif plan["kind"] == "rwkv":
+            out["blocks"] = self._stack_struct(
+                self._layer_cache_spec("rwkv", batch, cap), plan["n"])
+        else:
+            out["blocks"] = self._stack_struct(
+                self._layer_cache_spec("dense", batch, cap), plan["n"])
+        return out
+
+    def cache_axes(self) -> Dict[str, Any]:
+        plan = self._layer_plan()
+        def stacked(axes_map):
+            return {k: ("layers",) + v for k, v in axes_map.items()}
+        out: Dict[str, Any] = {"len": (None,)}
+        if plan["kind"] == "hybrid":
+            out["blocks"] = {f"sub{i}": stacked(self._layer_cache_axes(k))
+                             for i, k in enumerate(plan["pattern"])}
+            for i, k in enumerate(plan["tail"]):
+                out[f"tail{i}"] = self._layer_cache_axes(k)
+        elif plan["kind"] == "moe":
+            if plan["n_dense"]:
+                out["dense_blocks"] = stacked(self._layer_cache_axes("dense"))
+            out["blocks"] = stacked(self._layer_cache_axes("moe"))
+        else:
+            out["blocks"] = stacked(self._layer_cache_axes(plan["kind"]))
+        return out
+
+    def init_cache(self, batch: int, cap: int, fill_len: int = 0) -> Dict[str, Any]:
+        spec = self.cache_spec(batch, cap)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec,
+                             is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))
+        cache["len"] = jnp.full((batch,), fill_len, jnp.int32)
+        return cache
+
+    # ----------------------------------------------------------------------
+    # decode
+    # ----------------------------------------------------------------------
+    def _block_decode(self, kind: str, p, x, cache, cache_len):
+        arch = self.arch
+        x_in = x
+        h = rms_norm(x, p["ln1"], arch.norm_eps)
+        if kind == "rwkv":
+            mix, cache = rwkv_mod.time_mix_decode(p["tm"], h, cache, arch)
+        elif kind == "rglru":
+            mix, cache = rglru_mod.rglru_decode(p["rglru"], h, cache, arch)
+        elif arch.attention == AttentionKind.MLA:
+            dp = self.act_spec[0] if self.act_spec is not None else None
+            mix, cache = attn_mod.mla_decode(
+                p["attn"], h, cache, cache_len, arch,
+                score_spec=P(dp, "model", None))
+        elif kind == "local_attn":
+            # window-sized ring buffer: constant memory in context length
+            mix, cache = attn_mod.gqa_decode(p["attn"], h, cache, cache_len,
+                                             arch, ring=True)
+        else:
+            mix, cache = attn_mod.gqa_decode(p["attn"], h, cache, cache_len,
+                                             arch, window=None)
+        x = x_in + mix
+        h = rms_norm(x, p["ln2"], arch.norm_eps)
+        if kind == "rwkv":
+            y, cache = rwkv_mod.channel_mix_decode(p["tm"], h, cache)
+        elif kind == "moe":
+            y, _ = moe_mod.moe_forward(p["moe"], h, arch)
+        else:
+            y = swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                       p["mlp"]["w_down"], arch.act)
+        return x + y, cache
+
+    def decode_step(self, params: Dict[str, Any], cache: Dict[str, Any],
+                    batch: Dict[str, Any]) -> Tuple[jax.Array, Dict[str, Any]]:
+        """One-token serve step. batch['tokens']: (B, 1) (or embeds)."""
+        arch = self.arch
+        cache_len = cache["len"]
+        if arch.n_codebooks:
+            if "embeds" in batch:
+                x = batch["embeds"]
+            else:  # (B, 1, C) codes -> summed codebook embeddings
+                codes = batch["codes"]
+                x = jnp.einsum("bscd->bsd", jnp.stack([
+                    jnp.take(params["embed_codes"][c], codes[..., c], axis=0)
+                    for c in range(arch.n_codebooks)], axis=2))
+        else:
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+            if arch.family == "hybrid":
+                x = x * jnp.asarray(arch.d_model ** 0.5, x.dtype)
+
+        plan = self._layer_plan()
+        new_cache: Dict[str, Any] = {"len": cache_len + 1}
+
+        def scan_or_unroll(body, x, xs):
+            if not self.unroll_layers:
+                return jax.lax.scan(body, x, xs)
+            n = jax.tree.leaves(xs)[0].shape[0]
+            outs = []
+            for i in range(n):
+                x, o = body(x, jax.tree.map(lambda p: p[i], xs))
+                outs.append(o)
+            stacked = jax.tree.map(lambda *ys: jnp.stack(ys), *outs)
+            return x, stacked
+
+        if plan["kind"] == "hybrid":
+            def body(carry, xs):
+                x = carry
+                lp, lc = xs
+                out_c = {}
+                for i, kind in enumerate(plan["pattern"]):
+                    x, out_c[f"sub{i}"] = self._block_decode(
+                        kind, lp[f"sub{i}"], x, lc[f"sub{i}"], cache_len)
+                return x, out_c
+            x, nc = scan_or_unroll(body, x, (params["blocks"], cache["blocks"]))
+            new_cache["blocks"] = nc
+            for i, kind in enumerate(plan["tail"]):
+                x, c = self._block_decode(kind, params[f"tail{i}"], x,
+                                          cache[f"tail{i}"], cache_len)
+                new_cache[f"tail{i}"] = c
+        else:
+            groups = []
+            if plan["kind"] == "moe" and plan["n_dense"]:
+                groups.append(("dense_blocks", "dense"))
+            groups.append(("blocks", {"moe": "moe", "rwkv": "rwkv",
+                                      "dense": "dense"}[plan["kind"]]))
+            for key, kind in groups:
+                def body(carry, xs, kind=kind):
+                    x = carry
+                    lp, lc = xs
+                    x, c = self._block_decode(kind, lp, x, lc, cache_len)
+                    return x, c
+                x, nc = scan_or_unroll(body, x, (params[key], cache[key]))
+                new_cache[key] = nc
+
+        logits = self._head(params, x)
+        return logits, new_cache
+
+    # ----------------------------------------------------------------------
+    # prefill: full pass that also fills the cache (GQA/MLA only for now;
+    # recurrent families fill via their scan final states)
+    # ----------------------------------------------------------------------
+    def prefill(self, params: Dict[str, Any], batch: Dict[str, Any]
+                ) -> Tuple[jax.Array, jax.Array]:
+        """Returns (last-token logits, aux). Cache extraction for serving is
+        handled by runtime.serve_loop (which re-runs blocks capturing K/V);
+        the dry-run prefill cell lowers this full forward."""
+        logits, _, aux = self.forward(params, batch)
+        return logits[:, -1:], aux
+
+
+def build_model(arch: ArchConfig, tp: int = 1, **kw) -> LMModel:
+    return LMModel(arch, tp, **kw)

@@ -1,0 +1,120 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block structure (the "recurrent block" of Griffin):
+    y_branch = GeLU(W_y x)
+    r_branch = W_x x -> causal conv1d(width 4) -> RG-LRU -> h
+    out      = W_o (y_branch * h)
+
+RG-LRU recurrence (all elementwise over d_rnn):
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_i x_t + b_i)            input gate
+    log_a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    a_t = exp(log_a_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is a linear scan h_t = a_t h_{t-1} + b_t: training/prefill use
+``jax.lax.associative_scan`` (parallel prefix — sub-quadratic and TPU
+friendly; the Pallas chunked kernel in kernels/rglru_scan is the fused
+version). Decode is a single fused elementwise step on O(d_rnn) state.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ArchConfig
+from repro.core.params import pdef
+from repro.kernels.rglru_scan import linear_scan
+
+_C = 8.0
+
+
+def rglru_schema(arch: ArchConfig) -> Dict[str, Any]:
+    h = arch.hybrid
+    d = arch.d_model
+    dr = h.d_rnn or d
+    return {
+        "w_y": pdef((d, dr), ("embed", "d_rnn"), "scaled"),
+        "w_x": pdef((d, dr), ("embed", "d_rnn"), "scaled"),
+        "w_o": pdef((dr, d), ("d_rnn", "embed"), "scaled"),
+        "conv_w": pdef((h.conv_width, dr), (None, "d_rnn"), "scaled", 0.1),
+        "conv_b": pdef((dr,), ("d_rnn",), "zeros"),
+        "w_a": pdef((dr,), ("d_rnn",), "scaled", 0.1),
+        "b_a": pdef((dr,), ("d_rnn",), "zeros"),
+        "w_i": pdef((dr,), ("d_rnn",), "scaled", 0.1),
+        "b_i": pdef((dr,), ("d_rnn",), "zeros"),
+        "lam": pdef((dr,), ("d_rnn",), "uniform", 1.0),
+    }
+
+
+def _gates(p, u):
+    """u: (..., d_rnn) conv output. Returns (a, b) of the linear recurrence."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * p["w_a"].astype(jnp.float32) + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf * p["w_i"].astype(jnp.float32) + p["b_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * uf)
+    return a, b
+
+
+def _causal_conv(p, x, conv_state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d. x: (B, S, dr). Returns (out, new_state)."""
+    w = p["conv_w"].astype(jnp.float32)         # (W, dr)
+    W = w.shape[0]
+    xf = x.astype(jnp.float32)
+    if conv_state is not None:                   # decode: state (B, W-1, dr)
+        ctx = jnp.concatenate([conv_state.astype(jnp.float32), xf], axis=1)
+        out = (ctx * w[None]).sum(axis=1, keepdims=True)
+        return (out + p["conv_b"].astype(jnp.float32)).astype(x.dtype), \
+            ctx[:, 1:].astype(x.dtype)
+    pad = jnp.pad(xf, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return (out + p["conv_b"].astype(jnp.float32)).astype(x.dtype), None
+
+
+def rglru_forward(p: Dict[str, Any], x: jax.Array, arch: ArchConfig,
+                  kernel_mode: Optional[str] = None) -> jax.Array:
+    """Full-sequence pass. x: (B, S, d)."""
+    y = jax.nn.gelu(x @ p["w_y"])
+    u = x @ p["w_x"]
+    u, _ = _causal_conv(p, u)
+    a, b = _gates(p, u)
+    h = linear_scan(a, b, mode=kernel_mode)      # (B, S, dr) fp32
+    return (y * h.astype(y.dtype)) @ p["w_o"]
+
+
+def rglru_cache_spec(arch: ArchConfig, batch: int,
+                     dtype=jnp.bfloat16) -> Dict[str, Any]:
+    h = arch.hybrid
+    dr = h.d_rnn or arch.d_model
+    return {
+        "h": jax.ShapeDtypeStruct((batch, dr), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, h.conv_width - 1, dr), dtype),
+    }
+
+
+CACHE_AXES_RGLRU = {"h": ("batch", "d_rnn"), "conv": ("batch", None, "d_rnn")}
+
+
+def rglru_init_cache(arch: ArchConfig, batch: int,
+                     dtype=jnp.bfloat16) -> Dict[str, Any]:
+    h = arch.hybrid
+    dr = h.d_rnn or arch.d_model
+    return {"h": jnp.zeros((batch, dr), jnp.float32),
+            "conv": jnp.zeros((batch, h.conv_width - 1, dr), dtype)}
+
+
+def rglru_decode(p: Dict[str, Any], x: jax.Array, cache: Dict[str, Any],
+                 arch: ArchConfig) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-step decode. x: (B, 1, d). State is O(d_rnn) — constant in context
+    length, which is what makes long_500k serveable for this family."""
+    y = jax.nn.gelu(x @ p["w_y"])
+    u = x @ p["w_x"]
+    u, conv_state = _causal_conv(p, u, cache["conv"])
+    a, b = _gates(p, u)                          # (B, 1, dr)
+    h_new = a[:, 0] * cache["h"] + b[:, 0]
+    out = (y * h_new[:, None].astype(y.dtype)) @ p["w_o"]
+    return out, {"h": h_new, "conv": conv_state}

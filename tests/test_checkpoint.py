@@ -1,0 +1,63 @@
+"""Checkpointing: roundtrip, atomicity, async, retention, FT restore."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.optim import adamw
+from repro.core.config import TrainConfig
+
+
+def _tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                  "d": jnp.asarray(3, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 5, t)
+    assert latest_step(str(tmp_path)) == 5
+    back = restore(str(tmp_path), 5, t)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a, np.float32), np.asarray(b, np.float32)), t, back)
+
+
+def test_namedtuple_state_roundtrip(tmp_path):
+    params = {"w": jnp.ones((3, 3))}
+    state = adamw.init(params, TrainConfig())
+    save(str(tmp_path), 1, (params, state))
+    params2, state2 = restore(str(tmp_path), 1, (params, state))
+    assert isinstance(state2, adamw.AdamWState)
+    np.testing.assert_array_equal(np.asarray(state.mu["w"]),
+                                  np.asarray(state2.mu["w"]))
+
+
+def test_uncommitted_ignored(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 1, t)
+    # fake a torn write
+    torn = tmp_path / "step_00000002"
+    torn.mkdir()
+    (torn / "index.json").write_text("{}")
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_retention_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, t)
+    mgr.wait()
+    mgr._gc()
+    kept = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+    assert len(kept) == 2
+    assert latest_step(str(tmp_path)) == 4
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore(str(tmp_path), 9, _tree())

@@ -1,0 +1,65 @@
+"""Decode-vs-forward parity: stepping token-by-token through the cache must
+reproduce the full-sequence forward logits. This pins down the KV-cache
+update, rope offsets, ring buffers, the MLA absorbed decode (vs the
+expanded train path), and the recurrent state updates."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.reduced import REDUCED
+from repro.core.params import init_params
+from repro.models.lm import LMModel
+
+KEY = jax.random.PRNGKey(1)
+B, S = 2, 12
+
+PARITY_ARCHS = ["qwen2-0.5b", "qwen3-1.7b", "granite-3-8b", "yi-34b",
+                "deepseek-v3", "rwkv6-7b", "phi3.5-moe", "recurrentgemma-2b"]
+
+
+@pytest.mark.parametrize("name", PARITY_ARCHS)
+def test_decode_matches_forward(name):
+    arch = REDUCED[name]
+    model = LMModel(arch, tp=1, remat="none", cache_dtype=jnp.float32)
+    params = init_params(model.schema(), KEY, jnp.float32)
+    rng = np.random.RandomState(7)
+    tokens = jnp.asarray(rng.randint(1, arch.vocab_size, (B, S)), jnp.int32)
+
+    full_logits, _, _ = model.forward(
+        params, {"tokens": tokens, "labels": tokens})
+
+    cache = model.init_cache(B, S + 4, fill_len=0)
+    step_logits = []
+    for t in range(S):
+        logits, cache = model.decode_step(params, cache,
+                                          {"tokens": tokens[:, t:t + 1]})
+        step_logits.append(logits[:, 0])
+    got = jnp.stack(step_logits, axis=1)
+
+    # MTP heads only affect training loss; logits must still agree.
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_local_attention_ring_buffer():
+    """Hybrid arch: decode far past the window must equal a forward pass
+    (window masking == ring buffer of the last `window` tokens)."""
+    arch = REDUCED["recurrentgemma-2b"]
+    model = LMModel(arch, tp=1, remat="none", cache_dtype=jnp.float32)
+    params = init_params(model.schema(), KEY, jnp.float32)
+    rng = np.random.RandomState(9)
+    S_long = arch.hybrid.window * 2 + 3   # decode beyond the window
+    tokens = jnp.asarray(rng.randint(1, arch.vocab_size, (B, S_long)),
+                         jnp.int32)
+    full_logits, _, _ = model.forward(
+        params, {"tokens": tokens, "labels": tokens})
+    cache = model.init_cache(B, S_long + 1, fill_len=0)
+    logits = None
+    for t in range(S_long):
+        logits, cache = model.decode_step(params, cache,
+                                          {"tokens": tokens[:, t:t + 1]})
+    np.testing.assert_allclose(np.asarray(logits[:, 0], np.float32),
+                               np.asarray(full_logits[:, -1], np.float32),
+                               atol=2e-3, rtol=2e-3)

@@ -1,0 +1,69 @@
+"""Optimizer: convergence, schedules, grad compression roundtrip."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.config import TrainConfig
+from repro.optim import adamw, schedules
+from repro.optim.compression import dequantize_int8, quantize_int8
+
+
+def test_adamw_converges_quadratic():
+    cfg = TrainConfig(learning_rate=0.1, weight_decay=0.0, grad_clip=0)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = adamw.init(params, cfg)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for _ in range(200):
+        grads = jax.grad(loss)(params)
+        params, state, _ = adamw.update(grads, state, params,
+                                        jnp.asarray(0.05), cfg)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_bf16_moments_still_converge():
+    cfg = TrainConfig(moment_dtype="bfloat16", weight_decay=0.0, grad_clip=0)
+    target = jnp.asarray([0.5, -0.5])
+    params = {"w": jnp.zeros(2)}
+    state = adamw.init(params, cfg)
+    assert state.mu["w"].dtype == jnp.bfloat16
+    for _ in range(300):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, state, _ = adamw.update(grads, state, params,
+                                        jnp.asarray(0.03), cfg)
+    assert float(jnp.abs(params["w"] - target).max()) < 0.05
+
+
+def test_grad_clip_metric():
+    cfg = TrainConfig(grad_clip=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw.init(params, cfg)
+    grads = {"w": jnp.full((4,), 100.0)}
+    _, _, metrics = adamw.update(grads, state, params, jnp.asarray(1e-3), cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+    assert float(metrics["clip"]) < 0.01
+
+
+def test_warmup_cosine_shape():
+    steps = jnp.arange(0, 1000)
+    lr = schedules.warmup_cosine(steps, peak_lr=1.0, warmup_steps=100,
+                                 total_steps=1000)
+    assert float(lr[0]) == 0.0
+    assert float(lr[99]) <= 1.0
+    assert float(lr[100]) == pytest.approx(1.0, abs=0.02)
+    assert float(lr[-1]) >= 0.1 - 1e-3         # min_ratio floor
+    assert (np.diff(np.asarray(lr[100:])) <= 1e-6).all()  # monotone decay
+
+
+@pytest.mark.parametrize("shape", [(17,), (256,), (3, 100)])
+def test_quantize_roundtrip(rng, shape):
+    x = jnp.asarray(rng.randn(*shape) * 5, jnp.float32)
+    q, s = quantize_int8(x, block=64)
+    back = dequantize_int8(q.astype(jnp.float32), s, shape, block=64)
+    # error bounded by scale/2 per element
+    max_scale = float(s.max())
+    assert float(jnp.abs(back - x).max()) <= max_scale * 0.51 + 1e-6

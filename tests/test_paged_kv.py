@@ -1,0 +1,65 @@
+"""Paged KV-cache manager: page accounting, THP-knob fragmentation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import AllocatorKind
+from repro.memory.paged_kv import PagedKVManager, gather_sequence
+
+
+def test_page_accounting():
+    mgr = PagedKVManager(n_pages=32, page_tokens=16, page_bytes=4096)
+    mgr.add_sequence(0)
+    assert mgr.append_tokens(0, 17)          # needs 2 pages
+    st = mgr.sequences[0]
+    assert len(st.pages) == 2
+    assert mgr.append_tokens(0, 15)          # exactly fills page 2
+    assert len(st.pages) == 2
+    assert mgr.append_tokens(0, 1)           # spills to page 3
+    assert len(st.pages) == 3
+    mgr.release_sequence(0)
+    assert mgr.allocator_stats.live_reserved == 0
+
+
+def test_capacity_exhaustion_and_reuse():
+    mgr = PagedKVManager(n_pages=4, page_tokens=8, page_bytes=4096)
+    mgr.add_sequence(0)
+    assert mgr.append_tokens(0, 32)          # all 4 pages
+    mgr.add_sequence(1)
+    assert not mgr.append_tokens(1, 8)       # exhausted
+    mgr.release_sequence(0)
+    assert mgr.append_tokens(1, 8)           # reuse after release
+
+
+@pytest.mark.parametrize("page_tokens,expect_more_frag",
+                         [(64, True), (8, False)])
+def test_thp_fragmentation_tradeoff(page_tokens, expect_more_frag):
+    """Paper 3.4.1: big pages waste memory on short sequences."""
+    mgr = PagedKVManager(n_pages=256, page_tokens=page_tokens,
+                         page_bytes=4096)
+    for i in range(16):
+        mgr.add_sequence(i)
+        assert mgr.append_tokens(i, 9)       # short sequences
+    frag = mgr.fragmentation_ratio()
+    if expect_more_frag:
+        assert frag > 4.0                    # 64-token pages for 9 tokens
+    else:
+        assert frag < 2.0
+
+
+def test_gather_sequence():
+    pool = jnp.arange(8 * 4 * 2, dtype=jnp.float32).reshape(8, 4, 2)
+    table = jnp.asarray([3, 1, -1, -1], jnp.int32)
+    out = np.asarray(gather_sequence(pool, table, jnp.asarray(6)))
+    np.testing.assert_allclose(out[:4], np.asarray(pool[3]))
+    np.testing.assert_allclose(out[4:6], np.asarray(pool[1][:2]))
+    assert (out[6:] == 0).all()
+
+
+def test_page_ids_within_pool():
+    """Page ids must index the device pool even with size-class rounding."""
+    mgr = PagedKVManager(n_pages=64, page_tokens=16, page_bytes=100)  # odd
+    for i in range(8):
+        mgr.add_sequence(i)
+        assert mgr.append_tokens(i, 64)
+        assert all(0 <= p < 64 for p in mgr.sequences[i].pages)

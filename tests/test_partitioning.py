@@ -1,0 +1,67 @@
+"""Partitioning engine + padding invariants (hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.core.config import ArchConfig, PaddedDims, pad_to
+from repro.core.topology import TorusTopology
+from repro.core.meshes import layout_report
+
+
+def test_pad_to():
+    assert pad_to(56, 16) == 64
+    assert pad_to(64, 16) == 64
+    assert pad_to(1, 128) == 128
+    with pytest.raises(ValueError):
+        pad_to(5, 0)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_padded_dims_all_archs(name):
+    """Every assigned arch must pad cleanly for the production TP=16."""
+    arch = ARCHS[name]
+    pd = PaddedDims.for_tp(arch, 16)
+    assert pd.n_heads % 16 == 0
+    assert pd.n_heads >= arch.n_heads
+    if arch.n_kv_heads:
+        assert pd.n_kv_heads % 16 == 0
+        assert pd.n_heads % pd.n_kv_heads == 0   # intact GQA grouping
+    assert pd.vocab_size % 128 == 0
+    assert pd.vocab_size >= arch.vocab_size
+    assert pd.d_ff % 16 == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(heads=st.integers(1, 128), kv=st.integers(1, 32),
+       tp=st.sampled_from([1, 2, 4, 8, 16]))
+def test_padding_property(heads, kv, tp):
+    kv = min(kv, heads)
+    arch = ArchConfig(name="t", family="dense", n_layers=1, d_model=64,
+                      n_heads=heads, n_kv_heads=kv, d_ff=64, vocab_size=100)
+    pd = PaddedDims.for_tp(arch, tp)
+    assert pd.n_heads % tp == 0
+    assert pd.n_kv_heads % tp == 0
+    assert pd.n_heads >= heads
+    assert pd.n_kv_heads >= kv
+    assert pd.n_heads % pd.n_kv_heads == 0
+
+
+def test_layout_hops():
+    """NONE (OS-default analogue) must dilate ring hops; affinitized
+    layouts ride physical rings (paper Fig 3/Table 2)."""
+    rep = layout_report(TorusTopology(n_pods=1))
+    assert rep["sparse"]["data"] == 1.0
+    assert rep["dense"]["model"] == 1.0
+    assert rep["none"]["data"] > 4.0
+    assert rep["none"]["model"] > 4.0
+
+
+def test_relative_latency_table():
+    """Mirrors the paper's Table 3 latency tiers (local < 1 hop < 2 hop)."""
+    topo = TorusTopology(n_pods=2)
+    assert topo.relative_latency(0, 0) == 1.0
+    near = topo.relative_latency(0, 1)
+    far = topo.relative_latency(0, 8 * 16 + 8)   # across the pod
+    cross = topo.relative_latency(0, topo.chips_per_pod)  # other pod
+    assert 1.0 < near < far < cross

@@ -1,0 +1,93 @@
+"""Runtime: FT train loop (restart drill), straggler detection, elastic
+mesh math, serving loop under page pressure."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.reduced import REDUCED
+from repro.core.config import LM_SHAPES, RunConfig, TrainConfig
+from repro.core.params import init_params
+from repro.models.lm import LMModel
+from repro.runtime import (ContinuousBatcher, FailureInjector, Request,
+                           StragglerDetector, elastic_mesh_shape, train)
+from repro.runtime.ft import surviving_devices
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    arch = REDUCED["qwen2-0.5b"]
+    return arch, LMModel(arch, tp=1, remat="none")
+
+
+def test_train_loss_decreases(small_model):
+    arch, model = small_model
+    cfg = RunConfig(arch=arch, shape=LM_SHAPES["train_4k"],
+                    train=TrainConfig(learning_rate=3e-3, warmup_steps=2))
+    res = train(model, cfg, n_steps=12, batch=4, seq=16)
+    assert res.steps_run == 12
+    assert res.final_loss < res.losses[0]
+
+
+def test_checkpoint_restart_resumes(small_model, tmp_path):
+    arch, model = small_model
+    cfg = RunConfig(arch=arch, shape=LM_SHAPES["train_4k"],
+                    train=TrainConfig(warmup_steps=2))
+    res = train(model, cfg, n_steps=8, batch=2, seq=16,
+                ckpt_dir=str(tmp_path), ckpt_every=2,
+                injector=FailureInjector(fail_at_steps=[5]))
+    assert res.restarts == 1
+    assert res.steps_run == 8            # completed despite the failure
+
+
+def test_grad_accum_equivalence(small_model):
+    """accum=2 over the same data ~ accum=1 (same total batch)."""
+    arch, model = small_model
+    base = dict(arch=arch, shape=LM_SHAPES["train_4k"])
+    r1 = train(model, RunConfig(train=TrainConfig(warmup_steps=2,
+                                                  accum_steps=1), **base),
+               n_steps=3, batch=4, seq=16)
+    r2 = train(model, RunConfig(train=TrainConfig(warmup_steps=2,
+                                                  accum_steps=2), **base),
+               n_steps=3, batch=4, seq=16)
+    assert abs(r1.losses[0] - r2.losses[0]) < 1e-2
+
+
+def test_straggler_detector():
+    det = StragglerDetector(n_hosts=4, warmup=2, threshold=1.4)
+    for _ in range(5):
+        for h in range(4):
+            det.record(h, 1.0 if h != 2 else 3.0)
+    out = det.stragglers()
+    assert [s.host for s in out] == [2]
+    shares = det.data_shares()
+    assert shares[2] < shares[0]          # slow host gets less data
+    assert abs(shares.sum() - 1.0) < 1e-9
+
+
+def test_elastic_mesh_shape():
+    assert elastic_mesh_shape(256, 16) == (16, 16)
+    assert elastic_mesh_shape(240, 16) == (15, 16)  # one host of 16 lost
+    with pytest.raises(ValueError):
+        elastic_mesh_shape(8, 16)
+    assert len(surviving_devices(list(range(256)), 16)) == 240
+
+
+def test_serve_completion_and_pressure(small_model):
+    arch, model = small_model
+    params = init_params(model.schema(), jax.random.PRNGKey(0), jnp.float32)
+    b = ContinuousBatcher(model, params, wave_slots=4, max_len=64,
+                          page_tokens=8, n_pages=64)
+    for i in range(8):
+        b.submit(Request(req_id=i, prompt_len=4, max_new_tokens=5))
+    stats = b.run(max_steps=200)
+    assert stats.completed == 8
+    assert stats.tokens_out == 40
+    # page pressure: still completes, but with stalls
+    b2 = ContinuousBatcher(model, params, wave_slots=4, max_len=64,
+                           page_tokens=8, n_pages=3)
+    for i in range(4):
+        b2.submit(Request(req_id=100 + i, prompt_len=4, max_new_tokens=4))
+    s2 = b2.run(max_steps=400)
+    assert s2.completed == 4
+    assert s2.admission_stalls > 0

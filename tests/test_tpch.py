@@ -1,0 +1,60 @@
+"""W5: TPC-H-style query results vs numpy oracles."""
+import numpy as np
+import pytest
+
+from repro.analytics.tpch import DATE1, generate, run_query
+
+
+@pytest.fixture(scope="module")
+def data():
+    return generate(scale=0.004, seed=1)
+
+
+def test_q1_oracle(data):
+    li = data.tables["lineitem"]
+    m = li["l_shipdate"] <= DATE1 - 90
+    g = li["l_returnflag"] * 2 + li["l_linestatus"]
+    out = run_query("q1", data)
+    for i in range(6):
+        sel = (g == i) & m
+        np.testing.assert_allclose(np.asarray(out["sum_qty"])[i],
+                                   li["l_quantity"][sel].sum(), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(out["count_order"])[i],
+                                   sel.sum(), rtol=1e-6)
+
+
+def test_q6_oracle(data):
+    li = data.tables["lineitem"]
+    m = ((li["l_shipdate"] >= 0) & (li["l_shipdate"] < 365)
+         & (np.abs(li["l_discount"] - 0.06) <= 0.011)
+         & (li["l_quantity"] < 24))
+    ref = (li["l_extendedprice"][m] * li["l_discount"][m]).sum()
+    got = float(run_query("q6", data)["revenue"][0])
+    assert abs(got - ref) / max(ref, 1) < 1e-5
+
+
+def test_q18_oracle(data):
+    li = data.tables["lineitem"]
+    orders = data.tables["orders"]
+    qty = np.zeros(len(orders["o_orderkey"]), np.float32)
+    np.add.at(qty, li["l_orderkey"], li["l_quantity"])
+    big = qty > 212.0
+    ref_count = big.sum()
+    out = run_query("q18", data)
+    got_orders = (np.asarray(out["_count"]) > 0).sum()
+    # every qualifying order maps to one customer row contribution
+    assert int(np.asarray(out["_count"]).sum()) == int(ref_count)
+    assert got_orders <= ref_count
+
+
+def test_q3_returns_top10(data):
+    out = run_query("q3", data)
+    rev = np.asarray(out["revenue"])
+    assert rev.shape == (10,)
+    assert (np.diff(rev) <= 1e-3).all()  # descending
+
+
+def test_q5_group_count(data):
+    out = run_query("q5", data)
+    assert np.asarray(out["revenue"]).shape == (25,)
+    assert np.asarray(out["revenue"]).sum() > 0
