@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV (assignment format). Modules:
   roofline  the dry-run (arch x shape x mesh) table
 """
 import argparse
+import json
 import sys
 import traceback
 
@@ -20,6 +21,9 @@ def main() -> None:
                     help="comma-separated module substrings to run")
     ap.add_argument("--skip-slow", action="store_true",
                     help="skip the subprocess-mesh figures")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write rows as JSON {name: us_per_call}, e.g. "
+                         "BENCH_tpch.json for the perf trajectory")
     args = ap.parse_args()
 
     from benchmarks import (fig2_allocator_microbench,
@@ -44,14 +48,20 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    collected = {}
     for name, mod in modules:
         try:
             for row_name, us, derived in mod.run():
                 print(f"{row_name},{us:.1f},{derived}")
+                collected[row_name] = us
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name}_FAILED,0,{type(e).__name__}: {e}", file=sys.stderr)
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(collected, f, indent=2, sort_keys=True)
+            f.write("\n")
     sys.exit(1 if failures else 0)
 
 

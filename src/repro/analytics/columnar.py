@@ -5,21 +5,55 @@ A Table is a struct-of-arrays with static length; selection is mask-based
 are PK-FK gathers through a sorted index, and aggregations are masked
 segment ops. The executor runs the TPC-H-style queries in tpch.py under the
 same placement/allocator knobs as everything else.
+
+Two executor paths (the paper's "default vs tuned" configurations):
+
+  executor="xla"     one XLA segment op per aggregate — the naive plan a
+                     query compiler emits without memory tuning. N passes
+                     over the table for N aggregates.
+  executor="kernel"  the tuned path: every (sum, avg, count) aggregate over
+                     one key column is stacked into a single values matrix
+                     and swept in ONE fused pass through the hash_aggregate
+                     Pallas kernel (VMEM-resident partition tables — the
+                     paper's partition-then-per-thread-table recipe).
+                     Small key domains run chunk-parallel with full-width
+                     tables; large domains are range-partitioned first so
+                     each partition's table fits, with overflow counted
+                     exactly (never dropped silently) as in
+                     aggregate.count_partitioned. Order statistics
+                     (max/min) are not distributive sums and stay on exact
+                     XLA segment ops under either executor.
+
+Join build-side indexes (argsort of the PK column) are cached per Table and
+propagated through filter/with_columns/join derivations, so a dimension
+table re-used across several joins of one query plan is sorted once.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Mapping, Optional, Tuple
+from typing import Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.analytics.hashing import pad_partitions
+from repro.kernels.hash_aggregate import hash_aggregate_multi
+
+# Largest key domain aggregated with full-width per-chunk tables (the
+# one-hot is (block, n_bins): 512 x 4096 fp32 = 8 MB VMEM). Beyond this the
+# kernel path range-partitions so each partition table stays narrow.
+DENSE_GROUP_LIMIT = 4096
 
 
 @dataclass
 class Table:
     columns: Dict[str, jax.Array]
     mask: Optional[jax.Array] = None     # float32 selection weights (None = 1)
+    # name -> (order, sorted_keys) argsort cache for join build sides.
+    # Shared with derived tables whose column arrays are unchanged; entries
+    # for overwritten columns are dropped at derivation time.
+    index_cache: Dict[str, Tuple[jax.Array, jax.Array]] = field(
+        default_factory=dict, repr=False)
 
     def __post_init__(self):
         lens = {c.shape[0] for c in self.columns.values()}
@@ -38,15 +72,26 @@ class Table:
             return jnp.ones((self.n_rows,), jnp.float32)
         return self.mask
 
+    def key_index(self, name: str) -> Tuple[jax.Array, jax.Array]:
+        """(order, sorted_keys) for ``name``, built once per column array."""
+        hit = self.index_cache.get(name)
+        if hit is None:
+            k = self.columns[name]
+            order = jnp.argsort(k)
+            hit = (order, k[order])
+            self.index_cache[name] = hit
+        return hit
+
     def filter(self, pred: jax.Array) -> "Table":
         """AND a predicate into the selection mask (no data movement)."""
         w = self.weights() * pred.astype(jnp.float32)
-        return Table(self.columns, w)
+        return Table(self.columns, w, self.index_cache)
 
     def with_columns(self, **cols: jax.Array) -> "Table":
         merged = dict(self.columns)
         merged.update(cols)
-        return Table(merged, self.mask)
+        cache = {k: v for k, v in self.index_cache.items() if k not in cols}
+        return Table(merged, self.mask, cache)
 
 
 def pkfk_join(fact: Table, dim: Table, fact_key: str, dim_key: str,
@@ -54,22 +99,45 @@ def pkfk_join(fact: Table, dim: Table, fact_key: str, dim_key: str,
     """Gather dim columns into the fact table through the PK (sorted index).
 
     ``take`` maps new-column-name -> dim-column-name. Misses zero the mask.
+    The build-side sorted index comes from ``dim.key_index`` — cached on the
+    Table, so joining the same dimension (or a filtered view of it) again
+    re-uses the argsort instead of re-sorting per call site.
     """
-    dk = dim.col(dim_key)
-    order = jnp.argsort(dk)
-    sk = dk[order]
+    order, sk = dim.key_index(dim_key)
     pos = jnp.clip(jnp.searchsorted(sk, fact.col(fact_key)), 0, sk.shape[0] - 1)
     found = sk[pos] == fact.col(fact_key)
     dim_w = dim.weights()[order][pos]
     new_cols = {new: dim.col(src)[order][pos] for new, src in take.items()}
     out = fact.with_columns(**new_cols)
-    return Table(out.columns, out.weights() * found.astype(jnp.float32) * dim_w)
+    return Table(out.columns, out.weights() * found.astype(jnp.float32) * dim_w,
+                 out.index_cache)
 
 
+# ---------------------------------------------------------------------------
+# grouped aggregation: default XLA plan vs tuned fused-kernel plan
+# ---------------------------------------------------------------------------
 def group_aggregate(table: Table, key: str, n_groups: int,
-                    aggs: Mapping[str, Tuple[str, str]]) -> Dict[str, jax.Array]:
+                    aggs: Mapping[str, Tuple[str, str]], *,
+                    executor: str = "xla", mode: Optional[str] = None,
+                    n_partitions: int = 64, capacity_factor: float = 2.0
+                    ) -> Dict[str, jax.Array]:
     """aggs: out_name -> (op, column); op in {sum, count, avg, max, min}.
-    Masked rows contribute nothing. Returns dict of (n_groups,) arrays."""
+    Masked rows contribute nothing. Returns dict of (n_groups,) arrays plus
+    ``_count`` and ``_overflow`` (records beyond partition capacity on the
+    kernel path; always 0 on the XLA path and the dense kernel path)."""
+    if executor == "kernel":
+        return _group_aggregate_kernel(table, key, n_groups, aggs, mode=mode,
+                                       n_partitions=n_partitions,
+                                       capacity_factor=capacity_factor)
+    if executor != "xla":
+        raise ValueError(f"unknown executor {executor!r}")
+    return _group_aggregate_xla(table, key, n_groups, aggs)
+
+
+def _group_aggregate_xla(table: Table, key: str, n_groups: int,
+                         aggs: Mapping[str, Tuple[str, str]]
+                         ) -> Dict[str, jax.Array]:
+    """Default plan: one segment op per aggregate."""
     keys = jnp.clip(table.col(key), 0, n_groups - 1)
     w = table.weights()
     out: Dict[str, jax.Array] = {}
@@ -91,4 +159,105 @@ def group_aggregate(table: Table, key: str, n_groups: int,
         else:
             raise ValueError(f"unknown agg op {op!r}")
     out["_count"] = cnt
+    out["_overflow"] = jnp.zeros((), jnp.int32)
     return out
+
+
+def _group_aggregate_kernel(table: Table, key: str, n_groups: int,
+                            aggs: Mapping[str, Tuple[str, str]], *,
+                            mode: Optional[str], n_partitions: int,
+                            capacity_factor: float) -> Dict[str, jax.Array]:
+    """Tuned plan: all distributive aggregates fused into one kernel sweep."""
+    keys = jnp.clip(table.col(key), 0, n_groups - 1).astype(jnp.int32)
+    w = table.weights()
+    src: list = []                       # distinct sum/avg source columns
+    for name, (op, col) in aggs.items():
+        if op in ("sum", "avg") and col not in src:
+            src.append(col)
+        elif op not in ("sum", "avg", "count", "max", "min"):
+            raise ValueError(f"unknown agg op {op!r}")
+    # column 0 carries the weights (COUNT); masked rows have weight 0 so
+    # they vanish from every fused sum.
+    vals = jnp.stack(
+        [w] + [table.col(c).astype(jnp.float32) * w for c in src], axis=1)
+    if n_groups <= DENSE_GROUP_LIMIT:
+        sums = _fused_dense(keys, vals, n_groups, mode=mode)
+        overflow = jnp.zeros((), jnp.int32)
+    else:
+        sums, overflow = _fused_partitioned(
+            keys, vals, n_groups, mode=mode, n_partitions=n_partitions,
+            capacity_factor=capacity_factor)
+    cnt = sums[:, 0]
+    out: Dict[str, jax.Array] = {}
+    for name, (op, col) in aggs.items():
+        if op == "count":
+            out[name] = cnt
+        elif op == "sum":
+            out[name] = sums[:, 1 + src.index(col)]
+        elif op == "avg":
+            out[name] = sums[:, 1 + src.index(col)] / jnp.maximum(cnt, 1.0)
+        else:  # max/min: order statistics stay on exact XLA segment ops
+            v = table.col(col).astype(jnp.float32)
+            if op == "max":
+                big = jnp.where(w > 0, v, -jnp.inf)
+                out[name] = jax.ops.segment_max(big, keys,
+                                                num_segments=n_groups)
+            else:
+                small = jnp.where(w > 0, v, jnp.inf)
+                out[name] = jax.ops.segment_min(small, keys,
+                                                num_segments=n_groups)
+    out["_count"] = cnt
+    out["_overflow"] = overflow.astype(jnp.int32)
+    return out
+
+
+def _fused_dense(keys: jax.Array, vals: jax.Array, n_groups: int, *,
+                 mode: Optional[str], block: int = 512) -> jax.Array:
+    """Small key domain: positional chunking, full-width tables, no sort.
+
+    Rows are split into chunks by position; each chunk's (n_bins, C) table
+    covers every group, so the result is the exact sum of chunk tables —
+    no partitioning pass, no overflow possible. Padding rows carry zero
+    values, so their bin placement is irrelevant."""
+    N, C = vals.shape
+    bins = max(128, -(-n_groups // 128) * 128)
+    n_chunks = 8 if N >= 8 * block else 1
+    per_chunk = -(-N // n_chunks)
+    t = -(-per_chunk // block) * block
+    pad = n_chunks * t - N
+    k = jnp.pad(keys, (0, pad))
+    v = jnp.pad(vals, ((0, pad), (0, 0)))
+    table = hash_aggregate_multi(k.reshape(n_chunks, t),
+                                 v.reshape(n_chunks, t, C),
+                                 n_bins=bins, block=block, mode=mode)
+    return table.sum(axis=0)[:n_groups]
+
+
+def _fused_partitioned(keys: jax.Array, vals: jax.Array, n_groups: int, *,
+                       mode: Optional[str], n_partitions: int,
+                       capacity_factor: float, block: int = 256
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Large key domain: range partition, then fused per-partition tables.
+
+    Range partitioning on the (clipped, dense) group ids makes the
+    partition-local slot (key % range_size) collision-free, so the kernel
+    result is EXACT whenever no partition overflows its capacity; overflow
+    is counted and returned, as in aggregate.count_partitioned."""
+    N, C = vals.shape
+    range_size = -(-n_groups // n_partitions)
+    bins = max(128, -(-range_size // 128) * 128)
+    part = jnp.clip(keys // range_size, 0, n_partitions - 1)
+    order = jnp.argsort(part, stable=True)
+    sk, sv = keys[order], vals[order]
+    counts_p = jnp.bincount(part, length=n_partitions)
+    starts = jnp.cumsum(counts_p) - counts_p
+    pad_t = int(max(block,
+                    -(-int(N // n_partitions * capacity_factor) // block)
+                    * block))
+    pk, pv, overflow = pad_partitions(sk, sv, starts, counts_p, n_partitions,
+                                      pad_t)
+    local = jnp.where(pk < 0, 0, pk % range_size)   # padded vals are zero
+    table = hash_aggregate_multi(local, pv, n_bins=bins, block=block,
+                                 mode=mode)
+    flat = table[:, :range_size, :].reshape(n_partitions * range_size, C)
+    return flat[:n_groups], overflow

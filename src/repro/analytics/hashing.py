@@ -41,12 +41,15 @@ def pad_partitions(sorted_keys: jax.Array, sorted_vals: jax.Array,
                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Dense (P, padT) layout from partition-contiguous arrays.
 
-    Returns (keys (P, padT), vals (P, padT), overflow: total records beyond
-    capacity). Padded slots carry ``pad_key`` and zero values."""
+    ``sorted_vals`` may carry trailing measure dims — (N,) or (N, C) — so a
+    stacked multi-aggregate matrix rides through the same gather as its keys.
+    Returns (keys (P, padT), vals (P, padT[, C]), overflow: total records
+    beyond capacity). Padded slots carry ``pad_key`` and zero values."""
     idx = starts[:, None] + jnp.arange(pad_t)[None, :]          # (P, padT)
     valid = jnp.arange(pad_t)[None, :] < jnp.minimum(counts, pad_t)[:, None]
     idx = jnp.clip(idx, 0, sorted_keys.shape[0] - 1)
     keys = jnp.where(valid, sorted_keys[idx], pad_key)
-    vals = jnp.where(valid, sorted_vals[idx], 0)
+    vmask = valid.reshape(valid.shape + (1,) * (sorted_vals.ndim - 1))
+    vals = jnp.where(vmask, sorted_vals[idx], 0)
     overflow = jnp.maximum(counts - pad_t, 0).sum()
     return keys, vals, overflow

@@ -6,12 +6,26 @@ over synthetic tables at a scale factor: lineitem 6000*SF rows, orders
 1500*SF, customer 150*SF, supplier 10*SF, nation 25, region 5. Dates are
 day-number ints; strings are dictionary-encoded ints — the standard columnar
 executor treatment.
+
+Execution architecture (the paper's Fig 8/9 default-vs-tuned axis):
+
+  * Every query takes ``tables`` — a {table: {column: jax.Array}} pytree —
+    as a TRACED argument plus a static ``executor`` knob ("xla" | "kernel")
+    that it threads into every group_aggregate (columnar.py documents the
+    two plans). Column arrays are never baked into the compiled plan as
+    constants, so one compilation serves any data of the same shape.
+  * ``run_query`` compiles through a PLAN CACHE keyed by
+    (query name, executor, sorted (table, column, shape, dtype) signature).
+    First call per key traces + compiles; subsequent calls dispatch the
+    cached executable. The seed behavior — ``jax.jit(lambda: q(data))()``,
+    which re-traced and re-compiled on every call with the tables inlined
+    as constants — is what the Fig 8 "default configuration" measures.
 """
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Dict
+from typing import Callable, Dict, Mapping, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +37,8 @@ N_NATION, N_REGION = 25, 5
 N_SEGMENTS = 5
 DATE0, DATE1 = 0, 2557            # ~7 years of day numbers
 
+Tables = Mapping[str, Mapping[str, jax.Array]]
+
 
 @dataclass(frozen=True)
 class TPCHData:
@@ -31,6 +47,18 @@ class TPCHData:
 
     def table(self, name: str) -> Table:
         return Table({k: jnp.asarray(v) for k, v in self.tables[name].items()})
+
+    @functools.cached_property
+    def _jax_tables(self) -> Dict[str, Dict[str, jax.Array]]:
+        return {t: {c: jnp.asarray(a) for c, a in cols.items()}
+                for t, cols in self.tables.items()}
+
+    def as_jax(self) -> Dict[str, Dict[str, jax.Array]]:
+        """Device-resident {table: {column: array}} pytree (query input).
+
+        Converted once per TPCHData — repeated run_query dispatch must not
+        pay a host-to-device copy of the dataset per call."""
+        return self._jax_tables
 
 
 def generate(scale: float = 0.01, seed: int = 0) -> TPCHData:
@@ -74,13 +102,21 @@ def generate(scale: float = 0.01, seed: int = 0) -> TPCHData:
                      "lineitem": lineitem}, scale)
 
 
+def _t(tables: Tables, name: str) -> Table:
+    return Table(dict(tables[name]))
+
+
 # ---------------------------------------------------------------------------
-# queries (each returns a dict of result arrays; jit-compiled)
+# queries (each returns a dict of result arrays; compiled via the plan cache)
 # ---------------------------------------------------------------------------
-def q1(data: TPCHData, cutoff: int = DATE1 - 90) -> Dict[str, jax.Array]:
-    """Pricing summary: filter shipdate, group by (returnflag, linestatus)."""
-    li = data.table("lineitem").filter(
-        data.table("lineitem").col("l_shipdate") <= cutoff)
+def q1(tables: Tables, *, executor: str = "xla",
+       cutoff: int = DATE1 - 90) -> Dict[str, jax.Array]:
+    """Pricing summary: filter shipdate, group by (returnflag, linestatus).
+
+    Seven aggregates over one key — the fused-kernel showcase: the tuned
+    executor computes all of them in a single sweep of lineitem."""
+    li = _t(tables, "lineitem")
+    li = li.filter(li.col("l_shipdate") <= cutoff)
     g = li.col("l_returnflag") * 2 + li.col("l_linestatus")
     li = li.with_columns(
         _g=g,
@@ -95,56 +131,67 @@ def q1(data: TPCHData, cutoff: int = DATE1 - 90) -> Dict[str, jax.Array]:
         "avg_qty": ("avg", "l_quantity"),
         "avg_price": ("avg", "l_extendedprice"),
         "count_order": ("count", "l_quantity"),
-    })
+    }, executor=executor)
 
 
-def q3(data: TPCHData, segment: int = 1,
+def q3(tables: Tables, *, executor: str = "xla", segment: int = 1,
        date: int = DATE1 // 2) -> Dict[str, jax.Array]:
     """Shipping priority: cust ⋈ orders ⋈ lineitem, top-10 revenue orders."""
-    cust = data.table("customer")
+    cust = _t(tables, "customer")
     cust = cust.filter(cust.col("c_mktsegment") == segment)
-    orders = data.table("orders")
+    orders = _t(tables, "orders")
     orders = orders.filter(orders.col("o_orderdate") < date)
     o = pkfk_join(orders, cust, "o_custkey", "c_custkey", {})
-    li = data.table("lineitem")
+    li = _t(tables, "lineitem")
     li = li.filter(li.col("l_shipdate") > date)
     li = pkfk_join(li, o, "l_orderkey", "o_orderkey", {})
     li = li.with_columns(
         _rev=li.col("l_extendedprice") * (1 - li.col("l_discount")))
-    n_ord = data.tables["orders"]["o_orderkey"].shape[0]
-    agg = group_aggregate(li, "l_orderkey", n_ord, {"revenue": ("sum", "_rev")})
+    n_ord = tables["orders"]["o_orderkey"].shape[0]
+    agg = group_aggregate(li, "l_orderkey", n_ord,
+                          {"revenue": ("sum", "_rev")}, executor=executor)
     top_rev, top_keys = jax.lax.top_k(agg["revenue"], 10)
-    return {"revenue": top_rev, "o_orderkey": top_keys}
+    return {"revenue": top_rev, "o_orderkey": top_keys,
+            "_overflow": agg["_overflow"]}
 
 
-def q5(data: TPCHData, region: int = 2, date_lo: int = 0,
-       date_hi: int = 365) -> Dict[str, jax.Array]:
-    """Local supplier volume: 5-way join, group by nation."""
-    nation = data.table("nation")
+def q5(tables: Tables, *, executor: str = "xla", region: int = 2,
+       date_lo: int = 0, date_hi: int = 365) -> Dict[str, jax.Array]:
+    """Local supplier volume: 5-way join, group by nation.
+
+    Four pkfk_joins — each build side's sorted index is built through the
+    Table index cache (columnar.py), so filtered views re-use their parent's
+    argsort instead of re-sorting at every call site."""
+    nation = _t(tables, "nation")
     nation = nation.filter(nation.col("n_regionkey") == region)
-    cust = pkfk_join(data.table("customer"), nation, "c_nationkey",
+    cust = pkfk_join(_t(tables, "customer"), nation, "c_nationkey",
                      "n_nationkey", {})
-    orders = data.table("orders")
+    orders = _t(tables, "orders")
     orders = orders.filter((orders.col("o_orderdate") >= date_lo)
                            & (orders.col("o_orderdate") < date_hi))
     o = pkfk_join(orders, cust, "o_custkey", "c_custkey",
                   {"_c_nation": "c_nationkey"})
-    li = pkfk_join(data.table("lineitem"), o, "l_orderkey", "o_orderkey",
+    li = pkfk_join(_t(tables, "lineitem"), o, "l_orderkey", "o_orderkey",
                    {"_c_nation": "_c_nation"})
-    li = pkfk_join(li, data.table("supplier"), "l_suppkey", "s_suppkey",
+    li = pkfk_join(li, _t(tables, "supplier"), "l_suppkey", "s_suppkey",
                    {"_s_nation": "s_nationkey"})
     # local: supplier nation == customer nation
     li = li.filter(li.col("_s_nation") == li.col("_c_nation"))
     li = li.with_columns(
         _rev=li.col("l_extendedprice") * (1 - li.col("l_discount")))
     return group_aggregate(li, "_s_nation", N_NATION,
-                           {"revenue": ("sum", "_rev")})
+                           {"revenue": ("sum", "_rev")}, executor=executor)
 
 
-def q6(data: TPCHData, date_lo: int = 0, date_hi: int = 365,
-       disc: float = 0.06, qty: float = 24.0) -> Dict[str, jax.Array]:
-    """Forecast revenue change: pure filter + scalar aggregate."""
-    li = data.table("lineitem")
+def q6(tables: Tables, *, executor: str = "xla", date_lo: int = 0,
+       date_hi: int = 365, disc: float = 0.06,
+       qty: float = 24.0) -> Dict[str, jax.Array]:
+    """Forecast revenue change: pure filter + scalar aggregate.
+
+    A single masked reduction — already one fused pass, so both executors
+    share the same plan (the knob is accepted for interface uniformity)."""
+    del executor
+    li = _t(tables, "lineitem")
     pred = ((li.col("l_shipdate") >= date_lo) & (li.col("l_shipdate") < date_hi)
             & (jnp.abs(li.col("l_discount") - disc) <= 0.011)
             & (li.col("l_quantity") < qty))
@@ -154,23 +201,71 @@ def q6(data: TPCHData, date_lo: int = 0, date_hi: int = 365,
     return {"revenue": rev[None]}
 
 
-def q18(data: TPCHData, qty_threshold: float = 212.0) -> Dict[str, jax.Array]:
+def q18(tables: Tables, *, executor: str = "xla",
+        qty_threshold: float = 212.0) -> Dict[str, jax.Array]:
     """Large volume customer: big group-by on orderkey, HAVING, re-join."""
-    li = data.table("lineitem")
-    n_ord = data.tables["orders"]["o_orderkey"].shape[0]
+    li = _t(tables, "lineitem")
+    n_ord = tables["orders"]["o_orderkey"].shape[0]
     per_order = group_aggregate(li, "l_orderkey", n_ord,
-                                {"qty": ("sum", "l_quantity")})
+                                {"qty": ("sum", "l_quantity")},
+                                executor=executor)
     big = per_order["qty"] > qty_threshold
-    orders = data.table("orders").with_columns(_qty=per_order["qty"])
-    orders = Table(orders.columns, big.astype(jnp.float32))
-    o = pkfk_join(orders, data.table("customer"), "o_custkey", "c_custkey",
+    orders = _t(tables, "orders").with_columns(_qty=per_order["qty"])
+    orders = Table(orders.columns, big.astype(jnp.float32),
+                   orders.index_cache)
+    o = pkfk_join(orders, _t(tables, "customer"), "o_custkey", "c_custkey",
                   {"_nat": "c_nationkey"})
-    n_cust = data.tables["customer"]["c_custkey"].shape[0]
-    return group_aggregate(o, "o_custkey", n_cust, {"qty": ("sum", "_qty")})
+    n_cust = tables["customer"]["c_custkey"].shape[0]
+    out = group_aggregate(o, "o_custkey", n_cust, {"qty": ("sum", "_qty")},
+                          executor=executor)
+    # surface the per-order aggregation's overflow too: capacity overflow in
+    # EITHER pass means the result is incomplete, and must never be silent
+    out["_overflow"] = out["_overflow"] + per_order["_overflow"]
+    return out
 
 
-QUERIES = {"q1": q1, "q3": q3, "q5": q5, "q6": q6, "q18": q18}
+QUERIES: Dict[str, Callable[..., Dict[str, jax.Array]]] = {
+    "q1": q1, "q3": q3, "q5": q5, "q6": q6, "q18": q18}
 
 
-def run_query(name: str, data: TPCHData) -> Dict[str, jax.Array]:
-    return jax.jit(lambda: QUERIES[name](data))()
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+PlanKey = Tuple[str, str, Tuple]
+_PLAN_CACHE: Dict[PlanKey, Callable] = {}
+
+
+def _signature(tables: Tables) -> Tuple:
+    return tuple(sorted((t, c, tuple(a.shape), str(a.dtype))
+                        for t, cols in tables.items()
+                        for c, a in cols.items()))
+
+
+def get_plan(name: str, executor: str, tables: Tables) -> Callable:
+    """Compiled plan for (query, executor, table signature) — built once."""
+    key: PlanKey = (name, executor, _signature(tables))
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        plan = jax.jit(functools.partial(QUERIES[name], executor=executor))
+        _PLAN_CACHE[key] = plan
+    return plan
+
+
+def plan_cache_size() -> int:
+    return len(_PLAN_CACHE)
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+
+
+def run_query(name: str, data, *, executor: str = "xla"
+              ) -> Dict[str, jax.Array]:
+    """Execute a query through the plan cache.
+
+    ``data`` is a TPCHData or a {table: {column: array}} mapping (jit
+    accepts numpy columns directly). Tables are passed to the compiled plan
+    as traced arguments; re-running on new data of the same shape re-uses
+    the executable."""
+    tables = data.as_jax() if isinstance(data, TPCHData) else data
+    return get_plan(name, executor, tables)(tables)

@@ -1,1 +1,2 @@
-from repro.kernels.hash_aggregate.ops import hash_aggregate
+from repro.kernels.hash_aggregate.ops import (hash_aggregate,
+                                              hash_aggregate_multi)

@@ -8,10 +8,17 @@ record blocks (the analogue of a per-thread table in L2 — LOCAL_ALLOC at
 tile scale), and the per-record "table update" becomes a one_hot^T @ vals
 MXU matmul — contention-free by construction.
 
+Fused multi-aggregate form: TPC-H Q1 needs seven independent SUMs over the
+same key column. Instead of seven passes, the kernel computes the
+(block, n_bins) one-hot ONCE per record block and contracts it against a
+stacked (block, n_cols) values matrix in a single MXU dot — the ids stream
+and the one-hot build are amortized across every aggregate, so the sweep is
+one read of each measure column and one read of the key column, total.
+
 Grid: (n_partitions, n_blocks); blocks innermost so the scratch table for a
 partition accumulates across its stream, then emits once.
-Working set: (block x n_bins) one-hot fp32 + (n_bins,) table — with
-block=512, bins=2048: ~4.2 MB VMEM.
+Working set: (block x n_bins) one-hot fp32 + (n_bins, n_cols) table — with
+block=512, bins=2048, cols=8: ~4.3 MB VMEM.
 """
 from __future__ import annotations
 
@@ -23,8 +30,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _agg_kernel(ids_ref, vals_ref, out_ref, table_scr, *, n_bins: int,
-                block: int, n_blocks: int):
+def _agg_multi_kernel(ids_ref, vals_ref, out_ref, table_scr, *, n_bins: int,
+                      block: int, n_blocks: int):
     bi = pl.program_id(1)
 
     @pl.when(bi == 0)
@@ -32,37 +39,53 @@ def _agg_kernel(ids_ref, vals_ref, out_ref, table_scr, *, n_bins: int,
         table_scr[...] = jnp.zeros(table_scr.shape, table_scr.dtype)
 
     ids = ids_ref[0]                                    # (block,)
-    vals = vals_ref[0].astype(jnp.float32)              # (block,)
+    vals = vals_ref[0].astype(jnp.float32)              # (block, C)
     bins = jax.lax.broadcasted_iota(jnp.int32, (block, n_bins), 1)
     oh = (ids[:, None] == bins).astype(jnp.float32)     # (block, n_bins)
-    contrib = jax.lax.dot_general(vals[None, :], oh, (((1,), (0,)), ((), ())),
+    contrib = jax.lax.dot_general(oh, vals, (((0,), (0,)), ((), ())),
                                   preferred_element_type=jnp.float32)
-    table_scr[...] = table_scr[...] + contrib           # (1, n_bins)
+    table_scr[...] = table_scr[...] + contrib           # (n_bins, C)
 
     @pl.when(bi == n_blocks - 1)
     def _emit():
-        out_ref[...] = table_scr[...]
+        out_ref[...] = table_scr[...][None]
 
 
-def hash_aggregate_pallas(ids: jax.Array, vals: jax.Array, *, n_bins: int,
-                          block: int = 512,
-                          interpret: bool = False) -> jax.Array:
-    """ids, vals: (P, T) with T % block == 0. Returns (P, n_bins) f32."""
+def hash_aggregate_multi_pallas(ids: jax.Array, vals: jax.Array, *,
+                                n_bins: int, block: int = 512,
+                                interpret: bool = False) -> jax.Array:
+    """ids: (P, T); vals: (P, T, C) with T % block == 0.
+
+    Returns (P, n_bins, C) f32: per-partition tables of C fused sums."""
     P, T = ids.shape
+    if vals.shape[:2] != (P, T):
+        raise ValueError(f"vals {vals.shape} does not match ids {ids.shape}")
+    C = vals.shape[2]
     if T % block:
         raise ValueError(f"T={T} not divisible by block={block}")
     n_blocks = T // block
-    kernel = functools.partial(_agg_kernel, n_bins=n_bins, block=block,
+    kernel = functools.partial(_agg_multi_kernel, n_bins=n_bins, block=block,
                                n_blocks=n_blocks)
     return pl.pallas_call(
         kernel,
         grid=(P, n_blocks),
         in_specs=[
             pl.BlockSpec((1, block), lambda p, b: (p, b)),
-            pl.BlockSpec((1, block), lambda p, b: (p, b)),
+            pl.BlockSpec((1, block, C), lambda p, b: (p, b, 0)),
         ],
-        out_specs=pl.BlockSpec((1, n_bins), lambda p, b: (p, 0)),
-        out_shape=jax.ShapeDtypeStruct((P, n_bins), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((1, n_bins), jnp.float32)],
+        out_specs=pl.BlockSpec((1, n_bins, C), lambda p, b: (p, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((P, n_bins, C), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n_bins, C), jnp.float32)],
         interpret=interpret,
     )(ids, vals)
+
+
+def hash_aggregate_pallas(ids: jax.Array, vals: jax.Array, *, n_bins: int,
+                          block: int = 512,
+                          interpret: bool = False) -> jax.Array:
+    """Single-aggregate entrypoint: thin wrapper over the fused kernel.
+
+    ids, vals: (P, T) with T % block == 0. Returns (P, n_bins) f32."""
+    out = hash_aggregate_multi_pallas(ids, vals[..., None], n_bins=n_bins,
+                                      block=block, interpret=interpret)
+    return out[..., 0]

@@ -43,8 +43,10 @@ def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, sout_ref, s_scr, *,
         y = jax.lax.dot_general(ri, S, (((1,), (0,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         y = y + bonus * vi                              # (1, N)
-        pl.store(o_ref, (0, pl.dslice(i, 1), slice(None)),
-                 y.astype(o_ref.dtype))
+        # index the leading block dim with a size-1 dslice, not a bare int:
+        # int indices crash the interpreter's store discharge on this jax
+        pl.store(o_ref, (pl.dslice(0, 1), pl.dslice(i, 1), slice(None)),
+                 y[None].astype(o_ref.dtype))
         S = wi.reshape(-1, 1) * S + ki.reshape(-1, 1) * vi
         return S
 
@@ -53,7 +55,7 @@ def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, sout_ref, s_scr, *,
 
     @pl.when(si == n_s_blocks - 1)
     def _emit_state():
-        sout_ref[0] = S.astype(sout_ref.dtype)
+        sout_ref[...] = S[None].astype(sout_ref.dtype)
 
 
 def wkv6_pallas(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,

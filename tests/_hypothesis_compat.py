@@ -1,0 +1,37 @@
+"""Degrade gracefully when hypothesis is not installed.
+
+The test container bakes in jax/numpy/pytest only (see requirements-dev.txt
+for the full dev set). Importing ``given``/``settings``/``st`` from here
+instead of ``hypothesis`` keeps every non-property test in a module
+collectable and running everywhere: with hypothesis present the real API is
+re-exported; without it, ``@given`` turns its test into an individual skip
+and strategy expressions evaluate to inert placeholders.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _Strategy:
+        """Absorbs any strategy construction (st.integers(0, 5), st.data(),
+        st.lists(st.integers()).map(...)) — never executed, only built at
+        decoration time of tests that are skipped anyway."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _Strategy()

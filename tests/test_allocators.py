@@ -2,7 +2,7 @@
 stats consistent — swept across all four designs with hypothesis."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.config import AllocatorKind
 from repro.memory.allocators import make_allocator

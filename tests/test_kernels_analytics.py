@@ -3,10 +3,11 @@ oracles, including hypothesis property sweeps."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
-from repro.kernels.hash_aggregate import hash_aggregate
-from repro.kernels.hash_aggregate.ref import hash_aggregate_ref
+from repro.kernels.hash_aggregate import hash_aggregate, hash_aggregate_multi
+from repro.kernels.hash_aggregate.ref import (hash_aggregate_multi_ref,
+                                              hash_aggregate_ref)
 from repro.kernels.join_probe import join_probe
 from repro.kernels.join_probe.ref import join_probe_ref
 from repro.kernels.radix_partition import block_histograms, radix_partition
@@ -46,6 +47,33 @@ def test_hash_aggregate_interpret(rng, P, T, bins, block):
     got = hash_aggregate(ids, vals, n_bins=bins, block=block,
                          mode="interpret")
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-4)
+
+
+@pytest.mark.parametrize("P,T,bins,C,block", [(2, 512, 128, 3, 256),
+                                              (4, 1024, 256, 7, 512),
+                                              (1, 256, 128, 1, 128)])
+def test_hash_aggregate_multi_interpret(rng, P, T, bins, C, block):
+    """Fused multi-aggregate kernel vs oracle, incl. the C=1 edge."""
+    ids = jnp.asarray(rng.randint(0, bins, (P, T)), jnp.int32)
+    vals = jnp.asarray(rng.randn(P, T, C), jnp.float32)
+    ref = hash_aggregate_multi_ref(ids, vals, n_bins=bins)
+    got = hash_aggregate_multi(ids, vals, n_bins=bins, block=block,
+                               mode="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-4)
+
+
+def test_hash_aggregate_multi_matches_stacked_singles(rng):
+    """The fused sweep equals C independent single-aggregate sweeps."""
+    P, T, bins, C, block = 2, 768, 128, 4, 256
+    ids = jnp.asarray(rng.randint(0, bins, (P, T)), jnp.int32)
+    vals = jnp.asarray(rng.randn(P, T, C), jnp.float32)
+    fused = hash_aggregate_multi(ids, vals, n_bins=bins, block=block,
+                                 mode="interpret")
+    for c in range(C):
+        single = hash_aggregate(ids, vals[..., c], n_bins=bins, block=block,
+                                mode="interpret")
+        np.testing.assert_allclose(np.asarray(fused[..., c]),
+                                   np.asarray(single), atol=1e-4)
 
 
 def test_join_probe_interpret(rng):

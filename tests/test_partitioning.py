@@ -1,7 +1,7 @@
 """Partitioning engine + padding invariants (hypothesis property tests)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import ARCHS
 from repro.core.config import ArchConfig, PaddedDims, pad_to
