@@ -9,16 +9,19 @@ A genuine default-vs-tuned measurement over the SAME queries:
                  "just run it" configuration.
   xla_plancached the same XLA plan behind the plan cache (tables traced,
                  compiled once) — isolates how much of the win is caching.
-  tuned          plan-cached + kernel-backed executor: fused multi-aggregate
-                 sweeps and cached join indexes (the paper's partition +
-                 per-thread-table recipe).
+  tuned          plan-cached + kernel-preferring executor: fused
+                 multi-aggregate sweeps and pooled join indexes (the
+                 paper's partition + per-thread-table recipe).
+  planner        the cost-based physical planner (executor="cost"): per
+                 Aggregate it picks XLA segment ops vs dense fused vs
+                 range-partitioned fused from (n_rows, n_groups, n_cols) —
+                 in particular, large-domain single-aggregate queries
+                 (q3/q18) stay on segment ops instead of paying the
+                 range-partition argsort the blanket "kernel" preference
+                 forces on them.
 
 Fig 9 analogue: Q5/Q18 — the paper's allocator case studies — default vs
 tuned configuration on the join-heavy queries (the buffer-manager axis).
-Note the fig8 ``xla_plancached`` rows: on this CPU container the fused
-kernel lowers to its reference path, so large-domain single-aggregate
-queries (q3/q18) pay the partitioning sort without the VMEM payoff; Q1's
-seven fused aggregates win outright.
 """
 from __future__ import annotations
 
@@ -50,6 +53,9 @@ def run() -> List[Row]:
         us_tuned = time_fn(
             lambda name=name: run_query(name, tables, executor="kernel"),
             iters=9)
+        us_planner = time_fn(
+            lambda name=name: run_query(name, tables, executor="cost"),
+            iters=9)
         default_us[name], tuned_us[name] = us_default, us_tuned
 
         rows.append((f"fig8_tpch_{name}_default", us_default,
@@ -58,6 +64,8 @@ def run() -> List[Row]:
                      f"speedup_vs_default={us_default / us_cached:.1f}x"))
         rows.append((f"fig8_tpch_{name}_tuned", us_tuned,
                      f"speedup_vs_default={us_default / us_tuned:.1f}x"))
+        rows.append((f"fig8_tpch_{name}_planner", us_planner,
+                     f"speedup_vs_default={us_default / us_planner:.1f}x"))
 
     for name in ("q5", "q18"):   # Fig 9: the allocator case-study queries
         gain = (default_us[name] - tuned_us[name]) / default_us[name] * 100

@@ -24,6 +24,11 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="also write rows as JSON {name: us_per_call}, e.g. "
                          "BENCH_tpch.json for the perf trajectory")
+    ap.add_argument("--check", default=None, metavar="PREV",
+                    help="compare guarded rows against a previous --json "
+                         "recording and exit non-zero on a >25%% latency "
+                         "regression (makes the bench trajectory "
+                         "enforceable in CI)")
     args = ap.parse_args()
 
     from benchmarks import (fig2_allocator_microbench,
@@ -62,7 +67,36 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(collected, f, indent=2, sort_keys=True)
             f.write("\n")
+    if args.check and check_regression(collected, args.check):
+        sys.exit(2)
     sys.exit(1 if failures else 0)
+
+
+# Rows whose latency the --check gate guards (the tuned-path trajectory).
+CHECKED_ROWS = ("fig8_tpch_q1_tuned",)
+CHECK_THRESHOLD = 1.25           # fail on >25% regression vs the recording
+
+
+def check_regression(collected: dict, prev_path: str) -> bool:
+    """True (-> non-zero exit) if any guarded row regressed past threshold."""
+    with open(prev_path) as f:
+        prev = json.load(f)
+    regressed = False
+    for row in CHECKED_ROWS:
+        if row not in collected:
+            print(f"CHECK_SKIP,{row},not measured this run (check --only "
+                  f"selection)", file=sys.stderr)
+            continue
+        if row not in prev:
+            print(f"CHECK_SKIP,{row},not in {prev_path}", file=sys.stderr)
+            continue
+        ratio = collected[row] / prev[row]
+        status = "REGRESSED" if ratio > CHECK_THRESHOLD else "ok"
+        print(f"check_{row},{collected[row]:.1f},"
+              f"baseline={prev[row]:.1f}us ratio={ratio:.2f}x {status}")
+        if ratio > CHECK_THRESHOLD:
+            regressed = True
+    return regressed
 
 
 if __name__ == "__main__":

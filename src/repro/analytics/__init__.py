@@ -5,11 +5,19 @@ W2 distributive aggregation (count)   aggregate.count_* / dist_count
 W3 hash join                          join.hash_join / dist_hash_join
 W4 index nested-loop join             join.index_join (radix/sorted/hash)
 W5 TPC-H                              tpch.run_query (q1, q3, q5, q6, q18)
+
+Queries are authored as logical plans (plan.py) and lowered by the
+cost-based physical planner (planner.py) onto the columnar operators
+(columnar.py) — single-device or under a placement-policy mesh backend
+(engine.py) — without changing the plan.
 """
-from repro.analytics import datasets
+from repro.analytics import datasets, plan
 from repro.analytics.aggregate import (count_direct, count_partitioned,
                                        median_direct)
 from repro.analytics.engine import dist_count, dist_hash_join, dist_median
 from repro.analytics.join import hash_join, index_join
+from repro.analytics.planner import (ExecutionContext, execute_plan, explain,
+                                     plan_cache_info)
+from repro.analytics.tpch import LOGICAL_QUERIES
 from repro.analytics.tpch import generate as tpch_generate
 from repro.analytics.tpch import run_query as tpch_run_query

@@ -21,9 +21,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.analytics.hashing import pad_partitions, partition_of
-from repro.kernels.hash_aggregate import hash_aggregate
-from repro.kernels.radix_partition import radix_partition
+from repro.analytics.columnar import stacked_group_sums
 
 
 # ---------------------------------------------------------------------------
@@ -46,30 +44,19 @@ def count_partitioned(keys: jax.Array, cardinality: int, *,
     Range partitioning on dense group ids makes the partition-local slot
     (key % range) collision-free — the kernel result is EXACT whenever no
     partition overflows its capacity (overflow is returned, never dropped
-    silently). Returns (counts (cardinality,), overflow)."""
-    N = keys.shape[0]
-    range_size = -(-cardinality // n_partitions)          # ceil
-    bins = max(128, -(-range_size // 128) * 128)          # kernel lane pad
-    part = jnp.clip(keys // range_size, 0, n_partitions - 1)
-    order = jnp.argsort(part, stable=True)
-    sk = keys[order]
-    counts_p = jnp.bincount(part, length=n_partitions)
-    starts = jnp.cumsum(counts_p) - counts_p
-    pad_t = int(max(256, -(-int(N // n_partitions * capacity_factor) // 256) * 256))
-    pk, _, overflow = pad_partitions(sk, jnp.ones_like(sk, jnp.float32),
-                                     starts, counts_p, n_partitions, pad_t)
-    local = jnp.where(pk < 0, bins - 1, pk % range_size)  # padding -> dead bin
-    vals = jnp.where(pk < 0, 0.0, 1.0)
-    table = hash_aggregate(local, vals, n_bins=bins, mode=mode)  # (P, bins)
-    flat = table[:, :range_size].reshape(-1)[:cardinality]
-    # padding records landed in bins-1 which lies outside range_size unless
-    # range_size == bins; mask that corner case exactly:
-    if range_size == bins:
-        pad_per_part = (pad_t - jnp.minimum(counts_p, pad_t)).astype(jnp.float32)
-        flat = flat - jnp.zeros_like(flat).at[
-            jnp.arange(n_partitions) * range_size + (bins - 1)
-        ].add(pad_per_part)[:cardinality]
-    return flat, overflow
+    silently). Returns (counts (cardinality,), overflow).
+
+    Thin wrapper: a COUNT is a fused sweep over a single all-ones weights
+    column, so this delegates to the shared range-partitioned recipe in
+    ``columnar.stacked_group_sums`` (COUNT always rides in column 0 of the
+    stacked matrix — padded slots carry zero weight, so no dead-bin
+    correction is needed)."""
+    clipped = jnp.clip(keys, 0, cardinality - 1).astype(jnp.int32)
+    ones = jnp.ones(keys.shape + (1,), jnp.float32)
+    sums, overflow = stacked_group_sums(
+        clipped, ones, cardinality, layout="partitioned", mode=mode,
+        n_partitions=n_partitions, capacity_factor=capacity_factor)
+    return sums[:, 0], overflow
 
 
 # ---------------------------------------------------------------------------

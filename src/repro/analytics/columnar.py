@@ -1,32 +1,42 @@
-"""Mini columnar query executor (the W5 "database system" layer).
+"""Physical columnar operators (the W5 "database system" layer).
 
 A Table is a struct-of-arrays with static length; selection is mask-based
 (TPU-friendly: no compaction, predicates become aggregation weights), joins
 are PK-FK gathers through a sorted index, and aggregations are masked
-segment ops. The executor runs the TPC-H-style queries in tpch.py under the
-same placement/allocator knobs as everything else.
+segment ops.  This module is the *physical operator library*: queries are
+authored as logical plans (plan.py) and the cost-based planner (planner.py)
+lowers each logical node onto one of the operators here.
 
-Two executor paths (the paper's "default vs tuned" configurations):
+Grouped aggregation has three physical layouts the planner chooses between
+per Aggregate node — see planner.choose_aggregate for the cost model:
 
-  executor="xla"     one XLA segment op per aggregate — the naive plan a
-                     query compiler emits without memory tuning. N passes
-                     over the table for N aggregates.
-  executor="kernel"  the tuned path: every (sum, avg, count) aggregate over
-                     one key column is stacked into a single values matrix
-                     and swept in ONE fused pass through the hash_aggregate
-                     Pallas kernel (VMEM-resident partition tables — the
-                     paper's partition-then-per-thread-table recipe).
-                     Small key domains run chunk-parallel with full-width
-                     tables; large domains are range-partitioned first so
-                     each partition's table fits, with overflow counted
-                     exactly (never dropped silently) as in
-                     aggregate.count_partitioned. Order statistics
-                     (max/min) are not distributive sums and stay on exact
-                     XLA segment ops under either executor.
+  "xla"          one XLA segment op per aggregate — the naive plan a query
+                 compiler emits without memory tuning. N passes over the
+                 table for N aggregates.
+  "dense"        fused-kernel sweep with positionally-chunked full-width
+                 tables (no sort; exact): every (sum, avg, count) aggregate
+                 over one key column is stacked into a single values matrix
+                 and swept in ONE pass through the hash_aggregate Pallas
+                 kernel (VMEM-resident tables — the paper's
+                 partition-then-per-thread-table recipe). Valid for key
+                 domains up to DENSE_GROUP_LIMIT.
+  "partitioned"  fused-kernel sweep after a range-partitioning pass, so each
+                 partition's table stays narrow; overflow is counted exactly
+                 (never dropped silently). Pays an argsort of the keys —
+                 worthwhile only when many aggregates amortize it.
 
-Join build-side indexes (argsort of the PK column) are cached per Table and
-propagated through filter/with_columns/join derivations, so a dimension
-table re-used across several joins of one query plan is sorted once.
+Order statistics (max/min) are not distributive sums and stay on exact XLA
+segment ops under every layout.  ``group_aggregate``'s string ``executor``
+knob ("xla" picks the first layout, "kernel" the domain-appropriate fused
+one) is kept as the untuned/tuned axis the Fig 8/9 benchmark measures.
+
+PK-FK joins have two physical forms: ``pkfk_join`` (sorted-index
+searchsorted gather; the build-side argsort is cached per Table and
+propagated through filter/with_columns/join derivations — and hoisted out
+of the compiled plan entirely by planner.JoinIndexPool) and
+``pkfk_join_kernel`` (hash-partition both sides, probe through the
+kernels/join_probe broadcast-compare kernel; capacity overflow is surfaced,
+and overflowed rows degrade to join misses).
 """
 from __future__ import annotations
 
@@ -36,8 +46,9 @@ from typing import Dict, Mapping, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.analytics.hashing import pad_partitions
+from repro.analytics.hashing import pad_partitions, partition_of
 from repro.kernels.hash_aggregate import hash_aggregate_multi
+from repro.kernels.join_probe import join_probe
 
 # Largest key domain aggregated with full-width per-chunk tables (the
 # one-hot is (block, n_bins): 512 x 4096 fp32 = 8 MB VMEM). Beyond this the
@@ -73,13 +84,20 @@ class Table:
         return self.mask
 
     def key_index(self, name: str) -> Tuple[jax.Array, jax.Array]:
-        """(order, sorted_keys) for ``name``, built once per column array."""
+        """(order, sorted_keys) for ``name``, built once per column array.
+
+        Never caches a TRACER computed from a concrete column: a Table that
+        outlives the trace it was first joined in (e.g. an eager dimension
+        table closed over by a jitted query) would otherwise serve a dead
+        trace's tracer to every later call."""
         hit = self.index_cache.get(name)
         if hit is None:
             k = self.columns[name]
             order = jnp.argsort(k)
             hit = (order, k[order])
-            self.index_cache[name] = hit
+            if not (isinstance(order, jax.core.Tracer)
+                    and not isinstance(k, jax.core.Tracer)):
+                self.index_cache[name] = hit
         return hit
 
     def filter(self, pred: jax.Array) -> "Table":
@@ -113,20 +131,87 @@ def pkfk_join(fact: Table, dim: Table, fact_key: str, dim_key: str,
                  out.index_cache)
 
 
+def pkfk_join_kernel(fact: Table, dim: Table, fact_key: str, dim_key: str,
+                     take: Mapping[str, str], *, n_partitions: int = 32,
+                     capacity_factor: float = 2.0,
+                     mode: Optional[str] = None
+                     ) -> Tuple[Table, jax.Array]:
+    """PK-FK join probed through the kernels/join_probe blocked compare.
+
+    Both sides are hash-partitioned (hashing.partition_of, so matching keys
+    co-partition) into dense (P, cap) layouts; the kernel matches each probe
+    slot against its partition's build tile and returns the matched build
+    ROW POSITION, through which the ``take`` columns (and the build-side
+    mask) are gathered. Keys must be non-negative (key -1 is the padding
+    sentinel). Returns (joined table, overflow): rows beyond a partition's
+    capacity — on either side — are counted and degrade to join misses,
+    never to silently wrong matches.
+    """
+    fk = fact.col(fact_key).astype(jnp.int32)
+    dk = dim.col(dim_key).astype(jnp.int32)
+    n_fact, n_dim = fk.shape[0], dk.shape[0]
+    if max(n_fact, n_dim) >= 1 << 24:
+        # row positions ride through the kernel as float32 payloads, which
+        # are only exact integers below 2^24 — beyond that positions would
+        # silently collide; refuse rather than corrupt the join
+        raise ValueError(f"pkfk_join_kernel limited to <2^24 rows per side, "
+                         f"got fact={n_fact}, dim={n_dim}")
+    P = n_partitions
+
+    def _layout(keys, payload, cap_rows):
+        part = partition_of(keys, P)
+        order = jnp.argsort(part, stable=True)
+        counts = jnp.bincount(part, length=P)
+        starts = jnp.cumsum(counts) - counts
+        cap = int(max(128, -(-int(cap_rows // P * capacity_factor) // 128)
+                      * 128))
+        return pad_partitions(keys[order], payload[order], starts, counts,
+                              P, cap)
+
+    # build side carries its own row positions as the probe payload
+    bkeys, bpos, ovf_b = _layout(dk, jnp.arange(n_dim, dtype=jnp.float32),
+                                 n_dim)
+    pkeys, prow, ovf_p = _layout(fk, jnp.arange(n_fact, dtype=jnp.float32),
+                                 n_fact)
+    vals, found = join_probe(bkeys, bpos, pkeys, mode=mode)
+    # scatter per-slot results back to original row order; padding slots
+    # (key -1) collide on a dummy row that is sliced off
+    slot_valid = (pkeys >= 0).reshape(-1)
+    rows = jnp.where(slot_valid, prow.reshape(-1).astype(jnp.int32), n_fact)
+    pos = (jnp.zeros((n_fact + 1,), jnp.int32)
+           .at[rows].set(vals.reshape(-1).astype(jnp.int32))[:n_fact])
+    found_r = (jnp.zeros((n_fact + 1,), jnp.bool_)
+               .at[rows].set(found.reshape(-1) & slot_valid)[:n_fact])
+    pos = jnp.clip(pos, 0, n_dim - 1)
+    dim_w = dim.weights()[pos]
+    new_cols = {new: dim.col(src)[pos] for new, src in take.items()}
+    out = fact.with_columns(**new_cols)
+    joined = Table(out.columns,
+                   out.weights() * found_r.astype(jnp.float32) * dim_w,
+                   out.index_cache)
+    return joined, (ovf_b + ovf_p).astype(jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # grouped aggregation: default XLA plan vs tuned fused-kernel plan
 # ---------------------------------------------------------------------------
 def group_aggregate(table: Table, key: str, n_groups: int,
                     aggs: Mapping[str, Tuple[str, str]], *,
                     executor: str = "xla", mode: Optional[str] = None,
+                    layout: Optional[str] = None,
                     n_partitions: int = 64, capacity_factor: float = 2.0
                     ) -> Dict[str, jax.Array]:
     """aggs: out_name -> (op, column); op in {sum, count, avg, max, min}.
     Masked rows contribute nothing. Returns dict of (n_groups,) arrays plus
     ``_count`` and ``_overflow`` (records beyond partition capacity on the
-    kernel path; always 0 on the XLA path and the dense kernel path)."""
+    kernel path; always 0 on the XLA path and the dense kernel path).
+
+    ``layout`` overrides the kernel path's dense/partitioned choice (the
+    cost-based planner sets it per Aggregate node); None keeps the
+    DENSE_GROUP_LIMIT domain-size rule."""
     if executor == "kernel":
         return _group_aggregate_kernel(table, key, n_groups, aggs, mode=mode,
+                                       layout=layout,
                                        n_partitions=n_partitions,
                                        capacity_factor=capacity_factor)
     if executor != "xla":
@@ -163,11 +248,13 @@ def _group_aggregate_xla(table: Table, key: str, n_groups: int,
     return out
 
 
-def _group_aggregate_kernel(table: Table, key: str, n_groups: int,
-                            aggs: Mapping[str, Tuple[str, str]], *,
-                            mode: Optional[str], n_partitions: int,
-                            capacity_factor: float) -> Dict[str, jax.Array]:
-    """Tuned plan: all distributive aggregates fused into one kernel sweep."""
+def stacked_columns(table: Table, key: str, n_groups: int,
+                    aggs: Mapping[str, Tuple[str, str]]
+                    ) -> Tuple[jax.Array, jax.Array, list]:
+    """(keys, stacked values matrix, distinct sum/avg source columns).
+
+    Column 0 of the matrix carries the selection weights (COUNT); masked
+    rows have weight 0 so they vanish from every fused sum."""
     keys = jnp.clip(table.col(key), 0, n_groups - 1).astype(jnp.int32)
     w = table.weights()
     src: list = []                       # distinct sum/avg source columns
@@ -176,17 +263,56 @@ def _group_aggregate_kernel(table: Table, key: str, n_groups: int,
             src.append(col)
         elif op not in ("sum", "avg", "count", "max", "min"):
             raise ValueError(f"unknown agg op {op!r}")
-    # column 0 carries the weights (COUNT); masked rows have weight 0 so
-    # they vanish from every fused sum.
     vals = jnp.stack(
         [w] + [table.col(c).astype(jnp.float32) * w for c in src], axis=1)
-    if n_groups <= DENSE_GROUP_LIMIT:
-        sums = _fused_dense(keys, vals, n_groups, mode=mode)
-        overflow = jnp.zeros((), jnp.int32)
-    else:
+    return keys, vals, src
+
+
+def stacked_group_sums(keys: jax.Array, vals: jax.Array, n_groups: int, *,
+                       layout: str, mode: Optional[str] = None,
+                       n_partitions: int = 64, capacity_factor: float = 2.0
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Per-group sums of a stacked (N, C) values matrix under one layout.
+
+    The single physical primitive every grouped-sum lowering shares: the
+    local executor, the distributed per-shard partials (planner.py) and
+    aggregate.count_partitioned all funnel through here. Returns
+    ((n_groups, C) sums, overflow)."""
+    if layout == "xla":
+        return (jax.ops.segment_sum(vals, keys, num_segments=n_groups),
+                jnp.zeros((), jnp.int32))
+    if layout == "dense":
+        return _fused_dense(keys, vals, n_groups, mode=mode), \
+            jnp.zeros((), jnp.int32)
+    if layout == "partitioned":
         sums, overflow = _fused_partitioned(
             keys, vals, n_groups, mode=mode, n_partitions=n_partitions,
             capacity_factor=capacity_factor)
+        return sums, overflow.astype(jnp.int32)
+    raise ValueError(f"unknown layout {layout!r}")
+
+
+def segment_order_stat(table: Table, keys: jax.Array, n_groups: int,
+                       op: str, col: str) -> jax.Array:
+    """Masked per-group max/min via exact XLA segment ops (order statistics
+    are not distributive sums and never ride the fused sweep)."""
+    v = table.col(col).astype(jnp.float32)
+    w = table.weights()
+    if op == "max":
+        big = jnp.where(w > 0, v, -jnp.inf)
+        return jax.ops.segment_max(big, keys, num_segments=n_groups)
+    small = jnp.where(w > 0, v, jnp.inf)
+    return jax.ops.segment_min(small, keys, num_segments=n_groups)
+
+
+def finalize_stacked(aggs: Mapping[str, Tuple[str, str]], src: list,
+                     sums: jax.Array, order_stat) -> Dict[str, jax.Array]:
+    """Named outputs from a merged (n_groups, C) stacked-sums table.
+
+    Shared by the local kernel path and the distributed per-policy path so
+    the two can never drift. ``order_stat(op, col)`` supplies max/min (the
+    distributed executor composes a cross-shard reduction on top of the
+    segment ops)."""
     cnt = sums[:, 0]
     out: Dict[str, jax.Array] = {}
     for name, (op, col) in aggs.items():
@@ -196,17 +322,27 @@ def _group_aggregate_kernel(table: Table, key: str, n_groups: int,
             out[name] = sums[:, 1 + src.index(col)]
         elif op == "avg":
             out[name] = sums[:, 1 + src.index(col)] / jnp.maximum(cnt, 1.0)
-        else:  # max/min: order statistics stay on exact XLA segment ops
-            v = table.col(col).astype(jnp.float32)
-            if op == "max":
-                big = jnp.where(w > 0, v, -jnp.inf)
-                out[name] = jax.ops.segment_max(big, keys,
-                                                num_segments=n_groups)
-            else:
-                small = jnp.where(w > 0, v, jnp.inf)
-                out[name] = jax.ops.segment_min(small, keys,
-                                                num_segments=n_groups)
+        else:
+            out[name] = order_stat(op, col)
     out["_count"] = cnt
+    return out
+
+
+def _group_aggregate_kernel(table: Table, key: str, n_groups: int,
+                            aggs: Mapping[str, Tuple[str, str]], *,
+                            mode: Optional[str], layout: Optional[str],
+                            n_partitions: int,
+                            capacity_factor: float) -> Dict[str, jax.Array]:
+    """Tuned plan: all distributive aggregates fused into one kernel sweep."""
+    keys, vals, src = stacked_columns(table, key, n_groups, aggs)
+    if layout is None:
+        layout = "dense" if n_groups <= DENSE_GROUP_LIMIT else "partitioned"
+    sums, overflow = stacked_group_sums(
+        keys, vals, n_groups, layout=layout, mode=mode,
+        n_partitions=n_partitions, capacity_factor=capacity_factor)
+    out = finalize_stacked(
+        aggs, src, sums,
+        lambda op, col: segment_order_stat(table, keys, n_groups, op, col))
     out["_overflow"] = overflow.astype(jnp.int32)
     return out
 

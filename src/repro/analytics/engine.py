@@ -50,7 +50,11 @@ def route_records(keys: jax.Array, vals: jax.Array, n_shards: int,
                   owner: jax.Array, capacity: int
                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Bucket local records by owning shard into a dense (n, capacity) send
-    layout. Returns (keys_out, vals_out, overflow). Padding key = -1."""
+    layout. Returns (keys_out, vals_out, overflow). Padding key = -1.
+
+    ``vals`` may carry trailing measure dims — (N,) or (N, C) — so a stacked
+    multi-aggregate matrix rides through the same routing as its keys (the
+    planner's INTERLEAVE Aggregate backend)."""
     order = jnp.argsort(owner, stable=True)
     sk, sv, so = keys[order], vals[order], owner[order]
     counts = jnp.bincount(owner, length=n_shards)
@@ -59,9 +63,87 @@ def route_records(keys: jax.Array, vals: jax.Array, n_shards: int,
     valid = jnp.arange(capacity)[None, :] < jnp.minimum(counts, capacity)[:, None]
     idx = jnp.clip(idx, 0, keys.shape[0] - 1)
     k_out = jnp.where(valid, sk[idx], -1)
-    v_out = jnp.where(valid, sv[idx], 0)
+    vmask = valid.reshape(valid.shape + (1,) * (sv.ndim - 1))
+    v_out = jnp.where(vmask, sv[idx], 0)
     overflow = jnp.maximum(counts - capacity, 0).sum()
     return k_out, v_out, overflow
+
+
+# ---------------------------------------------------------------------------
+# per-policy physical backends for the logical-plan Aggregate (planner.py)
+# ---------------------------------------------------------------------------
+# These run INSIDE an open shard_map over ``axis``: each shard holds a row
+# slice of the table and the policy decides only the placement/communication
+# plan of the shared group table — never the query semantics. FIRST_TOUCH /
+# LOCAL_ALLOC merge per-shard partial tables (all-reduce vs reduce-scatter +
+# all-gather); INTERLEAVE routes the records to bucket-interleaved owners
+# before aggregating; PREFERRED converges all records on every shard (models
+# the paper's Preferred-x congestion). All four return the same full-width
+# replicated table, so one downstream plan serves every policy.
+
+def merge_partial_table(table: jax.Array, policy: PlacementPolicy,
+                        axis: str, n: int) -> jax.Array:
+    """Merge per-shard partial (G, C) group tables into the full table.
+
+    FIRST_TOUCH owns whole replicas -> all-reduce; LOCAL_ALLOC owns the
+    output slice where it was allocated -> reduce-scatter, then an
+    all-gather republishes the slices (G is padded to a multiple of n for
+    the tiled collectives)."""
+    if policy == PlacementPolicy.FIRST_TOUCH:
+        return jax.lax.psum(table, axis)
+    if policy == PlacementPolicy.LOCAL_ALLOC:
+        G = table.shape[0]
+        pad = -G % n
+        padded = jnp.pad(table, ((0, pad),) + ((0, 0),) * (table.ndim - 1))
+        shard = jax.lax.psum_scatter(padded, axis, scatter_dimension=0,
+                                     tiled=True)
+        return jax.lax.all_gather(shard, axis, tiled=True)[:G]
+    raise ValueError(f"merge_partial_table does not implement {policy}")
+
+
+def interleave_group_sums(keys: jax.Array, vals: jax.Array, n_groups: int,
+                          axis: str, n: int, aggregate_fn, *,
+                          capacity_factor: float = 2.0
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """INTERLEAVE backend: route records to bucket-interleaved owners
+    (all-to-all of the DATA, O(N) wire bytes), aggregate once on the owner,
+    then republish. ``aggregate_fn(slot_ids, vals, n_slots) -> (sums, ovf)``
+    is the shard-local aggregation (the planner passes the cost-chosen
+    lowering, so the fused kernel path composes with this placement plan).
+    NOTE: the routed (n, cap) buffer parks every padding slot on one extra
+    drop slot with zero values, so ``aggregate_fn`` must use a layout whose
+    result does not depend on row OCCUPANCY — xla segment ops or the dense
+    chunked kernel, not the range-partitioned layout, whose per-partition
+    capacity the massed padding rows would consume (dropping real records
+    and reporting phantom overflow). Returns ((n_groups, C) replicated,
+    overflow)."""
+    G_pad = n_groups + (-n_groups % n)
+    owner = keys % n
+    cap = int(capacity_factor * keys.shape[0] / n)
+    cap = max(128, -(-cap // 128) * 128)
+    k_out, v_out, route_ovf = route_records(keys, vals, n, owner, cap)
+    k_in = jax.lax.all_to_all(k_out, axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+    v_in = jax.lax.all_to_all(v_out, axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+    # owned group g lives in local slot g // n (keys % n == my shard index)
+    n_slots = G_pad // n
+    slot = jnp.where(k_in >= 0, k_in // n, n_slots)      # OOB drop slot
+    local, agg_ovf = aggregate_fn(slot.reshape(-1),
+                                  v_in.reshape((-1,) + v_in.shape[2:]),
+                                  n_slots + 1)
+    gathered = jax.lax.all_gather(local[:n_slots], axis, tiled=True)
+    g = jnp.arange(n_groups)
+    full = gathered[(g % n) * n_slots + g // n]
+    overflow = jax.lax.psum(route_ovf + agg_ovf, axis)
+    return full, overflow
+
+
+def gather_rows(arrs, axis: str):
+    """PREFERRED backend building block: converge every shard's rows
+    (all-gather of the data, the paper's congestion worst case)."""
+    return jax.tree_util.tree_map(
+        lambda a: jax.lax.all_gather(a, axis, tiled=True), arrs)
 
 
 # ---------------------------------------------------------------------------
