@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV (assignment format). Modules:
   fig6   workload x allocator (device buffers + serving page pool)
   fig7   index nested-loop join (three index kinds)
   fig8/9 TPC-H default vs tuned configuration
+  fig_service  concurrent serving: QPS x p99 for ThreadPlacement x
+         PlacementPolicy over a mixed Q1/Q3/Q6 open-loop workload
   roofline  the dry-run (arch x shape x mesh) table
 """
 import argparse
@@ -35,7 +37,8 @@ def main() -> None:
                             fig3_fig4_thread_placement,
                             fig5_placement_policies,
                             fig6_workload_allocators, fig7_index_join,
-                            fig8_fig9_tpch, roofline_table)
+                            fig8_fig9_tpch, fig_service_throughput,
+                            roofline_table)
     modules = [
         ("fig2", fig2_allocator_microbench),
         ("fig3_fig4", fig3_fig4_thread_placement),
@@ -43,10 +46,12 @@ def main() -> None:
         ("fig6", fig6_workload_allocators),
         ("fig7", fig7_index_join),
         ("fig8_fig9", fig8_fig9_tpch),
+        ("fig_service", fig_service_throughput),
         ("roofline", roofline_table),
     ]
     if args.skip_slow:
-        modules = [m for m in modules if m[0] != "fig5"]
+        # the subprocess-mesh figures
+        modules = [m for m in modules if m[0] not in ("fig5", "fig_service")]
     if args.only:
         keys = args.only.split(",")
         modules = [m for m in modules if any(k in m[0] for k in keys)]
@@ -74,7 +79,11 @@ def main() -> None:
 
 # Rows whose latency the --check gate guards (the tuned-path trajectory).
 CHECKED_ROWS = ("fig8_tpch_q1_tuned",)
-CHECK_THRESHOLD = 1.25           # fail on >25% regression vs the recording
+CHECK_THRESHOLD = 1.25           # fail on >25% latency regression
+# Rows whose value column is a THROUGHPUT (higher is better): the served
+# Q1-mix QPS floor. A >25% QPS drop (collected < 0.75 * baseline) fails.
+CHECKED_THROUGHPUT_ROWS = ("fig_service_q1mix_batched_qps",)
+QPS_CHECK_THRESHOLD = 1.0 / 0.75
 
 
 def check_regression(collected: dict, prev_path: str) -> bool:
@@ -82,7 +91,10 @@ def check_regression(collected: dict, prev_path: str) -> bool:
     with open(prev_path) as f:
         prev = json.load(f)
     regressed = False
-    for row in CHECKED_ROWS:
+    checks = ([(r, CHECK_THRESHOLD, False) for r in CHECKED_ROWS]
+              + [(r, QPS_CHECK_THRESHOLD, True)
+                 for r in CHECKED_THROUGHPUT_ROWS])
+    for row, threshold, is_qps in checks:
         if row not in collected:
             print(f"CHECK_SKIP,{row},not measured this run (check --only "
                   f"selection)", file=sys.stderr)
@@ -90,11 +102,14 @@ def check_regression(collected: dict, prev_path: str) -> bool:
         if row not in prev:
             print(f"CHECK_SKIP,{row},not in {prev_path}", file=sys.stderr)
             continue
-        ratio = collected[row] / prev[row]
-        status = "REGRESSED" if ratio > CHECK_THRESHOLD else "ok"
+        # latency rows regress upward, throughput rows regress downward
+        ratio = (prev[row] / collected[row] if is_qps
+                 else collected[row] / prev[row])
+        unit = "qps" if is_qps else "us"
+        status = "REGRESSED" if ratio > threshold else "ok"
         print(f"check_{row},{collected[row]:.1f},"
-              f"baseline={prev[row]:.1f}us ratio={ratio:.2f}x {status}")
-        if ratio > CHECK_THRESHOLD:
+              f"baseline={prev[row]:.1f}{unit} ratio={ratio:.2f}x {status}")
+        if ratio > threshold:
             regressed = True
     return regressed
 

@@ -1,0 +1,118 @@
+"""Calibrate the planner's cost constants from measured microbenchmarks.
+
+The cost model (planner.aggregate_costs) expresses every physical
+Aggregate layout in *pass-equivalents* over the input rows, with three
+hand-set constants: FUSED_FIXED (fused sweep setup), FUSED_PER_COL
+(marginal cost per stacked column), SORT_PASS_FACTOR (argsort passes per
+log2 n). This script measures them on the CURRENT backend:
+
+  1. one-pass baseline: t_xla(C) — the XLA layout runs one segment op per
+     stacked column, so its slope over C is the per-pass unit time;
+  2. fused sweep: t_dense(C) / pass_time fit to fixed + per_col * C;
+  3. sort: t_argsort / (pass_time * log2 n).
+
+and writes a JSON profile ``planner.load_cost_profile()`` consumes —
+replacing the hand-set constants with the crossover the hardware actually
+exhibits (a CPU reference lowering and a real TPU disagree wildly about
+the fused kernel's fixed cost; the profile lets the same model serve
+both).
+
+    PYTHONPATH=src python scripts/calibrate_costs.py --out cost_profile.json
+    >>> planner.load_cost_profile("cost_profile.json")
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+
+import numpy as np
+
+
+def time_fn(fn, *, warmup: int = 2, iters: int = 5) -> float:
+    """Median seconds per call, results blocked."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=1 << 18,
+                    help="input rows for the microbenchmarks")
+    ap.add_argument("--groups", type=int, default=512,
+                    help="group domain (must stay under DENSE_GROUP_LIMIT)")
+    ap.add_argument("--cols", type=int, nargs="+", default=[1, 2, 3, 4, 6],
+                    help="stacked-matrix widths to sweep")
+    ap.add_argument("--mode", default=None,
+                    help="kernel lowering mode (None = backend default)")
+    ap.add_argument("--out", default="cost_profile.json")
+    args = ap.parse_args()
+
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analytics.columnar import stacked_group_sums
+
+    rng = np.random.RandomState(0)
+    N, G = args.rows, args.groups
+    keys = jnp.asarray(rng.randint(0, G, N).astype(np.int32))
+
+    def bench(layout: str, C: int) -> float:
+        vals = jnp.asarray(rng.rand(N, C).astype(np.float32))
+        fn = jax.jit(functools.partial(stacked_group_sums, n_groups=G,
+                                       layout=layout, mode=args.mode))
+        return time_fn(lambda: fn(keys, vals))
+
+    cols = sorted(set(args.cols))
+    t_xla = {C: bench("xla", C) for C in cols}
+    t_dense = {C: bench("dense", C) for C in cols}
+    # per-pass unit time = slope of the one-segment-op-per-column layout
+    xs = np.asarray(cols, np.float64)
+    pass_time = max(float(np.polyfit(xs, [t_xla[C] for C in cols], 1)[0]),
+                    1e-9)
+    # fused pass-equivalents: fixed + per_col * C
+    fused_eq = np.asarray([t_dense[C] / pass_time for C in cols])
+    per_col, fixed = np.polyfit(xs, fused_eq, 1)
+    # the model needs positive constants; a negative fit (e.g. a noisy
+    # tiny-input run) falls back toward the hand-set shape
+    fixed = max(float(fixed), 0.05)
+    per_col = max(float(per_col), 0.01)
+
+    t_sort = time_fn(lambda: jnp.sort(keys))
+    sort_factor = max(t_sort / (pass_time * math.log2(max(N, 2))), 0.01)
+
+    profile = {
+        "fused_fixed": round(fixed, 4),
+        "fused_per_col": round(per_col, 4),
+        "sort_pass_factor": round(float(sort_factor), 4),
+        "backend": jax.default_backend(),
+        "n_rows": N,
+        "n_groups": G,
+        "pass_time_us": round(pass_time * 1e6, 3),
+        "raw_us": {
+            "xla": {str(C): round(t_xla[C] * 1e6, 1) for C in cols},
+            "dense": {str(C): round(t_dense[C] * 1e6, 1) for C in cols},
+            "sort": round(t_sort * 1e6, 1),
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(profile, f, indent=2)
+        f.write("\n")
+    print(json.dumps(profile, indent=2))
+    print(f"\nwrote {args.out}; install with "
+          f"planner.load_cost_profile({args.out!r})")
+
+
+if __name__ == "__main__":
+    main()

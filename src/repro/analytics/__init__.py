@@ -9,15 +9,18 @@ W5 TPC-H                              tpch.run_query (q1, q3, q5, q6, q18)
 Queries are authored as logical plans (plan.py) and lowered by the
 cost-based physical planner (planner.py) onto the columnar operators
 (columnar.py) — single-device or under a placement-policy mesh backend
-(engine.py) — without changing the plan.
+(engine.py) — without changing the plan. Concurrent multi-query serving
+(admission queue -> batcher -> morsel scheduler over socket-pinned
+pools) lives in the service/ subpackage.
 """
 from repro.analytics import datasets, plan
 from repro.analytics.aggregate import (count_direct, count_partitioned,
                                        median_direct)
 from repro.analytics.engine import dist_count, dist_hash_join, dist_median
 from repro.analytics.join import hash_join, index_join
-from repro.analytics.planner import (ExecutionContext, execute_plan, explain,
-                                     plan_cache_info)
+from repro.analytics.planner import (CompiledPlan, ExecutionContext,
+                                     compile_plan, execute_plan, explain,
+                                     load_cost_profile, plan_cache_info)
 from repro.analytics.tpch import LOGICAL_QUERIES
 from repro.analytics.tpch import generate as tpch_generate
 from repro.analytics.tpch import run_query as tpch_run_query

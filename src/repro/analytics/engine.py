@@ -33,13 +33,14 @@ PREFERRED.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.analytics.columnar import stacked_group_sums
 from repro.core.config import PlacementPolicy
 
 
@@ -67,6 +68,72 @@ def route_records(keys: jax.Array, vals: jax.Array, n_shards: int,
     v_out = jnp.where(vmask, sv[idx], 0)
     overflow = jnp.maximum(counts - capacity, 0).sum()
     return k_out, v_out, overflow
+
+
+# ---------------------------------------------------------------------------
+# morsel-sliced distributive aggregation (the serving scheduler's unit)
+# ---------------------------------------------------------------------------
+# A morsel is a contiguous row range of a scan — the intra-node work-split
+# analog of the paper's kernel load balancing: the serving scheduler
+# (analytics/service/scheduler.py) dispatches morsels to socket-pinned
+# worker pools and merges the per-morsel partial tables in MORSEL ORDER, so
+# the merged result is deterministic for a fixed morsel size regardless of
+# which pool executed which morsel (or in what order work stealing
+# completed them).
+
+def morsel_slices(n_rows: int, morsel_rows: Optional[int]
+                  ) -> List[Tuple[int, int]]:
+    """[lo, hi) row ranges covering n_rows; the last morsel takes the
+    remainder when n_rows is not divisible by morsel_rows. None = one
+    morsel (whole scan)."""
+    if morsel_rows is not None and morsel_rows < 1:
+        raise ValueError("morsel_rows must be >= 1")
+    if morsel_rows is None or morsel_rows >= n_rows:
+        return [(0, n_rows)]
+    return [(lo, min(lo + morsel_rows, n_rows))
+            for lo in range(0, n_rows, morsel_rows)]
+
+
+def morsel_slice_columns(cols, lo, length: int):
+    """Slice every column of a scan to one morsel's rows [lo, lo+length).
+
+    ``length`` is static (jit specializes per morsel width — with a fixed
+    morsel size only the tail morsel adds a second compilation) while
+    ``lo`` stays a traced scalar, so one executable serves every aligned
+    morsel of a scan."""
+    return {c: jax.lax.dynamic_slice_in_dim(jnp.asarray(a), lo, length)
+            for c, a in cols.items()}
+
+
+def morsel_group_sums(keys: jax.Array, vals: jax.Array, n_groups: int, *,
+                      layout: str = "xla", mode: Optional[str] = None,
+                      n_partitions: int = 64, capacity_factor: float = 2.0
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Partial (n_groups, C) sums over ONE morsel's (already-sliced) rows.
+
+    A named delegation to the shared stacked-group-sums recipe: the morsel
+    path exercises the SAME physical layouts the planner chooses between,
+    and the (sums, int32 overflow) pair is exactly what
+    merge_morsel_partials folds."""
+    return stacked_group_sums(
+        keys, vals, n_groups, layout=layout, mode=mode,
+        n_partitions=n_partitions, capacity_factor=capacity_factor)
+
+
+def merge_morsel_partials(partials: Sequence[Tuple[jax.Array, jax.Array]]
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Left-fold per-morsel (sums, overflow) partials in morsel order.
+
+    The fold order is part of the result's float semantics: merging in
+    sequence-number order (not completion order) keeps served answers
+    deterministic under work stealing."""
+    if not partials:
+        raise ValueError("no morsel partials to merge")
+    sums, overflow = partials[0]
+    for s, o in partials[1:]:
+        sums = sums + s
+        overflow = overflow + o
+    return sums, overflow
 
 
 # ---------------------------------------------------------------------------
@@ -154,61 +221,61 @@ def dist_count(mesh: Mesh, policy: PlacementPolicy, cardinality: int, *,
                auto_rebalance: bool = False) -> Callable:
     """Build the policy's distributed COUNT plan.
 
-    Returns fn(keys (N,) sharded over ``axis``) -> counts.
-    Output ownership differs by policy (documented per branch)."""
+    Returns fn(keys (N,) sharded over ``axis``) -> (G,) counts, replicated
+    in natural group order under every policy.
+
+    W2 no longer carries its own shard_map plan: the count is expressed as
+    a logical ``Aggregate`` and lowered through the planner's distributed
+    backend — the same per-policy collectives (merge_partial_table /
+    interleave_group_sums / gather_rows) that serve the TPC-H plans, so
+    there is exactly one copy of each placement strategy in the repo. This
+    thin wrapper exists for the fig5 benchmark and callers that want the
+    bare-operator signature. The AutoNUMA analogue is composed as a
+    post-pass: a policy-ideal resharding of the already-merged table (pure
+    extra collective traffic when the plan was already local, paper Fig
+    5a)."""
+    # planner imports engine's merge primitives; import lazily to avoid the
+    # module cycle
+    from repro.analytics import plan as L
+    from repro.analytics import planner
+
     n = mesh.shape[axis]
-    G = cardinality
+    lplan = L.LogicalPlan(
+        L.scan("keys").aggregate("k", cardinality, count=("count", "k")),
+        ("count",))
+    ctx = planner.ExecutionContext(executor="xla", mesh=mesh, policy=policy,
+                                   axis=axis, capacity_factor=capacity_factor)
+    rebalance = shard_map(
+        lambda t: _rebalance_to_interleave(t, n, axis), mesh=mesh,
+        in_specs=P(), out_specs=P(), check_rep=False)
 
-    def first_touch(keys):
-        local = jax.ops.segment_sum(jnp.ones_like(keys, jnp.float32),
-                                    keys, num_segments=G)
-        merged = jax.lax.psum(local, axis)              # all-reduce O(G*n)
+    def fn(keys):
+        counts = planner.execute_plan(lplan, {"keys": {"k": keys}},
+                                      ctx)["count"]
         if auto_rebalance:  # AutoNUMA: reshard toward interleave post hoc
-            merged = _rebalance_to_interleave(merged, n, axis)
-        return merged
+            counts = rebalance(counts)
+        return counts
 
-    def local_alloc(keys):
-        local = jax.ops.segment_sum(jnp.ones_like(keys, jnp.float32),
-                                    keys, num_segments=G)
-        return jax.lax.psum_scatter(local, axis, scatter_dimension=0,
-                                    tiled=True)          # reduce-scatter
-
-    def interleave(keys):
-        owner = keys % n                                 # bucket-interleaved
-        cap = int(capacity_factor * keys.shape[0] / n)
-        cap = max(128, -(-cap // 128) * 128)
-        k_out, v_out, ovf = route_records(
-            keys, jnp.ones_like(keys, jnp.float32), n, owner, cap)
-        k_in = jax.lax.all_to_all(k_out, axis, split_axis=0, concat_axis=0,
-                                  tiled=True)
-        v_in = jax.lax.all_to_all(v_out, axis, split_axis=0, concat_axis=0,
-                                  tiled=True)
-        # owned group g maps to local slot g // n  (keys % n == my index)
-        slot = jnp.where(k_in >= 0, k_in // n, G // n)   # OOB drop slot
-        local = jax.ops.segment_sum(jnp.where(k_in >= 0, v_in, 0.0).reshape(-1),
-                                    slot.reshape(-1),
-                                    num_segments=G // n + 1)[:G // n]
-        return local                                     # shard owns G/n rows
-
-    def preferred(keys):
-        all_keys = jax.lax.all_gather(keys, axis, tiled=True)  # O(N*n) wire
-        return jax.ops.segment_sum(jnp.ones_like(all_keys, jnp.float32),
-                                   all_keys, num_segments=G)
-
-    fns = {PlacementPolicy.FIRST_TOUCH: (first_touch, P(None)),
-           PlacementPolicy.LOCAL_ALLOC: (local_alloc, P(axis)),
-           PlacementPolicy.INTERLEAVE: (interleave, P(axis)),
-           PlacementPolicy.PREFERRED: (preferred, P(None))}
-    fn, out_spec = fns[policy]
-    return shard_map(fn, mesh=mesh, in_specs=P(axis), out_specs=out_spec,
-                     check_rep=False)
+    return fn
 
 
 def _rebalance_to_interleave(table: jax.Array, n: int, axis: str) -> jax.Array:
     """AutoNUMA analogue: migrate a replicated table toward interleaved
-    ownership — pure extra collective traffic on an already-merged result."""
-    shard = jax.lax.psum_scatter(table, axis, scatter_dimension=0, tiled=True)
-    return jax.lax.all_gather(shard, axis, tiled=True)
+    ownership — pure extra collective traffic on an already-merged result.
+
+    The input is the REPLICATED merged table (one identical copy per
+    shard), so the reduce-scatter sums n copies; dividing AFTER the
+    scatter keeps the migration value-preserving ((n*x)/n is exact for
+    exactly-representable x, e.g. integer counts, where float32(x/n)
+    summed n times is not — n=6 turns a count of 7 into 6.9999995). The
+    leading dim is padded to a multiple of n for the tiled collectives
+    (as in merge_partial_table) and sliced back after the gather."""
+    G = table.shape[0]
+    pad = -G % n
+    padded = jnp.pad(table, ((0, pad),) + ((0, 0),) * (table.ndim - 1))
+    shard = jax.lax.psum_scatter(padded, axis, scatter_dimension=0,
+                                 tiled=True) / n
+    return jax.lax.all_gather(shard, axis, tiled=True)[:G]
 
 
 # ---------------------------------------------------------------------------

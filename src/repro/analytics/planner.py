@@ -52,7 +52,9 @@ amortize across traces.
 from __future__ import annotations
 
 import functools
+import json
 import math
+import threading
 import weakref
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -120,27 +122,78 @@ FUSED_PER_COL = 0.45     # marginal pass-equivalent per stacked column
 SORT_PASS_FACTOR = 0.25  # argsort pass-equivalents per log2(n_rows)
 
 
-def aggregate_costs(n_rows: int, n_groups: int,
-                    n_cols: int) -> Dict[str, float]:
+@dataclass(frozen=True)
+class CostProfile:
+    """Pass-equivalent cost constants, either the hand-set defaults or a
+    measured profile (scripts/calibrate_costs.py). Frozen/hashable so the
+    active profile participates in the plan-cache key — plans compiled
+    under one profile are never served after the constants change."""
+
+    fused_fixed: float = FUSED_FIXED
+    fused_per_col: float = FUSED_PER_COL
+    sort_pass_factor: float = SORT_PASS_FACTOR
+    source: str = "builtin"
+
+
+_COST_PROFILE = CostProfile()
+_COST_PROFILE_LOCK = threading.Lock()
+
+
+def current_cost_profile() -> CostProfile:
+    return _COST_PROFILE
+
+
+def set_cost_profile(profile: Optional[CostProfile]) -> CostProfile:
+    """Install a cost profile (None restores the hand-set defaults)."""
+    global _COST_PROFILE
+    with _COST_PROFILE_LOCK:
+        _COST_PROFILE = profile or CostProfile()
+    return _COST_PROFILE
+
+
+def load_cost_profile(path: str) -> CostProfile:
+    """Install the measured constants written by scripts/calibrate_costs.py.
+
+    The JSON carries {"fused_fixed", "fused_per_col", "sort_pass_factor"}
+    (extra keys — backend, raw timings — are kept as provenance in
+    ``source``); when present they replace the hand-set defaults for every
+    subsequent planning decision."""
+    with open(path) as f:
+        raw = json.load(f)
+    return set_cost_profile(CostProfile(
+        fused_fixed=float(raw["fused_fixed"]),
+        fused_per_col=float(raw["fused_per_col"]),
+        sort_pass_factor=float(raw.get("sort_pass_factor", SORT_PASS_FACTOR)),
+        source=str(raw.get("backend", path))))
+
+
+def aggregate_costs(n_rows: int, n_groups: int, n_cols: int,
+                    profile: Optional[CostProfile] = None
+                    ) -> Dict[str, float]:
     """Pass-equivalent cost of each physical Aggregate layout (see module
     docstring for the formulas). ``n_cols`` counts the stacked matrix width:
-    1 (COUNT/weights) + distinct sum/avg source columns."""
-    fused = FUSED_FIXED + FUSED_PER_COL * n_cols
+    1 (COUNT/weights) + distinct sum/avg source columns. The constants come
+    from ``profile`` — callers that cache on a profile snapshot must pass
+    it explicitly so a concurrent recalibration cannot leak into a plan
+    keyed under the old profile — or the active CostProfile."""
+    p = profile or _COST_PROFILE
+    fused = p.fused_fixed + p.fused_per_col * n_cols
     return {
         "xla": float(n_cols),
         "dense": fused if n_groups <= DENSE_GROUP_LIMIT else math.inf,
-        "partitioned": fused + SORT_PASS_FACTOR * math.log2(max(n_rows, 2)),
+        "partitioned": fused + p.sort_pass_factor * math.log2(max(n_rows, 2)),
     }
 
 
 def choose_aggregate(n_rows: int, n_groups: int, n_cols: int,
-                     executor: str = "cost") -> str:
+                     executor: str = "cost",
+                     profile: Optional[CostProfile] = None) -> str:
     """Physical layout for one Aggregate: "xla" | "dense" | "partitioned"."""
     if executor == "xla":
         return "xla"
     if executor == "kernel":     # the tuned-path preference: always fused
         return "dense" if n_groups <= DENSE_GROUP_LIMIT else "partitioned"
-    costs = aggregate_costs(n_rows, n_groups, n_cols)
+    costs = aggregate_costs(n_rows, n_groups, n_cols, profile)
     return min(costs, key=costs.get)
 
 
@@ -190,41 +243,59 @@ class CacheInfo(NamedTuple):
 
 
 class LRUCache:
+    """Bounded LRU, safe for concurrent get/put/evict.
+
+    The service's worker pools hit the plan cache and join-index pool from
+    many threads at once; unlocked, an interleaved move_to_end/popitem pair
+    can race an eviction and raise KeyError, and the hit/miss counters can
+    drop increments. Every mutation (including the counters, so
+    ``plan_cache_info()`` is race-free) happens under one re-entrant lock —
+    the critical sections are dict operations, far cheaper than the plan
+    dispatch they guard."""
+
     def __init__(self, maxsize: int):
         self.maxsize = maxsize
         self._d: "OrderedDict" = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self._lock = threading.RLock()
 
     def get(self, key):
-        hit = self._d.get(key)
-        if hit is None:
-            self.misses += 1
-            return None
-        self._d.move_to_end(key)
-        self.hits += 1
-        return hit
+        with self._lock:
+            hit = self._d.get(key)
+            if hit is None:
+                self.misses += 1
+                return None
+            self._d.move_to_end(key)
+            self.hits += 1
+            return hit
 
     def put(self, key, value) -> None:
-        self._d[key] = value
-        self._d.move_to_end(key)
-        while len(self._d) > self.maxsize:
-            self._d.popitem(last=False)
+        with self._lock:
+            self._d[key] = value
+            self._d.move_to_end(key)
+            while len(self._d) > self.maxsize:
+                self._d.popitem(last=False)
 
     def resize(self, maxsize: int) -> None:
-        self.maxsize = maxsize
-        while len(self._d) > self.maxsize:
-            self._d.popitem(last=False)
+        with self._lock:
+            self.maxsize = maxsize
+            while len(self._d) > self.maxsize:
+                self._d.popitem(last=False)
 
     def clear(self) -> None:
-        self._d.clear()
-        self.hits = self.misses = 0
+        with self._lock:
+            self._d.clear()
+            self.hits = self.misses = 0
 
     def __len__(self) -> int:
-        return len(self._d)
+        with self._lock:
+            return len(self._d)
 
     def info(self) -> CacheInfo:
-        return CacheInfo(self.hits, self.misses, self.maxsize, len(self._d))
+        with self._lock:
+            return CacheInfo(self.hits, self.misses, self.maxsize,
+                             len(self._d))
 
 
 DEFAULT_PLAN_CACHE_ENTRIES = 64
@@ -275,17 +346,23 @@ class JoinIndexPool:
         hit = self._lru.get(key)
         if hit is not None and hit[0]() is arr:
             return hit[1]
+        # the argsort runs outside the lock: concurrent first-touchers of
+        # the same column may both build (harmless — one entry survives),
+        # but never block every other pool on an O(N log N) sort
         order = jnp.argsort(jnp.asarray(arr))
         idx = (order, jnp.asarray(arr)[order])
-        self._lru.put(key, (weakref.ref(arr), idx))
-        self.builds += 1
-        self._sweep_dead()
+        with self._lru._lock:
+            self._lru.put(key, (weakref.ref(arr), idx))
+            self.builds += 1
+            self._sweep_dead()
         return idx
 
     def _sweep_dead(self) -> None:
-        dead = [k for k, (ref, _) in self._lru._d.items() if ref() is None]
-        for k in dead:
-            del self._lru._d[k]
+        with self._lru._lock:
+            dead = [k for k, (ref, _) in self._lru._d.items()
+                    if ref() is None]
+            for k in dead:
+                del self._lru._d[k]
 
     def info(self) -> CacheInfo:
         return self._lru.info()
@@ -351,11 +428,13 @@ def eval_expr(e: L.Expr, table: Table):
 class _LocalExecutor:
     """Single-device lowering of a logical plan (trace-time recursion)."""
 
-    def __init__(self, tables, ctx: ExecutionContext, indexes, true_rows):
+    def __init__(self, tables, ctx: ExecutionContext, indexes, true_rows,
+                 profile: Optional[CostProfile] = None):
         self.tables = tables
         self.ctx = ctx
         self.indexes = indexes           # {"table.column": (order, sk)}
         self.true_rows = true_rows       # unpadded row counts per table
+        self.profile = profile           # cost-constant snapshot (cache key)
         self.overflow = jnp.zeros((), jnp.int32)
         self._memo: Dict[L.Node, object] = {}
 
@@ -429,7 +508,7 @@ class _LocalExecutor:
             return self._scalar_aggregate(node, t)
         G = self.resolve_groups(node.n_groups)
         layout = choose_aggregate(t.n_rows, G, stacked_width(node.aggs),
-                                  self.ctx.executor)
+                                  self.ctx.executor, self.profile)
         out = self._grouped(node, t, G, layout)
         self.overflow = self.overflow + out["_overflow"]
         return out
@@ -488,8 +567,9 @@ class _DistributedExecutor(_LocalExecutor):
     merge through the engine.py per-policy collectives. The merged group
     tables (and therefore every post-aggregation node) are replicated."""
 
-    def __init__(self, tables, ctx: ExecutionContext, true_rows, n_shards):
-        super().__init__(tables, ctx, {}, true_rows)
+    def __init__(self, tables, ctx: ExecutionContext, true_rows, n_shards,
+                 profile: Optional[CostProfile] = None):
+        super().__init__(tables, ctx, {}, true_rows, profile)
         self.n = n_shards
 
     def _scan(self, node: L.Scan) -> Table:
@@ -523,7 +603,7 @@ class _DistributedExecutor(_LocalExecutor):
 
         def local_sums(k, v, n_groups, allow_partitioned=True):
             layout = choose_aggregate(k.shape[0], n_groups, v.shape[1],
-                                      self.ctx.executor)
+                                      self.ctx.executor, self.profile)
             if layout == "partitioned" and not allow_partitioned:
                 # the routed interleave buffer masses its padding on one
                 # drop slot; the partitioned layout's capacity accounting
@@ -601,18 +681,42 @@ def _signature(tables) -> Tuple:
                         for c, a in cols.items()))
 
 
+def table_signature(tables) -> Tuple:
+    """Public shape signature of a {table: {column: array}} pytree — the
+    axis of the plan-cache key that identifies "structurally identical
+    data" (stable across dict rebuilds; the serving batcher groups on
+    it)."""
+    return _signature(tables)
+
+
+def cached_executable(key: Tuple, build):
+    """Fetch-or-build an executable in the shared bounded plan LRU.
+
+    Public seam for auxiliary executables that must live under the same
+    cache bound and thread-safety as compiled plans (e.g. the serving
+    scheduler's per-morsel partial-aggregation functions). ``key`` should
+    start with a distinguishing tag so it can never collide with
+    compile_plan's (plan, ctx, signature, profile) keys."""
+    fn = _PLAN_CACHE.get(key)
+    if fn is None:
+        fn = build()
+        _PLAN_CACHE.put(key, fn)
+    return fn
+
+
 def _true_rows(tables) -> Dict[str, int]:
     return {t: next(iter(cols.values())).shape[0]
             for t, cols in tables.items()}
 
 
-def _run_local(plan: L.LogicalPlan, ctx: ExecutionContext, tables, indexes):
-    ex = _LocalExecutor(tables, ctx, indexes, _true_rows(tables))
+def _run_local(plan: L.LogicalPlan, ctx: ExecutionContext, profile, tables,
+               indexes):
+    ex = _LocalExecutor(tables, ctx, indexes, _true_rows(tables), profile)
     return ex.execute(plan)
 
 
-def _run_distributed(plan: L.LogicalPlan, ctx: ExecutionContext, tables,
-                     indexes):
+def _run_distributed(plan: L.LogicalPlan, ctx: ExecutionContext, profile,
+                     tables, indexes):
     del indexes          # full-table indexes don't survive the row padding
     mesh, axis = ctx.mesh, ctx.axis
     n = mesh.shape[axis]
@@ -628,7 +732,7 @@ def _run_distributed(plan: L.LogicalPlan, ctx: ExecutionContext, tables,
         padded[t] = pcols
 
     def local_fn(local_tables):
-        ex = _DistributedExecutor(local_tables, ctx, rows, n)
+        ex = _DistributedExecutor(local_tables, ctx, rows, n, profile)
         return ex.execute(plan)
 
     specs = jax.tree_util.tree_map(lambda _: P(axis), padded)
@@ -636,10 +740,58 @@ def _run_distributed(plan: L.LogicalPlan, ctx: ExecutionContext, tables,
                      check_rep=False)(padded)
 
 
-def _run_plan(plan: L.LogicalPlan, ctx: ExecutionContext, tables, indexes):
+def _run_plan(plan: L.LogicalPlan, ctx: ExecutionContext, profile, tables,
+              indexes):
     if ctx.mesh is None:
-        return _run_local(plan, ctx, tables, indexes)
-    return _run_distributed(plan, ctx, tables, indexes)
+        return _run_local(plan, ctx, profile, tables, indexes)
+    return _run_distributed(plan, ctx, profile, tables, indexes)
+
+
+class CompiledPlan:
+    """Re-entrant dispatch handle for one (plan, context, shape signature).
+
+    ``compile_plan`` resolves the plan-cache entry ONCE; the handle can then
+    be called from any worker thread without touching the planner again —
+    only the join-index pool is consulted per call (a lock-protected LRU
+    hit), so concurrent dispatch never re-plans, re-jits, or races an
+    eviction. This is the entry point the serving scheduler pins into its
+    worker pools."""
+
+    __slots__ = ("plan", "ctx", "fn", "index_specs")
+
+    def __init__(self, plan: L.LogicalPlan, ctx: ExecutionContext, fn,
+                 index_specs: Tuple[Tuple[str, str], ...]):
+        self.plan = plan
+        self.ctx = ctx
+        self.fn = fn
+        self.index_specs = index_specs
+
+    def __call__(self, tables) -> Dict[str, jax.Array]:
+        indexes = {}
+        if self.ctx.mesh is None:
+            for t, c in self.index_specs:
+                indexes[f"{t}.{c}"] = _INDEX_POOL.get(t, c, tables[t][c])
+        return self.fn(tables, indexes)
+
+
+def compile_plan(plan: L.LogicalPlan, tables,
+                 ctx: Optional[ExecutionContext] = None) -> CompiledPlan:
+    """Resolve (or build) the compiled executable for a logical plan.
+
+    ``tables`` supplies only the shape signature — the returned handle runs
+    on ANY tables pytree of the same shapes. The active CostProfile is
+    snapshotted ONCE: it keys the cache AND is baked into the compiled
+    closure (jit traces lazily on first call — reading the global there
+    would let a concurrent recalibration plan under the new constants but
+    cache under the old key)."""
+    ctx = ctx or ExecutionContext()
+    profile = current_cost_profile()
+    key = (plan, ctx.cache_key(), _signature(tables), profile)
+    fn = _PLAN_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(functools.partial(_run_plan, plan, ctx, profile))
+        _PLAN_CACHE.put(key, fn)
+    return CompiledPlan(plan, ctx, fn, required_indexes(plan.root))
 
 
 def execute_plan(plan: L.LogicalPlan, tables,
@@ -651,17 +803,7 @@ def execute_plan(plan: L.LogicalPlan, tables,
     plan as traced arguments — one compilation serves any data of the same
     shape signature. Build-side join indexes are pulled from the
     JoinIndexPool and traced in alongside."""
-    ctx = ctx or ExecutionContext()
-    key = (plan, ctx.cache_key(), _signature(tables))
-    fn = _PLAN_CACHE.get(key)
-    if fn is None:
-        fn = jax.jit(functools.partial(_run_plan, plan, ctx))
-        _PLAN_CACHE.put(key, fn)
-    indexes = {}
-    if ctx.mesh is None:
-        for t, c in required_indexes(plan.root):
-            indexes[f"{t}.{c}"] = _INDEX_POOL.get(t, c, tables[t][c])
-    return fn(tables, indexes)
+    return compile_plan(plan, tables, ctx)(tables)
 
 
 def explain(plan: L.LogicalPlan, tables,

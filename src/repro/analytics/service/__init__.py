@@ -1,0 +1,34 @@
+"""Concurrent query-serving subsystem over the cost-based planner.
+
+The paper's biggest wins come from *placement of work* — thread placement
+(Figs 3/4), kernel load balancing, and memory placement (Fig 5) decide
+whether memory-intensive operators run near their data. This package is
+the serving layer where those effects compound under concurrency:
+
+    submit() -> AdmissionQueue -> QueryBatcher -> MorselScheduler -> pools
+
+  queue.py      bounded admission with deadlines and backpressure stats
+  batcher.py    multi-query batching by plan-cache key (structurally
+                identical queries execute as one dispatch)
+  scheduler.py  morsel-driven scheduling onto socket-pinned worker pools;
+                ThreadPlacement (OS_DEFAULT/DENSE/SPARSE) controls
+                pool-to-shard affinity, work stealing is the AutoNUMA /
+                kernel-load-balancing analog (steals counted)
+  service.py    the AnalyticsService facade: submit()/drain(),
+                per-query latency + queue-wait histograms, ServiceStats
+"""
+from repro.analytics.service.batcher import BatchStats, QueryBatcher
+from repro.analytics.service.queue import (AdmissionQueue, QueryRequest,
+                                           QueueStats)
+from repro.analytics.service.scheduler import (MorselScheduler,
+                                               SchedulerStats,
+                                               ThreadPlacement, WorkerPool)
+from repro.analytics.service.service import (AnalyticsService, QueryResult,
+                                             ServiceConfig, ServiceStats)
+
+__all__ = [
+    "AdmissionQueue", "AnalyticsService", "BatchStats", "MorselScheduler",
+    "QueryBatcher", "QueryRequest", "QueryResult", "QueueStats",
+    "SchedulerStats", "ServiceConfig", "ServiceStats", "ThreadPlacement",
+    "WorkerPool",
+]

@@ -1,0 +1,118 @@
+"""Admission queue: bounded multi-client intake with deadlines.
+
+The serving layer's first placement decision is *whether work enters at
+all*: a bounded queue turns overload into explicit backpressure
+(``offer`` returning False) instead of unbounded memory growth, and
+deadline checks at dispatch time shed requests that already missed their
+budget while queued — the two levers the paper's co-running-queries
+problem (Awan et al.) needs before any placement tuning can help.
+
+Every counter is taken under the queue lock, so ``stats()`` snapshots are
+race-free with respect to concurrent submitters and the drain loop.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, List, Mapping, Optional
+
+from repro.analytics.plan import LogicalPlan
+from repro.analytics.planner import ExecutionContext
+
+
+@dataclass
+class QueryRequest:
+    """One client query: a logical plan + a tables reference + a budget.
+
+    ``tables`` is a {table: {column: array}} mapping — held by reference,
+    never copied; structurally identical requests over the SAME mapping
+    are deduplicated into one dispatch by the batcher. ``deadline_s`` is
+    an absolute ``time.monotonic()`` point; None = no deadline."""
+
+    req_id: int
+    plan: LogicalPlan
+    tables: Mapping[str, Mapping[str, Any]]
+    context: ExecutionContext
+    deadline_s: Optional[float] = None
+    client_id: int = 0
+    submit_t: float = 0.0          # stamped by the queue at admission
+    dispatch_t: float = 0.0        # stamped by the service at dispatch
+
+    def expired(self, now: float) -> bool:
+        return self.deadline_s is not None and now > self.deadline_s
+
+
+@dataclass
+class QueueStats:
+    submitted: int = 0             # offers seen (admitted + rejected)
+    admitted: int = 0
+    rejected_full: int = 0         # backpressure: queue at max depth
+    expired: int = 0               # missed deadline while queued
+    depth: int = 0                 # current
+    max_depth_seen: int = 0
+    queue_wait_total_s: float = 0.0  # summed over dequeued requests
+
+    def copy(self) -> "QueueStats":
+        return QueueStats(**self.__dict__)
+
+
+class AdmissionQueue:
+    """Bounded FIFO of QueryRequests with race-free backpressure stats."""
+
+    def __init__(self, max_depth: int = 256):
+        if max_depth < 1:
+            raise ValueError("queue needs max_depth >= 1")
+        self.max_depth = max_depth
+        self._q: "deque[QueryRequest]" = deque()
+        self._lock = threading.Lock()
+        self._stats = QueueStats()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._q)
+
+    def offer(self, req: QueryRequest,
+              now: Optional[float] = None) -> bool:
+        """Admit a request; False = rejected (queue full, backpressure)."""
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            self._stats.submitted += 1
+            if len(self._q) >= self.max_depth:
+                self._stats.rejected_full += 1
+                return False
+            req.submit_t = now
+            self._q.append(req)
+            self._stats.admitted += 1
+            self._stats.depth = len(self._q)
+            self._stats.max_depth_seen = max(self._stats.max_depth_seen,
+                                             len(self._q))
+            return True
+
+    def take_batch(self, max_n: int, now: Optional[float] = None
+                   ) -> "tuple[List[QueryRequest], List[QueryRequest]]":
+        """Dequeue up to ``max_n`` live requests in FIFO order.
+
+        Returns (live, expired): requests whose deadline passed while
+        queued are shed — counted, and handed back so the serving loop can
+        report their fate to the submitter instead of dropping silently."""
+        now = time.monotonic() if now is None else now
+        out: List[QueryRequest] = []
+        shed: List[QueryRequest] = []
+        with self._lock:
+            while self._q and len(out) < max_n:
+                req = self._q.popleft()
+                self._stats.queue_wait_total_s += now - req.submit_t
+                if req.expired(now):
+                    self._stats.expired += 1
+                    shed.append(req)
+                    continue
+                req.dispatch_t = now
+                out.append(req)
+            self._stats.depth = len(self._q)
+        return out, shed
+
+    def stats(self) -> QueueStats:
+        with self._lock:
+            return self._stats.copy()

@@ -1,0 +1,434 @@
+"""Morsel-driven scheduler: socket-pinned worker pools + work stealing.
+
+The execution analog of the paper's thread-placement axis (Figs 3/4):
+
+  * A **WorkerPool** is the NUMA-socket analog — it owns a CONTIGUOUS
+    slice of the device mesh (shard range) and a small set of worker
+    threads pinned to it. On the single-controller JAX runtime the
+    pinning is an affinity *model* (which pool's threads dispatch which
+    work, and which shard slice that work is accounted against); on a
+    real multi-host deployment the pool maps 1:1 to a host's devices.
+  * A **morsel** is a contiguous row range of a scan (engine.morsel_slices)
+    — the work unit that makes load balancing possible at all. Plans
+    whose root is a distributive Aggregate over a Scan/Filter/Project
+    chain are split into per-morsel partial aggregations merged in morsel
+    order (engine.merge_morsel_partials — deterministic under stealing);
+    everything else (joins, TopK, distributed contexts) executes as one
+    whole-plan morsel through the planner's CompiledPlan handle, which is
+    bit-identical to a serial ``run_query`` by construction.
+  * **ThreadPlacement** mirrors benchmarks/fig3_fig4_thread_placement.py:
+    OS_DEFAULT round-robins morsels over pools in arrival order (the
+    topology-oblivious baseline), DENSE packs a query's morsels onto one
+    pool (contiguous shards, minimal cross-pool traffic), SPARSE stripes
+    them across every pool (maximal aggregate bandwidth).
+  * **Work stealing** is the AutoNUMA / kernel-load-balancing analog: an
+    idle pool steals from the longest backlog; every steal is counted
+    per pool and surfaced in SchedulerStats.
+"""
+from __future__ import annotations
+
+import enum
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analytics import plan as L
+from repro.analytics import planner
+from repro.analytics.columnar import Table, finalize_stacked, stacked_columns
+from repro.analytics.engine import (merge_morsel_partials, morsel_group_sums,
+                                    morsel_slice_columns, morsel_slices)
+from repro.analytics.planner import ExecutionContext
+
+
+class ThreadPlacement(enum.Enum):
+    """Pool-to-work affinity strategies (the Fig 3/4 axis).
+
+    OS_DEFAULT  arrival-order round-robin, no affinity (the "OS free to
+                migrate" baseline — MeshLayout.NONE's serving analog).
+    DENSE       a query's morsels packed onto ONE pool: contiguous shard
+                slice, minimal cross-pool hops (Fig 4's dense pinning).
+    SPARSE      a query's morsels striped across ALL pools: maximal
+                aggregate bandwidth per query (Fig 3/4's sparse pinning).
+    """
+
+    OS_DEFAULT = "os_default"
+    DENSE = "dense"
+    SPARSE = "sparse"
+
+
+# Multi-device (mesh-context) computations must be dispatched by one
+# thread at a time: concurrent shard_map dispatch from worker threads can
+# interleave per-device enqueue order (A before B on dev0, B before A on
+# dev1) and deadlock the collectives. A distributed plan owns the WHOLE
+# mesh anyway — serializing its dispatch loses no parallelism; pools keep
+# overlapping single-device work freely.
+_MESH_DISPATCH_LOCK = threading.Lock()
+
+
+@dataclass
+class _Morsel:
+    task: "QueryTask"
+    seq: int                      # position in the task's morsel order
+    lo: int
+    length: int
+    home_pool: int = -1           # assigned pool (stamped at dispatch)
+
+
+class QueryTask:
+    """One dispatch: a whole plan or a set of morsel partial-aggregations.
+
+    ``wait()`` blocks until every morsel completed and the merged result
+    is available. Exceptions raised by any morsel are captured and
+    re-raised to the waiter."""
+
+    def __init__(self, compiled: Optional[planner.CompiledPlan], tables,
+                 morsel_fn: Optional[Callable] = None,
+                 finalize: Optional[Callable] = None,
+                 morsels: Optional[List[Tuple[int, int]]] = None):
+        self.compiled = compiled            # None iff morsel-decomposed
+        self.tables = tables
+        self.morsel_fn = morsel_fn          # (tables, lo, length) -> partial
+        self.finalize = finalize            # (sums, overflow) -> result dict
+        self._partials: Dict[int, Any] = {}
+        self._lock = threading.Lock()
+        self._done = threading.Event()
+        self._error: Optional[BaseException] = None
+        self.result: Optional[Dict[str, jax.Array]] = None
+        self.done_t: float = 0.0            # completion stamp (monotonic)
+        if morsel_fn is None:
+            self.morsels = [_Morsel(self, 0, 0, 0)]
+        else:
+            self.morsels = [_Morsel(self, i, lo, hi - lo)
+                            for i, (lo, hi) in enumerate(morsels)]
+        self._pending = len(self.morsels)
+
+    @property
+    def split(self) -> bool:
+        return self.morsel_fn is not None
+
+    def _run_morsel(self, m: _Morsel) -> None:
+        try:
+            if self.morsel_fn is None:
+                if self.compiled.ctx.mesh is not None:
+                    with _MESH_DISPATCH_LOCK:
+                        out = jax.block_until_ready(
+                            self.compiled(self.tables))
+                else:
+                    out = jax.block_until_ready(self.compiled(self.tables))
+                with self._lock:
+                    self.result = out
+            else:
+                part = jax.block_until_ready(
+                    self.morsel_fn(self.tables, m.lo, length=m.length))
+                with self._lock:
+                    self._partials[m.seq] = part
+        except BaseException as e:  # noqa: BLE001 — surfaced to waiter
+            with self._lock:
+                self._error = e
+        finally:
+            with self._lock:
+                self._pending -= 1
+                last = self._pending == 0
+            if last:
+                self._finish()
+
+    def _finish(self) -> None:
+        if self._error is None and self.morsel_fn is not None:
+            try:
+                # merge in MORSEL order, not completion order: the served
+                # result must not depend on which pool finished first
+                sums, ovf = merge_morsel_partials(
+                    [self._partials[i] for i in range(len(self.morsels))])
+                self.result = jax.block_until_ready(self.finalize(sums, ovf))
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+        # stamp completion HERE, not when a waiter gets around to joining:
+        # per-query latency must not include time spent waiting on other
+        # tasks in the drain loop
+        self.done_t = time.monotonic()
+        self._done.set()
+
+    def wait(self, timeout: Optional[float] = None) -> Dict[str, jax.Array]:
+        if not self._done.wait(timeout):
+            raise TimeoutError("query task did not complete in time")
+        if self._error is not None:
+            raise self._error
+        return self.result
+
+
+@dataclass
+class WorkerPool:
+    """The NUMA-socket analog: a contiguous shard slice + pinned workers."""
+
+    pool_id: int
+    shard_lo: int                 # [shard_lo, shard_hi) of the device mesh
+    shard_hi: int
+    executed: int = 0             # morsels run by this pool's workers
+    steals: int = 0               # morsels this pool stole from another
+    queue: deque = field(default_factory=deque, repr=False)
+
+
+@dataclass
+class SchedulerStats:
+    morsels_dispatched: int = 0
+    tasks: int = 0
+    executed_per_pool: Tuple[int, ...] = ()
+    steals_per_pool: Tuple[int, ...] = ()
+
+    @property
+    def steals(self) -> int:
+        return sum(self.steals_per_pool)
+
+
+class MorselScheduler:
+    """Dispatch QueryTasks to socket-pinned pools under a ThreadPlacement.
+
+    ``submit(task)`` enqueues the task's morsels per the placement policy
+    and returns immediately; ``task.wait()`` joins. Pools steal from the
+    longest backlog when their own deque runs dry (counted). The
+    scheduler can be constructed ``started=False`` so tests can stage a
+    backlog before any worker runs."""
+
+    def __init__(self, n_pools: int = 2, workers_per_pool: int = 2,
+                 placement: ThreadPlacement = ThreadPlacement.OS_DEFAULT,
+                 morsel_rows: Optional[int] = None, steal: bool = True,
+                 n_shards: Optional[int] = None, started: bool = True):
+        if n_pools < 1 or workers_per_pool < 1:
+            raise ValueError("need at least one pool and one worker")
+        self.placement = placement
+        self.morsel_rows = morsel_rows
+        self.steal = steal
+        shards = jax.device_count() if n_shards is None else n_shards
+        per = max(1, shards // n_pools)
+        self.pools = [WorkerPool(i, min(i * per, shards),
+                                 min((i + 1) * per, shards) if i < n_pools - 1
+                                 else shards)
+                      for i in range(n_pools)]
+        self._cv = threading.Condition()
+        self._rr = 0                        # OS_DEFAULT round-robin cursor
+        self._sparse_base = 0               # SPARSE per-task stripe offset
+        self._tasks = 0
+        self._dispatched = 0
+        self._closed = False
+        self._threads: List[threading.Thread] = []
+        self._workers_per_pool = workers_per_pool
+        if started:
+            self.start()
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> None:
+        if self._threads:
+            return
+        for pool in self.pools:
+            for w in range(self._workers_per_pool):
+                t = threading.Thread(
+                    target=self._worker, args=(pool,),
+                    name=f"pool{pool.pool_id}-w{w}", daemon=True)
+                t.start()
+                self._threads.append(t)
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=5.0)
+        self._threads = []
+
+    def __enter__(self) -> "MorselScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- task construction --------------------------------------------------
+    def build_task(self, plan: L.LogicalPlan, tables,
+                   ctx: Optional[ExecutionContext] = None) -> QueryTask:
+        """Compile (through the plan cache) and wrap a plan as a task.
+
+        Decomposable plans (distributive Aggregate over a Scan chain, no
+        mesh) become per-morsel partials when ``morsel_rows`` is set; all
+        others become a single whole-plan morsel whose result is
+        bit-identical to serial execution by construction. The whole-plan
+        executable is only compiled on that fallback path — a split task
+        must not push a never-invoked entry into the bounded plan cache."""
+        ctx = ctx or ExecutionContext()
+        if self.morsel_rows is not None and ctx.mesh is None:
+            split = _morsel_decompose(plan, tables, ctx)
+            if split is not None:
+                morsel_fn, finalize, n_rows = split
+                return QueryTask(None, tables, morsel_fn, finalize,
+                                 morsel_slices(n_rows, self.morsel_rows))
+        return QueryTask(planner.compile_plan(plan, tables, ctx), tables)
+
+    # -- dispatch -----------------------------------------------------------
+    def submit(self, task: QueryTask) -> QueryTask:
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            self._tasks += 1
+            dense_pool = min(self.pools, key=lambda p: len(p.queue)).pool_id
+            # SPARSE stripes a task's morsels across every pool, starting
+            # from a per-task rotating base — otherwise single-morsel
+            # (whole-plan) tasks would all land on pool 0 (seq is always 0)
+            # and the other pools could only work via steals
+            sparse_base = self._sparse_base
+            self._sparse_base += 1
+            for m in task.morsels:
+                if self.placement == ThreadPlacement.DENSE:
+                    m.home_pool = dense_pool
+                elif self.placement == ThreadPlacement.SPARSE:
+                    m.home_pool = (sparse_base + m.seq) % len(self.pools)
+                else:                       # OS_DEFAULT: arrival order
+                    m.home_pool = self._rr % len(self.pools)
+                    self._rr += 1
+                self.pools[m.home_pool].queue.append(m)
+                self._dispatched += 1
+            self._cv.notify_all()
+        return task
+
+    def run(self, plan: L.LogicalPlan, tables,
+            ctx: Optional[ExecutionContext] = None) -> Dict[str, jax.Array]:
+        """Convenience: build, submit, wait."""
+        return self.submit(self.build_task(plan, tables, ctx)).wait()
+
+    # -- workers ------------------------------------------------------------
+    def _take(self, pool: WorkerPool) -> Optional[_Morsel]:
+        """Called under the lock: own head first, else steal the tail of
+        the longest other backlog (classic work stealing)."""
+        if pool.queue:
+            return pool.queue.popleft()
+        if not self.steal:
+            return None
+        victim = max((p for p in self.pools if p is not pool),
+                     key=lambda p: len(p.queue), default=None)
+        if victim is not None and victim.queue:
+            pool.steals += 1
+            return victim.queue.pop()
+        return None
+
+    def _worker(self, pool: WorkerPool) -> None:
+        while True:
+            with self._cv:
+                m = self._take(pool)
+                while m is None and not self._closed:
+                    self._cv.wait(timeout=0.1)
+                    m = self._take(pool)
+                if m is None:               # closed and drained
+                    return
+                pool.executed += 1
+            m.task._run_morsel(m)
+
+    def stats(self) -> SchedulerStats:
+        with self._cv:
+            return SchedulerStats(
+                morsels_dispatched=self._dispatched, tasks=self._tasks,
+                executed_per_pool=tuple(p.executed for p in self.pools),
+                steals_per_pool=tuple(p.steals for p in self.pools))
+
+
+# ---------------------------------------------------------------------------
+# morsel decomposition of distributive-aggregate plans
+# ---------------------------------------------------------------------------
+_DISTRIBUTIVE = ("sum", "avg", "count")
+
+
+def _scan_chain(root: L.Node) -> Optional[Tuple[L.Scan, List[L.Node]]]:
+    """(scan, [transforms leaf->root]) when root's child chain is pure
+    Scan/Filter/Project; None otherwise."""
+    chain: List[L.Node] = []
+    node = root
+    while True:
+        if isinstance(node, L.Scan):
+            return node, list(reversed(chain))
+        if isinstance(node, (L.Filter, L.Project)):
+            chain.append(node)
+            node = node.child
+            continue
+        return None
+
+
+def _morsel_decompose(plan: L.LogicalPlan, tables, ctx: ExecutionContext):
+    """(morsel_fn, finalize, n_rows) for a decomposable plan, else None.
+
+    Decomposable = root Aggregate whose aggregates are all distributive
+    sums (sum/avg/count) over a Scan/Filter/Project chain. The morsel
+    partial is the stacked (n_groups, C) sums table over one row range —
+    the same physical primitive the planner lowers Aggregates onto — so
+    merged morsel results reuse finalize_stacked and can never drift from
+    the planner's semantics. NOTE: per-morsel partial sums merge in morsel
+    order, which is a DIFFERENT float summation order than the one-pass
+    serial plan — the split path trades bit-identity for intra-query
+    parallelism (the whole-plan path keeps bit-identity)."""
+    root = plan.root
+    if not isinstance(root, L.Aggregate):
+        return None
+    if any(op not in _DISTRIBUTIVE for _, (op, _c) in root.aggs):
+        return None
+    chain = _scan_chain(root.child)
+    if chain is None:
+        return None
+    scan_node, transforms = chain
+    # snapshot the cost profile ONCE: it keys the cache and is baked into
+    # the traced closure (same stale-constants hazard as compile_plan)
+    profile = planner.current_cost_profile()
+    n_rows = next(iter(tables[scan_node.table].values())).shape[0]
+    if root.key is None:
+        n_groups = 1
+    elif isinstance(root.n_groups, L.TableRows):
+        n_groups = next(iter(
+            tables[root.n_groups.table].values())).shape[0]
+    else:
+        n_groups = int(root.n_groups)
+    aggs = dict(root.aggs)
+
+    def partial(tbls, lo, *, length):
+        t = Table(morsel_slice_columns(tbls[scan_node.table], lo, length))
+        for node in transforms:
+            if isinstance(node, L.Filter):
+                t = t.filter(planner.eval_expr(node.pred, t))
+            else:
+                t = t.with_columns(**{n: planner.eval_expr(e, t)
+                                      for n, e in node.cols})
+        if root.key is None:
+            t = t.with_columns(_g0=jnp.zeros((length,), jnp.int32))
+            key = "_g0"
+        else:
+            key = root.key
+        keys, vals, src = stacked_columns(t, key, n_groups, aggs)
+        layout = planner.choose_aggregate(length, n_groups, vals.shape[1],
+                                          ctx.executor, profile)
+        return morsel_group_sums(keys, vals, n_groups, layout=layout,
+                                 mode=ctx.mode,
+                                 n_partitions=ctx.n_partitions,
+                                 capacity_factor=ctx.capacity_factor)
+
+    # one jitted executable per (plan, ctx, signature); per-morsel widths
+    # specialize via the static ``length`` argument
+    fn = planner.cached_executable(
+        ("morsel", plan, ctx.cache_key(), planner.table_signature(tables),
+         profile),
+        lambda: jax.jit(partial, static_argnames=("length",)))
+
+    src = [c for _, (op, c) in root.aggs
+           if op in ("sum", "avg")]
+    src = list(dict.fromkeys(src))          # distinct, insertion order
+
+    def finalize(sums, overflow):
+        out = finalize_stacked(aggs, src, sums, _no_order_stats)
+        out["_overflow"] = overflow.astype(jnp.int32)
+        if plan.outputs is not None:
+            out = {k: out[k] for k in plan.outputs}
+        return out
+
+    return fn, finalize, n_rows
+
+
+def _no_order_stats(op, col):
+    raise ValueError(f"order statistic {op!r} is not distributive — "
+                     "plan should not have been morsel-decomposed")

@@ -1,0 +1,303 @@
+"""AnalyticsService: the concurrent query-serving facade.
+
+    service = AnalyticsService(ServiceConfig(...))
+    rid = service.submit(plan, tables)          # None => backpressured
+    results = service.drain()                   # {req_id: QueryResult}
+    service.stats()                             # ServiceStats snapshot
+
+``submit`` is non-blocking admission into the bounded queue; ``drain``
+pulls FIFO batches, groups them by plan-cache key (batcher), dispatches
+one task per distinct (plan, context, signature, tables) through the
+morsel scheduler's socket-pinned pools, and fans shared results out.
+Whole-plan dispatch (the default) is bit-identical to serial
+``planner.execute_plan`` — it runs the same compiled executable on the
+same inputs; setting ``morsel_rows`` turns on intra-query morsel
+parallelism for decomposable plans (deterministic merge order, float
+summation order differs from the one-pass serial plan).
+
+Latency accounting: per-request queue wait (submit -> dispatch) and
+total latency (submit -> result ready) feed p50/p95/p99 histograms in
+``ServiceStats`` — the open-loop QPS x tail-latency surface the
+fig_service_throughput benchmark measures.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.analytics.plan import LogicalPlan
+from repro.analytics.planner import ExecutionContext
+from repro.analytics.service.batcher import QueryBatcher
+from repro.analytics.service.queue import AdmissionQueue, QueryRequest
+from repro.analytics.service.scheduler import (MorselScheduler,
+                                               ThreadPlacement)
+
+
+@dataclass(frozen=True)
+class ServiceConfig:
+    n_pools: int = 2
+    workers_per_pool: int = 2
+    queue_depth: int = 256
+    max_batch: int = 64            # requests pulled per drain round
+    morsel_rows: Optional[int] = None   # None = whole-plan (bit-identical)
+    placement: ThreadPlacement = ThreadPlacement.OS_DEFAULT
+    batching: bool = True
+    steal: bool = True
+    # latency/queue-wait histograms keep the most recent N samples: a
+    # long-lived service must stay memory-bounded, and the percentiles
+    # should reflect CURRENT tail behavior, not be diluted by hours of
+    # old samples
+    histogram_window: int = 8192
+
+
+@dataclass
+class QueryResult:
+    req_id: int
+    value: Optional[Dict[str, Any]]     # None => expired or failed
+    queue_wait_s: float = 0.0
+    latency_s: float = 0.0
+    batch_size: int = 1                 # requests served by this dispatch
+    expired: bool = False
+    error: Optional[str] = None         # execution failure, per dispatch
+
+
+def _pct(sorted_vals: List[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    return float(np.percentile(np.asarray(sorted_vals), q))
+
+
+@dataclass
+class ServiceStats:
+    submitted: int = 0
+    admitted: int = 0
+    rejected: int = 0
+    expired: int = 0
+    failed: int = 0
+    completed: int = 0
+    batches: int = 0
+    dispatches: int = 0
+    dedup_hits: int = 0
+    morsels: int = 0
+    steals: int = 0
+    steals_per_pool: Tuple[int, ...] = ()
+    qps: float = 0.0
+    latency_p50_ms: float = 0.0
+    latency_p95_ms: float = 0.0
+    latency_p99_ms: float = 0.0
+    queue_wait_p50_ms: float = 0.0
+    queue_wait_p95_ms: float = 0.0
+    queue_wait_p99_ms: float = 0.0
+
+    def describe(self) -> str:
+        return (f"completed={self.completed}/{self.submitted} "
+                f"(rejected={self.rejected}, expired={self.expired}, "
+                f"failed={self.failed}) "
+                f"dispatches={self.dispatches} dedup={self.dedup_hits} "
+                f"steals={self.steals} qps={self.qps:.1f} "
+                f"p50={self.latency_p50_ms:.2f}ms "
+                f"p99={self.latency_p99_ms:.2f}ms")
+
+
+class AnalyticsService:
+    """Queue -> batcher -> scheduler -> pools, with latency histograms."""
+
+    def __init__(self, config: Optional[ServiceConfig] = None):
+        self.config = config or ServiceConfig()
+        self.queue = AdmissionQueue(self.config.queue_depth)
+        self.batcher = QueryBatcher()
+        self.scheduler = MorselScheduler(
+            n_pools=self.config.n_pools,
+            workers_per_pool=self.config.workers_per_pool,
+            placement=self.config.placement,
+            morsel_rows=self.config.morsel_rows,
+            steal=self.config.steal)
+        self._lock = threading.Lock()
+        self._next_id = 0
+        window = self.config.histogram_window
+        self._latencies: "deque[float]" = deque(maxlen=window)
+        self._waits: "deque[float]" = deque(maxlen=window)
+        self._completed = 0
+        self._failed = 0
+        self._dispatches = 0       # tasks successfully submitted
+        self._dedup_hits = 0       # requests served by a peer's dispatch
+        self._busy_s = 0.0         # union of active-drain time (no idle)
+        self._active_drains = 0
+        self._busy_start = 0.0
+
+    # -- client side --------------------------------------------------------
+    def submit(self, plan: LogicalPlan,
+               tables: Mapping[str, Mapping[str, Any]], *,
+               context: Optional[ExecutionContext] = None,
+               deadline_s: Optional[float] = None,
+               client_id: int = 0) -> Optional[int]:
+        """Admit one query. Returns the request id, or None when the queue
+        is full (backpressure — the caller decides whether to retry).
+        ``deadline_s`` is RELATIVE seconds from now."""
+        with self._lock:
+            rid = self._next_id
+            self._next_id += 1
+        req = QueryRequest(
+            req_id=rid, plan=plan, tables=tables,
+            context=context or ExecutionContext(),
+            deadline_s=(None if deadline_s is None
+                        else time.monotonic() + deadline_s),
+            client_id=client_id)
+        return rid if self.queue.offer(req) else None
+
+    # -- serving loop -------------------------------------------------------
+    def drain(self) -> Dict[int, QueryResult]:
+        """Serve everything queued AT ENTRY; returns per-request results.
+
+        Pull-based: each round takes up to ``max_batch`` requests, batches
+        them, dispatches every (batch, tables-identity) group as one task,
+        and waits for the round before pulling the next — queue-wait for
+        later requests therefore includes earlier rounds' service time,
+        exactly the open-loop backlog the p99 histogram should see. The
+        backlog is SNAPSHOTTED at entry: requests admitted while this call
+        is serving wait for the next drain, so a submitter keeping pace
+        with the service can never pin drain() (and its result dict) in an
+        unbounded loop."""
+        out: Dict[int, QueryResult] = {}
+        t_drain = time.monotonic()
+        with self._lock:
+            if self._active_drains == 0:
+                self._busy_start = t_drain
+            self._active_drains += 1
+        try:
+            self._drain_snapshot(out)
+        finally:
+            with self._lock:
+                self._active_drains -= 1
+                if self._active_drains == 0:
+                    # busy time is the UNION of active-drain intervals:
+                    # overlapping drains must not double-count (qps would
+                    # be understated)
+                    self._busy_s += time.monotonic() - self._busy_start
+        return out
+
+    def _drain_snapshot(self, out: Dict[int, QueryResult]) -> None:
+        remaining = len(self.queue)
+        while remaining > 0:
+            round_reqs, shed = self.queue.take_batch(
+                min(self.config.max_batch, remaining))
+            remaining -= len(round_reqs) + len(shed)
+            now = time.monotonic()
+            for req in shed:
+                out[req.req_id] = QueryResult(
+                    req_id=req.req_id, value=None, expired=True,
+                    queue_wait_s=now - req.submit_t,
+                    latency_s=now - req.submit_t)
+            if not round_reqs:
+                if shed:
+                    continue        # whole round expired; keep draining
+                break
+            if self.config.batching:
+                batches = self.batcher.group(round_reqs)
+                shares = [s for b in batches for s in b.shares]
+            else:
+                shares = [[r] for r in round_reqs]
+            tasks = []
+            for share in shares:
+                rep = share[0]
+                try:
+                    # build/submit can raise eagerly (e.g. a plan naming a
+                    # table its mapping lacks, caught at morsel decompose):
+                    # that failure belongs to THIS share only, never to the
+                    # round's other requests
+                    task = self.scheduler.build_task(rep.plan, rep.tables,
+                                                     rep.context)
+                    self.scheduler.submit(task)
+                except Exception as e:  # noqa: BLE001 — reported per share
+                    now = time.monotonic()
+                    err = f"{type(e).__name__}: {e}"
+                    with self._lock:
+                        self._failed += len(share)
+                    for req in share:
+                        out[req.req_id] = QueryResult(
+                            req_id=req.req_id, value=None, error=err,
+                            queue_wait_s=req.dispatch_t - req.submit_t,
+                            latency_s=now - req.submit_t,
+                            batch_size=len(share))
+                    continue
+                tasks.append((task, share))
+            with self._lock:
+                # counted only for shares whose submit SUCCEEDED — a share
+                # that failed to build dispatched nothing and deduped nothing
+                self._dispatches += len(tasks)
+                self._dedup_hits += sum(len(s) - 1 for _, s in tasks)
+            for task, share in tasks:
+                # fault isolation: one failing dispatch must not discard
+                # the round's other results or poison co-submitted clients
+                error = None
+                try:
+                    value = task.wait()
+                except Exception as e:  # noqa: BLE001 — reported per request
+                    value, error = None, f"{type(e).__name__}: {e}"
+                # latency uses the task's own completion stamp, not this
+                # loop's join order (a fast query must not inherit a slow
+                # peer's wait-loop position)
+                done = task.done_t or time.monotonic()
+                for req in share:
+                    res = QueryResult(
+                        req_id=req.req_id,
+                        # shallow-copy per client: deduplicated peers must
+                        # not see each other's in-place edits (the arrays
+                        # inside are immutable and stay shared)
+                        value=dict(value) if value is not None else None,
+                        queue_wait_s=req.dispatch_t - req.submit_t,
+                        latency_s=done - req.submit_t,
+                        batch_size=len(share), error=error)
+                    out[req.req_id] = res
+                    with self._lock:
+                        if error is None:
+                            self._completed += 1
+                            self._latencies.append(res.latency_s)
+                            self._waits.append(res.queue_wait_s)
+                        else:
+                            self._failed += 1
+
+    # -- stats --------------------------------------------------------------
+    def stats(self) -> ServiceStats:
+        qs = self.queue.stats()
+        bs = self.batcher.stats()
+        ss = self.scheduler.stats()
+        with self._lock:
+            lat = list(self._latencies)
+            waits = list(self._waits)
+            completed = self._completed
+            failed = self._failed
+            dispatches = self._dispatches
+            dedup_hits = self._dedup_hits
+            busy = self._busy_s
+            if self._active_drains > 0:   # include the in-progress drain
+                busy += time.monotonic() - self._busy_start
+        return ServiceStats(
+            submitted=qs.submitted, admitted=qs.admitted,
+            rejected=qs.rejected_full, expired=qs.expired,
+            failed=failed, completed=completed, batches=bs.batches,
+            dispatches=dispatches, dedup_hits=dedup_hits,
+            morsels=ss.morsels_dispatched, steals=ss.steals,
+            steals_per_pool=ss.steals_per_pool,
+            qps=(completed / busy) if busy > 0 else 0.0,
+            latency_p50_ms=_pct(lat, 50) * 1e3,
+            latency_p95_ms=_pct(lat, 95) * 1e3,
+            latency_p99_ms=_pct(lat, 99) * 1e3,
+            queue_wait_p50_ms=_pct(waits, 50) * 1e3,
+            queue_wait_p95_ms=_pct(waits, 95) * 1e3,
+            queue_wait_p99_ms=_pct(waits, 99) * 1e3)
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        self.scheduler.close()
+
+    def __enter__(self) -> "AnalyticsService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -339,6 +339,24 @@ def get_plan(name: str, executor: str) -> Callable:
     return lambda tbls: planner.execute_plan(LOGICAL_QUERIES[name], tbls, ctx)
 
 
+def submit_query(service, name: str, data, *, executor: str = "xla",
+                 context: Optional[planner.ExecutionContext] = None,
+                 deadline_s: Optional[float] = None,
+                 client_id: int = 0) -> Optional[int]:
+    """Admit one of the five TPC-H logical plans into an AnalyticsService.
+
+    The concurrent-serving counterpart of ``run_query``: same query names,
+    same executor/context knobs AND the same defaults, but non-blocking —
+    returns the request id (collect via ``service.drain()``), or None
+    under backpressure. Served results on the whole-plan path are
+    bit-identical to ``run_query`` with the same executor/context: both
+    run the planner's compiled plan-cache entry on the same tables."""
+    tables = data.as_jax() if isinstance(data, TPCHData) else data
+    ctx = context or planner.ExecutionContext(executor=executor)
+    return service.submit(LOGICAL_QUERIES[name], tables, context=ctx,
+                          deadline_s=deadline_s, client_id=client_id)
+
+
 def run_query(name: str, data, *, executor: str = "xla",
               context: Optional[planner.ExecutionContext] = None
               ) -> Dict[str, jax.Array]:

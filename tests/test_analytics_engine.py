@@ -24,13 +24,25 @@ def expand_interleave(out, n=8):
         full[np.arange(G)[np.arange(G) % n == s]] = per[s]
     return full
 
+# W2 is now a logical Aggregate lowered through the planner's distributed
+# backend: every policy returns the replicated natural-order table
 for pol in PlacementPolicy:
-    out = np.asarray(jax.jit(dist_count(mesh, pol, G))(keys))
-    if pol == PlacementPolicy.INTERLEAVE:
-        got = expand_interleave(out)
-    else:
+    for auto in ((False, True) if pol == PlacementPolicy.FIRST_TOUCH
+                 else (False,)):
+        out = np.asarray(
+            jax.jit(dist_count(mesh, pol, G, auto_rebalance=auto))(keys))
         got = out[:G]
-    assert np.abs(got - ref).max() == 0, (pol, np.abs(got - ref).max())
+        assert np.abs(got - ref).max() == 0, (pol, auto,
+                                              np.abs(got - ref).max())
+
+# auto-rebalance must also survive a group domain NOT divisible by the
+# mesh (the tiled collectives need internal padding)
+G2 = 100
+keys2 = jnp.asarray((ds.keys % G2).astype(np.int32))
+ref2 = np.bincount(np.asarray(keys2), minlength=G2).astype(np.float32)
+out2 = np.asarray(jax.jit(dist_count(
+    mesh, PlacementPolicy.FIRST_TOUCH, G2, auto_rebalance=True))(keys2))
+assert out2.shape[0] == G2 and np.abs(out2 - ref2).max() == 0
 
 med_ref = np.full(G, np.nan, np.float32)
 for g in range(G):
@@ -58,3 +70,28 @@ print("ENGINE_OK")
 def test_all_policies_same_answers(dataset):
     out = run_with_devices(ENGINE_TEST.format(dataset=dataset))
     assert "ENGINE_OK" in out
+
+
+NON_POW2_REBALANCE_TEST = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.config import PlacementPolicy
+from repro.analytics.engine import dist_count
+
+# n=6: float32(x/6) summed 6 times is NOT x (a count of 7 came back
+# 6.9999995 when the rebalance divided before its reduce-scatter); the
+# migration must stay exact for integer counts on any mesh size
+mesh = jax.make_mesh((6,), ("data",))
+G, N = 100, 6000
+keys = jnp.asarray(np.random.RandomState(0).randint(0, G, N).astype(np.int32))
+ref = np.bincount(np.asarray(keys), minlength=G).astype(np.float32)
+out = np.asarray(jax.jit(dist_count(
+    mesh, PlacementPolicy.FIRST_TOUCH, G, auto_rebalance=True))(keys))
+assert out.shape[0] == G and np.abs(out - ref).max() == 0, \\
+    np.abs(out - ref).max()
+print("NON_POW2_OK")
+"""
+
+
+def test_auto_rebalance_exact_on_non_pow2_mesh():
+    out = run_with_devices(NON_POW2_REBALANCE_TEST, n_devices=6)
+    assert "NON_POW2_OK" in out

@@ -31,6 +31,7 @@ def data():
 def _fresh_cache_config():
     yield
     configure_plan_cache(planner.DEFAULT_PLAN_CACHE_ENTRIES)
+    planner.set_cost_profile(None)
 
 
 # ---------------------------------------------------------------------------
@@ -57,6 +58,32 @@ def test_executor_preference_overrides_cost():
     assert choose_aggregate(24_000, 37, 2, "kernel") == "dense"
     assert choose_aggregate(24_000, 6_000, 2, "kernel") == "partitioned"
     assert choose_aggregate(24_000, 6, 5, "xla") == "xla"
+
+
+def test_cost_profile_overrides_constants(tmp_path, data):
+    """A calibrated profile replaces the hand-set constants, flips the
+    cost-based choice accordingly, and keys the plan cache (a recalibration
+    can never serve a plan compiled under stale constants)."""
+    # default constants: Q1's 5-column stack picks the fused dense sweep
+    assert choose_aggregate(24_000, 6, 5, "cost") == "dense"
+    prof = tmp_path / "profile.json"
+    prof.write_text('{"fused_fixed": 400.0, "fused_per_col": 60.0,'
+                    ' "sort_pass_factor": 14.0, "backend": "cpu-ref"}')
+    installed = planner.load_cost_profile(str(prof))
+    assert installed.source == "cpu-ref"
+    try:
+        # measured profile says the fused sweep never pays off here
+        assert choose_aggregate(24_000, 6, 5, "cost") == "xla"
+        # ... and the executor="kernel" preference still overrides cost
+        assert choose_aggregate(24_000, 6, 5, "kernel") == "dense"
+        clear_plan_cache()
+        run_query("q1", data, executor="cost")
+        assert plan_cache_info().currsize == 1
+        planner.set_cost_profile(None)
+        run_query("q1", data, executor="cost")   # same ctx, new profile
+        assert plan_cache_info().currsize == 2   # distinct cache entry
+    finally:
+        planner.set_cost_profile(None)
 
 
 def test_join_choice_is_sorted_without_mxu():

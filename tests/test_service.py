@@ -1,0 +1,400 @@
+"""Concurrent query-serving subsystem (analytics/service/).
+
+Covers: served-vs-serial BIT-IDENTICAL parity on all five TPC-H queries
+for every ThreadPlacement (locally) and ThreadPlacement x PlacementPolicy
+(on a subprocess mesh), morsel-boundary correctness when n_rows is not
+divisible by the morsel size, batcher key-grouping and dedup dispatch,
+work-steal counter consistency, admission backpressure + deadlines, a
+seeded deterministic throughput smoke test, and thread-safety of the
+shared plan cache under concurrent run_query traffic.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+
+from repro.analytics import planner
+from repro.analytics.engine import merge_morsel_partials, morsel_slices
+from repro.analytics.planner import (ExecutionContext, configure_plan_cache,
+                                     plan_cache_info)
+from repro.analytics.service import (AnalyticsService, QueryBatcher,
+                                     ServiceConfig, ThreadPlacement)
+from repro.analytics.service.queue import QueryRequest
+from repro.analytics.service.scheduler import MorselScheduler
+from repro.analytics.tpch import (LOGICAL_QUERIES, generate, run_query,
+                                  submit_query)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return generate(scale=0.004, seed=1)
+
+
+@pytest.fixture(autouse=True)
+def _restore_planner_config():
+    yield
+    configure_plan_cache(planner.DEFAULT_PLAN_CACHE_ENTRIES)
+    planner.set_cost_profile(None)
+
+
+def _assert_bit_identical(got, ref, label):
+    assert set(got) == set(ref), label
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(ref[k]),
+                                      err_msg=f"{label}/{k}")
+
+
+# ---------------------------------------------------------------------------
+# served results == serial run_query, bit for bit (whole-plan dispatch)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("placement", list(ThreadPlacement))
+def test_served_bit_identical_all_queries(data, placement):
+    ctx = ExecutionContext(executor="cost")
+    refs = {n: run_query(n, data, context=ctx) for n in LOGICAL_QUERIES}
+    with AnalyticsService(ServiceConfig(n_pools=2, workers_per_pool=2,
+                                        placement=placement)) as svc:
+        rids = {n: submit_query(svc, n, data, context=ctx)
+                for n in LOGICAL_QUERIES}
+        results = svc.drain()
+        st = svc.stats()
+    assert st.completed == len(LOGICAL_QUERIES)
+    for name, rid in rids.items():
+        _assert_bit_identical(results[rid].value, refs[name],
+                              f"{name}/{placement.value}")
+
+
+def test_submit_query_defaults_match_run_query(data):
+    """submit_query and run_query share defaults: calling both bare must
+    compare bit-identical (they resolve to the same plan-cache entry)."""
+    ref = run_query("q6", data)
+    with AnalyticsService(ServiceConfig(n_pools=1,
+                                        workers_per_pool=1)) as svc:
+        rid = submit_query(svc, "q6", data)
+        got = svc.drain()[rid].value
+    _assert_bit_identical(got, ref, "defaults")
+
+
+DIST_SERVE_TEST = """
+import numpy as np, jax
+from repro.analytics.planner import ExecutionContext
+from repro.analytics.service import AnalyticsService, ServiceConfig, ThreadPlacement
+from repro.analytics.tpch import LOGICAL_QUERIES, generate, run_query, submit_query
+from repro.core.config import PlacementPolicy
+
+mesh = jax.make_mesh((4,), ("data",))
+data = generate(scale=0.004, seed=1)
+for pol in (PlacementPolicy.FIRST_TOUCH, PlacementPolicy.INTERLEAVE):
+    ctx = ExecutionContext(executor="cost", mesh=mesh, policy=pol,
+                           capacity_factor=4.0)
+    refs = {n: run_query(n, data, context=ctx) for n in LOGICAL_QUERIES}
+    for placement in ThreadPlacement:
+        with AnalyticsService(ServiceConfig(n_pools=2, workers_per_pool=2,
+                                            placement=placement)) as svc:
+            rids = {n: submit_query(svc, n, data, context=ctx)
+                    for n in LOGICAL_QUERIES}
+            results = svc.drain()
+        for name, rid in rids.items():
+            got, ref = results[rid].value, refs[name]
+            assert set(got) == set(ref), (name, pol, placement)
+            for k in ref:
+                np.testing.assert_array_equal(
+                    np.asarray(got[k]), np.asarray(ref[k]),
+                    err_msg=f"{name}/{pol}/{placement}/{k}")
+print("DIST_SERVE_OK")
+"""
+
+
+def test_served_bit_identical_under_placement_policies():
+    """ThreadPlacement x PlacementPolicy grid on a real shard_map mesh:
+    the served result must be bit-identical to serial run_query under the
+    SAME context for every combination."""
+    out = run_with_devices(DIST_SERVE_TEST, n_devices=4, timeout=900)
+    assert "DIST_SERVE_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# morsel-driven execution
+# ---------------------------------------------------------------------------
+def test_morsel_slices_boundaries():
+    assert morsel_slices(10, None) == [(0, 10)]
+    assert morsel_slices(10, 100) == [(0, 10)]
+    assert morsel_slices(10, 4) == [(0, 4), (4, 8), (8, 10)]
+    assert morsel_slices(12, 4) == [(0, 4), (4, 8), (8, 12)]
+    with pytest.raises(ValueError):
+        morsel_slices(10, 0)
+    with pytest.raises(ValueError):
+        merge_morsel_partials([])
+
+
+@pytest.mark.parametrize("name", ["q1", "q6"])
+def test_morsel_boundary_correctness(data, name):
+    """n_rows NOT divisible by morsel size: the tail morsel must carry the
+    remainder, counts must be exact, sums allclose to the serial plan."""
+    n_li = data.tables["lineitem"]["l_orderkey"].shape[0]
+    morsel = 997
+    assert n_li % morsel != 0
+    ref = run_query(name, data, executor="xla")
+    with AnalyticsService(ServiceConfig(
+            n_pools=2, workers_per_pool=2, morsel_rows=morsel,
+            placement=ThreadPlacement.SPARSE)) as svc:
+        rid = submit_query(svc, name, data, executor="xla")
+        got = svc.drain()[rid].value
+        st = svc.stats()
+    expect_morsels = -(-n_li // morsel)
+    assert st.morsels == expect_morsels
+    assert set(got) == set(ref)
+    for k in ref:
+        if k in ("_count", "count_order", "_overflow"):
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(ref[k]),
+                                          err_msg=f"{name}/{k}")
+        else:
+            np.testing.assert_allclose(np.asarray(got[k]),
+                                       np.asarray(ref[k]),
+                                       atol=1e-2, rtol=1e-5,
+                                       err_msg=f"{name}/{k}")
+
+
+def test_non_decomposable_plans_serve_whole(data):
+    """Joins/TopK (q3, q5, q18) must NOT be morsel-split — they execute as
+    one whole-plan morsel and stay bit-identical even with morsel_rows
+    set."""
+    ctx = ExecutionContext(executor="cost")
+    refs = {n: run_query(n, data, context=ctx) for n in ("q3", "q5", "q18")}
+    with AnalyticsService(ServiceConfig(n_pools=2, workers_per_pool=1,
+                                        morsel_rows=1000)) as svc:
+        rids = {n: submit_query(svc, n, data, context=ctx) for n in refs}
+        results = svc.drain()
+        st = svc.stats()
+    assert st.morsels == len(refs)       # one whole-plan morsel each
+    for name, rid in rids.items():
+        _assert_bit_identical(results[rid].value, refs[name], name)
+
+
+# ---------------------------------------------------------------------------
+# batcher: plan-cache-key grouping and dedup dispatch
+# ---------------------------------------------------------------------------
+def test_batcher_key_grouping(data):
+    tables = data.as_jax()
+    ctx_a = ExecutionContext(executor="cost")
+    ctx_b = ExecutionContext(executor="xla")
+    rebuilt = {t: dict(cols) for t, cols in tables.items()}
+    reqs = [
+        QueryRequest(0, LOGICAL_QUERIES["q1"], tables, ctx_a),
+        QueryRequest(1, LOGICAL_QUERIES["q1"], tables, ctx_a),   # dedup peer
+        QueryRequest(2, LOGICAL_QUERIES["q1"], tables, ctx_b),   # other ctx
+        QueryRequest(3, LOGICAL_QUERIES["q3"], tables, ctx_a),   # other plan
+        QueryRequest(4, LOGICAL_QUERIES["q1"], rebuilt, ctx_a),  # other data
+    ]
+    b = QueryBatcher()
+    groups = b.group(reqs)
+    assert len(groups) == 3
+    # q1/ctx_a formed ONE batch with both tables identities inside
+    q1a = [g for g in groups if g.requests[0].req_id == 0][0]
+    assert sorted(r.req_id for r in q1a.requests) == [0, 1, 4]
+    assert sorted(len(s) for s in q1a.shares) == [1, 2]
+    st = b.stats()
+    assert st.batches == 3
+    assert st.batched_queries == 3       # only q1a had peers (reqs 0,1,4)
+    # 4 shares total across the 3 batches (q1a splits into 2 table shares);
+    # dispatch/dedup outcomes are counted by the service at submit time
+    assert sum(len(g.shares) for g in groups) == 4
+
+
+def test_batched_service_dedups_hot_path(data):
+    """32x the same plan-cache-hot query = ONE dispatch fanned out; the
+    >=1.5x QPS acceptance criterion follows mechanically (the benchmark
+    measures it; here we pin the dispatch accounting)."""
+    ctx = ExecutionContext(executor="cost")
+    ref = run_query("q1", data, context=ctx)
+    with AnalyticsService(ServiceConfig(n_pools=2,
+                                        workers_per_pool=2)) as svc:
+        rids = [submit_query(svc, "q1", data, context=ctx)
+                for _ in range(32)]
+        results = svc.drain()
+        st = svc.stats()
+    assert st.completed == 32
+    assert st.dispatches == 1
+    assert st.dedup_hits == 31
+    for rid in rids:
+        assert results[rid].batch_size == 32
+        _assert_bit_identical(results[rid].value, ref, "q1-hot")
+
+
+# ---------------------------------------------------------------------------
+# work stealing
+# ---------------------------------------------------------------------------
+def test_work_steal_counters(data):
+    """DENSE packs every morsel of the task onto one pool; a second
+    single-worker pool can only obtain work by stealing. Invariants: all
+    morsels execute exactly once, and non-home executions == steals."""
+    tables = data.as_jax()
+    sched = MorselScheduler(n_pools=2, workers_per_pool=1,
+                            placement=ThreadPlacement.DENSE,
+                            morsel_rows=500, started=False)
+    task = sched.build_task(LOGICAL_QUERIES["q1"], tables,
+                            ExecutionContext(executor="xla"))
+    assert len(task.morsels) == 48       # 24000 rows / 500
+    sched.submit(task)                   # staged before any worker runs
+    homes = [m.home_pool for m in task.morsels]
+    assert len(set(homes)) == 1          # DENSE: one pool owns everything
+    sched.start()
+    got = task.wait(timeout=120)
+    st = sched.stats()
+    sched.close()
+    assert sum(st.executed_per_pool) == st.morsels_dispatched == 48
+    non_home = st.executed_per_pool[1 - homes[0]]
+    assert st.steals == non_home         # every non-home execution = a steal
+    assert st.steals >= 1                # the idle pool did steal
+    ref = run_query("q1", data, executor="xla")
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(ref[k]),
+                                   atol=1e-2, rtol=1e-5, err_msg=k)
+
+
+def test_sparse_distributes_whole_plan_tasks(data):
+    """Whole-plan tasks have a single morsel (seq 0): SPARSE must still
+    stripe successive tasks across pools (per-task rotating base), not pin
+    them all to pool 0 with stealing papering over the starvation."""
+    tables = data.as_jax()
+    sched = MorselScheduler(n_pools=2, workers_per_pool=1,
+                            placement=ThreadPlacement.SPARSE, steal=False,
+                            started=False)
+    ctx = ExecutionContext(executor="xla")
+    tasks = [sched.build_task(LOGICAL_QUERIES["q6"], tables, ctx)
+             for _ in range(6)]
+    for t in tasks:
+        sched.submit(t)
+    assert {t.morsels[0].home_pool for t in tasks} == {0, 1}
+    sched.start()
+    for t in tasks:
+        assert t.wait(timeout=120) is not None
+    st = sched.stats()
+    sched.close()
+    assert all(e == 3 for e in st.executed_per_pool)
+    assert st.steals == 0                # no stealing needed, none counted
+
+
+# ---------------------------------------------------------------------------
+# admission: backpressure + deadlines
+# ---------------------------------------------------------------------------
+def test_backpressure_and_deadlines(data):
+    ctx = ExecutionContext(executor="cost")
+    run_query("q1", data, context=ctx)           # warm the plan cache
+    with AnalyticsService(ServiceConfig(queue_depth=2, n_pools=1,
+                                        workers_per_pool=1)) as svc:
+        r0 = submit_query(svc, "q1", data, context=ctx)
+        r1 = submit_query(svc, "q1", data, context=ctx, deadline_s=-1.0)
+        r2 = submit_query(svc, "q1", data, context=ctx)
+        assert r0 is not None and r1 is not None
+        assert r2 is None                        # bounded queue pushed back
+        results = svc.drain()
+        st = svc.stats()
+    assert st.rejected == 1 and st.expired == 1 and st.completed == 1
+    assert results[r0].value is not None
+    assert results[r1].expired and results[r1].value is None
+
+
+def test_failed_dispatch_is_isolated(data):
+    """A malformed query must fail alone: co-submitted clients still get
+    their results and the failure is attributed on the bad request."""
+    from repro.analytics.plan import LogicalPlan, scan
+    bad_plan = LogicalPlan(
+        scan("lineitem").aggregate("no_such_column", 4,
+                                   s=("sum", "l_quantity")))
+    ctx = ExecutionContext(executor="cost")
+    ref = run_query("q1", data, context=ctx)
+    with AnalyticsService(ServiceConfig(n_pools=2,
+                                        workers_per_pool=2)) as svc:
+        good = submit_query(svc, "q1", data, context=ctx)
+        bad = svc.submit(bad_plan, data.as_jax(), context=ctx)
+        results = svc.drain()
+        st = svc.stats()
+    assert st.completed == 1 and st.failed == 1
+    _assert_bit_identical(results[good].value, ref, "good-alongside-bad")
+    assert results[bad].value is None
+    assert results[bad].error and "no_such_column" in results[bad].error
+
+    # the EAGER failure path: with morsel_rows set, a plan naming a table
+    # its mapping lacks raises at build_task (morsel decompose), before
+    # any worker runs — must also be isolated to its own share
+    missing = LogicalPlan(
+        scan("no_such_table").aggregate("x", 2, s=("sum", "x")))
+    with AnalyticsService(ServiceConfig(n_pools=1, workers_per_pool=1,
+                                        morsel_rows=1000)) as svc:
+        good = submit_query(svc, "q1", data, executor="xla")
+        bad1 = svc.submit(missing, data.as_jax())
+        bad2 = svc.submit(missing, data.as_jax())   # dedup peer that fails
+        results = svc.drain()
+        st = svc.stats()
+    assert st.completed == 1 and st.failed == 2
+    assert results[good].value is not None
+    for bad in (bad1, bad2):
+        assert results[bad].value is None and results[bad].error
+    # a share that never dispatched must not count dispatches or dedup hits
+    assert st.dispatches == 1 and st.dedup_hits == 0
+
+
+# ---------------------------------------------------------------------------
+# seeded deterministic throughput smoke
+# ---------------------------------------------------------------------------
+def test_throughput_smoke(data):
+    names = [("q1", "q3", "q6")[i % 3] for i in range(18)]
+    ctx = ExecutionContext(executor="cost")
+    for n in set(names):
+        run_query(n, data, context=ctx)          # hot path only
+    with AnalyticsService(ServiceConfig(n_pools=2, workers_per_pool=2,
+                                        morsel_rows=4000)) as svc:
+        rids = [submit_query(svc, n, data, context=ctx) for n in names]
+        results = svc.drain()
+        st = svc.stats()
+    assert st.completed == len(names) == st.admitted
+    assert all(results[r].value is not None for r in rids)
+    assert st.dispatches == 3                    # one per distinct query
+    assert st.dedup_hits == len(names) - 3
+    assert st.qps > 0
+    assert st.latency_p99_ms >= st.latency_p50_ms >= 0
+    assert st.queue_wait_p99_ms >= st.queue_wait_p50_ms >= 0
+    # qps denominates over time spent serving: idling afterwards (a
+    # long-lived service between bursts) must not decay the reported rate
+    time.sleep(0.2)
+    assert svc.stats().qps == pytest.approx(st.qps)
+
+
+# ---------------------------------------------------------------------------
+# shared plan cache under concurrent traffic
+# ---------------------------------------------------------------------------
+def test_plan_cache_thread_safe_under_concurrency(data):
+    """Hammer a 4-entry cache (forced evictions) from 8 threads; unlocked
+    this raced move_to_end/popitem into KeyErrors and dropped counter
+    increments. Counters must balance exactly: every lookup is one hit or
+    one miss."""
+    planner.clear_plan_cache()
+    configure_plan_cache(4)
+    names = sorted(LOGICAL_QUERIES)
+    errors = []
+    before = plan_cache_info()
+    calls_per_thread = 12
+
+    def hammer(seed):
+        try:
+            for i in range(calls_per_thread):
+                name = names[(seed + i) % len(names)]
+                ex = ("xla", "cost")[(seed + i) % 2]
+                run_query(name, data, executor=ex)
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(s,)) for s in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    info = plan_cache_info()
+    lookups = (info.hits - before.hits) + (info.misses - before.misses)
+    assert lookups == 8 * calls_per_thread
+    assert info.currsize <= 4
