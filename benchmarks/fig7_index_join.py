@@ -2,7 +2,15 @@
 for the three TPU-adapted index kinds (radix=ART analogue, sorted=B+Tree
 leaf/SkipList analogue, hash=Masstree analogue), plus the W3 hash join for
 reference. Reproduction target: the radix-bucketed index probes fastest
-(Fig 7a: ART wins), build times stay competitive."""
+(Fig 7a: ART wins), build times stay competitive.
+
+Also measures the planner's two DISTRIBUTED join lowerings on an 8-device
+subprocess mesh — broadcast (all-gather the build side) vs key-partitioned
+(route both sides by join-key hash) — for a small and a large build side.
+Reproduction target (paper Fig 5-7 placement story): broadcast wins while
+the build side is a small dimension table; partitioned wins once the build
+side rivals the probe side, and the wire-cost model picks each winner
+automatically."""
 from __future__ import annotations
 
 from typing import List
@@ -10,12 +18,18 @@ from typing import List
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import Row, time_fn
+from benchmarks.common import Row, run_in_mesh, time_fn
+from repro.analytics import planner
 from repro.analytics.datasets import blanas_join
+from repro.analytics.dist_join_bench import sweep_code
 from repro.analytics.join import (build_hash_index, build_radix_index,
                                   build_sorted_index, hash_join, index_join,
                                   probe_hash_index, probe_radix_index,
                                   probe_sorted_index)
+
+DIST_PROBE = 1 << 18
+DIST_BUILDS = {"small_build": 1 << 10, "large_build": 1 << 18}
+DIST_DEVICES = 8
 
 
 def run() -> List[Row]:
@@ -43,4 +57,27 @@ def run() -> List[Row]:
                      f"probes={pk.shape[0]}"))
     us = time_fn(lambda: hash_join(bk, bv, pk, n_partitions=64, mode="ref"))
     rows.append(("fig7_w3_hash_join_adhoc", us, "build+probe per query"))
+    return rows
+
+
+def run_dist() -> List[Row]:
+    """Distributed join lowerings: broadcast vs key-partitioned on an
+    8-device subprocess mesh (registered as its own ``fig7_dist`` module
+    in run.py so --skip-slow can drop it with the other subprocess-mesh
+    figures; uses the same measurement snippet scripts/calibrate_costs.py
+    fits dist_route_factor from)."""
+    rows: List[Row] = []
+    dist = run_in_mesh(
+        sweep_code(probe=DIST_PROBE, builds=list(DIST_BUILDS.values()),
+                   devices=DIST_DEVICES),
+        n_devices=DIST_DEVICES, timeout=900)
+    for tag, build_n in DIST_BUILDS.items():
+        chosen = planner.choose_dist_join(
+            DIST_PROBE, build_n, DIST_DEVICES,
+            planner.ExecutionContext(executor="xla"))
+        for strat in ("broadcast", "partitioned"):
+            rows.append((f"fig7_dist_join_{tag}_{strat}",
+                         dist[str(build_n)][strat],
+                         f"build={build_n};probe={DIST_PROBE};"
+                         f"cost_model_picks={chosen}"))
     return rows

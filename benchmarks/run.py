@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV (assignment format). Modules:
   fig5   placement policies x auto-rebalance (8-device mesh, measured)
   fig6   workload x allocator (device buffers + serving page pool)
   fig7   index nested-loop join (three index kinds)
+  fig7_dist  distributed join: broadcast vs key-partitioned (8-dev mesh)
   fig8/9 TPC-H default vs tuned configuration
   fig_service  concurrent serving: QPS x p99 for ThreadPlacement x
          PlacementPolicy over a mixed Q1/Q3/Q6 open-loop workload
@@ -39,22 +40,31 @@ def main() -> None:
                             fig6_workload_allocators, fig7_index_join,
                             fig8_fig9_tpch, fig_service_throughput,
                             roofline_table)
+    from types import SimpleNamespace
     modules = [
         ("fig2", fig2_allocator_microbench),
         ("fig3_fig4", fig3_fig4_thread_placement),
         ("fig5", fig5_placement_policies),
         ("fig6", fig6_workload_allocators),
         ("fig7", fig7_index_join),
+        ("fig7_dist", SimpleNamespace(run=fig7_index_join.run_dist)),
         ("fig8_fig9", fig8_fig9_tpch),
         ("fig_service", fig_service_throughput),
         ("roofline", roofline_table),
     ]
     if args.skip_slow:
         # the subprocess-mesh figures
-        modules = [m for m in modules if m[0] not in ("fig5", "fig_service")]
+        modules = [m for m in modules
+                   if m[0] not in ("fig5", "fig7_dist", "fig_service")]
     if args.only:
+        # a token that IS a module name selects exactly that module
+        # (--only fig7 must not drag in the slow fig7_dist subprocess
+        # sweep); other tokens keep substring semantics (--only fig3)
+        names = {m[0] for m in modules}
         keys = args.only.split(",")
-        modules = [m for m in modules if any(k in m[0] for k in keys)]
+        modules = [m for m in modules
+                   if any(k == m[0] if k in names else k in m[0]
+                          for k in keys)]
 
     print("name,us_per_call,derived")
     failures = 0

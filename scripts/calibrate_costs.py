@@ -17,7 +17,20 @@ exhibits (a CPU reference lowering and a real TPU disagree wildly about
 the fused kernel's fixed cost; the profile lets the same model serve
 both).
 
+With ``--dist`` it also measures the DISTRIBUTED join crossover on a
+fake-device child mesh: broadcast (all-gather the build side) vs
+key-partitioned (route both sides) at a sweep of build sizes. The model
+prices broadcast at n_build*(n-1) moved rows and partitioned at
+(n_probe+n_build)*(n-1)/n * dist_route_factor; setting the two equal at
+the MEASURED crossover build size B* gives
+
+    dist_route_factor = B* * n / (n_probe + B*)
+
+which is written into the profile so planner.choose_dist_join flips
+strategies where this hardware actually flips.
+
     PYTHONPATH=src python scripts/calibrate_costs.py --out cost_profile.json
+    PYTHONPATH=src python scripts/calibrate_costs.py --dist --out cost_profile.json
     >>> planner.load_cost_profile("cost_profile.json")
 """
 from __future__ import annotations
@@ -25,9 +38,43 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import os
+import sys
 import time
 
 import numpy as np
+
+def calibrate_dist(probe: int, builds, devices: int):
+    """(dist_route_factor, raw sweep) from a fake-device child mesh.
+
+    The child runs repro.analytics.dist_join_bench.sweep_code through
+    benchmarks.common.run_in_mesh — the SAME snippet and the SAME
+    subprocess harness benchmarks/fig7_index_join.py uses, so the fitted
+    constant prices exactly what the benchmark (and the planner's cost
+    model) measures."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for p in (root, os.path.join(root, "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    from benchmarks.common import run_in_mesh
+    from repro.analytics.dist_join_bench import sweep_code
+    raw = run_in_mesh(sweep_code(probe=probe, builds=builds,
+                                 devices=devices),
+                      n_devices=devices, timeout=1800)
+    sweep = sorted((int(b), d) for b, d in raw.items())
+    # crossover: first build size where routing both sides beats the
+    # all-gather; geometric midpoint with its broadcast-winning neighbor
+    b_star = None
+    for i, (b, d) in enumerate(sweep):
+        if d["partitioned"] < d["broadcast"]:
+            b_star = (math.sqrt(sweep[i - 1][0] * b) if i else float(b))
+            break
+    if b_star is None:
+        # partitioned never won in range: pin the factor just above the
+        # largest measured build so the model keeps broadcasting there
+        b_star = 2.0 * sweep[-1][0]
+    factor = b_star * devices / (probe + b_star)
+    return max(round(float(factor), 4), 0.01), raw
 
 
 def time_fn(fn, *, warmup: int = 2, iters: int = 5) -> float:
@@ -54,6 +101,16 @@ def main() -> None:
                     help="stacked-matrix widths to sweep")
     ap.add_argument("--mode", default=None,
                     help="kernel lowering mode (None = backend default)")
+    ap.add_argument("--dist", action="store_true",
+                    help="also measure the broadcast vs partitioned "
+                         "distributed-join crossover on a fake-device mesh "
+                         "and fit dist_route_factor")
+    ap.add_argument("--dist-devices", type=int, default=8)
+    ap.add_argument("--dist-probe", type=int, default=1 << 17,
+                    help="probe rows for the distributed-join sweep")
+    ap.add_argument("--dist-builds", type=int, nargs="+",
+                    default=[1 << b for b in range(10, 18, 2)],
+                    help="build-side sizes to sweep for the crossover")
     ap.add_argument("--out", default="cost_profile.json")
     args = ap.parse_args()
 
@@ -106,6 +163,14 @@ def main() -> None:
             "sort": round(t_sort * 1e6, 1),
         },
     }
+    if args.dist:
+        factor, raw_dist = calibrate_dist(args.dist_probe, args.dist_builds,
+                                          args.dist_devices)
+        profile["dist_route_factor"] = factor
+        profile["dist_probe"] = args.dist_probe
+        profile["dist_devices"] = args.dist_devices
+        profile["raw_us"]["dist_join"] = raw_dist
+
     with open(args.out, "w") as f:
         json.dump(profile, f, indent=2)
         f.write("\n")

@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests, then the benchmark perf gates.
+#
+#   scripts/ci.sh [BASELINE.json]
+#
+# 1. runs the tier-1 pytest suite (ROADMAP "Tier-1 verify");
+# 2. runs benchmarks/run.py over the in-process figures, recording rows to
+#    a fresh JSON; when BASELINE.json exists the guarded rows present in
+#    this selection (the tuned-Q1 latency gate) are checked against it and
+#    a >25% regression fails the script. A missing baseline is recorded
+#    instead of checked (first run bootstraps it).
+#
+# The subprocess-mesh figures (fig5, fig7_dist, fig_service) are skipped
+# here for runtime — which means the served-QPS floor and the
+# broadcast-vs-partitioned join rows are NOT gated by this script; run
+# `python benchmarks/run.py --json ... --check ...` without --skip-slow
+# for the full grid including those gates.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BASELINE="${1:-bench_baseline.json}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+if [ -f "$BASELINE" ]; then
+    python benchmarks/run.py --skip-slow --json BENCH_ci.json --check "$BASELINE"
+else
+    echo "ci.sh: no baseline at $BASELINE — recording one" >&2
+    python benchmarks/run.py --skip-slow --json "$BASELINE"
+fi

@@ -9,9 +9,13 @@ W5 TPC-H                              tpch.run_query (q1, q3, q5, q6, q18)
 Queries are authored as logical plans (plan.py) and lowered by the
 cost-based physical planner (planner.py) onto the columnar operators
 (columnar.py) — single-device or under a placement-policy mesh backend
-(engine.py) — without changing the plan. Concurrent multi-query serving
-(admission queue -> batcher -> morsel scheduler over socket-pinned
-pools) lives in the service/ subpackage.
+(engine.py) — without changing the plan. EVERY workload flows through
+that one IR/planner/cache: dist_count, dist_median and dist_hash_join
+are thin wrappers over logical plans (the holistic median is a "median"
+Aggregate op; the distributed join is cost-chosen between broadcast and
+key-partitioned lowerings). Concurrent multi-query serving (admission
+queue -> batcher -> morsel scheduler over socket-pinned pools) lives in
+the service/ subpackage.
 """
 from repro.analytics import datasets, plan
 from repro.analytics.aggregate import (count_direct, count_partitioned,

@@ -25,8 +25,10 @@ per Aggregate node — see planner.choose_aggregate for the cost model:
                  (never dropped silently). Pays an argsort of the keys —
                  worthwhile only when many aggregates amortize it.
 
-Order statistics (max/min) are not distributive sums and stay on exact XLA
-segment ops under every layout.  ``group_aggregate``'s string ``executor``
+Order statistics (max/min/median) are not distributive sums and stay on
+exact XLA lowerings under every layout — max/min on segment ops, median on
+the ``segment_median`` sort-based selection (holistic: a group's median
+needs all of its values co-located, paper Section 2).  ``group_aggregate``'s string ``executor``
 knob ("xla" picks the first layout, "kernel" the domain-appropriate fused
 one) is kept as the untuned/tuned axis the Fig 8/9 benchmark measures.
 
@@ -35,8 +37,9 @@ searchsorted gather; the build-side argsort is cached per Table and
 propagated through filter/with_columns/join derivations — and hoisted out
 of the compiled plan entirely by planner.JoinIndexPool) and
 ``pkfk_join_kernel`` (hash-partition both sides, probe through the
-kernels/join_probe broadcast-compare kernel; capacity overflow is surfaced,
-and overflowed rows degrade to join misses).
+kernels/join_probe broadcast-compare kernel; capacity overflow triggers a
+residual re-probe of the kernel's misses through the sorted path, so
+skewed keys stay exact — or is counted and surfaced with residual=False).
 """
 from __future__ import annotations
 
@@ -134,7 +137,8 @@ def pkfk_join(fact: Table, dim: Table, fact_key: str, dim_key: str,
 def pkfk_join_kernel(fact: Table, dim: Table, fact_key: str, dim_key: str,
                      take: Mapping[str, str], *, n_partitions: int = 32,
                      capacity_factor: float = 2.0,
-                     mode: Optional[str] = None
+                     mode: Optional[str] = None,
+                     residual: bool = True
                      ) -> Tuple[Table, jax.Array]:
     """PK-FK join probed through the kernels/join_probe blocked compare.
 
@@ -143,9 +147,16 @@ def pkfk_join_kernel(fact: Table, dim: Table, fact_key: str, dim_key: str,
     slot against its partition's build tile and returns the matched build
     ROW POSITION, through which the ``take`` columns (and the build-side
     mask) are gathered. Keys must be non-negative (key -1 is the padding
-    sentinel). Returns (joined table, overflow): rows beyond a partition's
-    capacity — on either side — are counted and degrade to join misses,
-    never to silently wrong matches.
+    sentinel).
+
+    Rows beyond a partition's capacity — on either side — are dropped from
+    the dense layouts and would degrade to join misses under key skew. With
+    ``residual=True`` (default) a residual pass re-probes the kernel's
+    misses through the exact sorted path whenever overflow occurred, so the
+    result is EXACT under any skew and the returned overflow is 0. With
+    ``residual=False`` the overflow is counted and surfaced (never silent),
+    and overflowed rows stay misses — the PR-2 accounting behavior.
+    Returns (joined table, overflow).
     """
     fk = fact.col(fact_key).astype(jnp.int32)
     dk = dim.col(dim_key).astype(jnp.int32)
@@ -182,6 +193,28 @@ def pkfk_join_kernel(fact: Table, dim: Table, fact_key: str, dim_key: str,
            .at[rows].set(vals.reshape(-1).astype(jnp.int32))[:n_fact])
     found_r = (jnp.zeros((n_fact + 1,), jnp.bool_)
                .at[rows].set(found.reshape(-1) & slot_valid)[:n_fact])
+    overflow = (ovf_b + ovf_p).astype(jnp.int32)
+    if residual:
+        # Residual pass: capacity overflow drops rows from the dense
+        # layouts — a dropped probe row never reaches a slot, and a
+        # dropped build row makes its probes compare not-found — so every
+        # missed match surfaces as found_r == False. Re-probing the
+        # kernel's misses through the exact sorted index restores
+        # exactness under any skew; lax.cond defers that cost until
+        # overflow actually happened (the argsort itself is cached on the
+        # build Table / hoisted by the planner's JoinIndexPool).
+        order, sk = dim.key_index(dim_key)
+
+        def _reprobe(args):
+            pos0, found0 = args
+            spos = jnp.clip(jnp.searchsorted(sk, fk), 0, sk.shape[0] - 1)
+            sfound = sk[spos] == fk
+            return (jnp.where(found0, pos0, order[spos].astype(jnp.int32)),
+                    found0 | sfound)
+
+        pos, found_r = jax.lax.cond(overflow > 0, _reprobe, lambda a: a,
+                                    (pos, found_r))
+        overflow = jnp.zeros((), jnp.int32)
     pos = jnp.clip(pos, 0, n_dim - 1)
     dim_w = dim.weights()[pos]
     new_cols = {new: dim.col(src)[pos] for new, src in take.items()}
@@ -189,7 +222,7 @@ def pkfk_join_kernel(fact: Table, dim: Table, fact_key: str, dim_key: str,
     joined = Table(out.columns,
                    out.weights() * found_r.astype(jnp.float32) * dim_w,
                    out.index_cache)
-    return joined, (ovf_b + ovf_p).astype(jnp.int32)
+    return joined, overflow
 
 
 # ---------------------------------------------------------------------------
@@ -235,12 +268,8 @@ def _group_aggregate_xla(table: Table, key: str, n_groups: int,
         if op in ("sum", "avg"):
             s = jax.ops.segment_sum(v * w, keys, num_segments=n_groups)
             out[name] = s if op == "sum" else s / jnp.maximum(cnt, 1.0)
-        elif op == "max":
-            big = jnp.where(w > 0, v, -jnp.inf)
-            out[name] = jax.ops.segment_max(big, keys, num_segments=n_groups)
-        elif op == "min":
-            small = jnp.where(w > 0, v, jnp.inf)
-            out[name] = jax.ops.segment_min(small, keys, num_segments=n_groups)
+        elif op in ("max", "min", "median"):
+            out[name] = segment_order_stat(table, keys, n_groups, op, col)
         else:
             raise ValueError(f"unknown agg op {op!r}")
     out["_count"] = cnt
@@ -261,7 +290,7 @@ def stacked_columns(table: Table, key: str, n_groups: int,
     for name, (op, col) in aggs.items():
         if op in ("sum", "avg") and col not in src:
             src.append(col)
-        elif op not in ("sum", "avg", "count", "max", "min"):
+        elif op not in ("sum", "avg", "count", "max", "min", "median"):
             raise ValueError(f"unknown agg op {op!r}")
     vals = jnp.stack(
         [w] + [table.col(c).astype(jnp.float32) * w for c in src], axis=1)
@@ -292,12 +321,52 @@ def stacked_group_sums(keys: jax.Array, vals: jax.Array, n_groups: int, *,
     raise ValueError(f"unknown layout {layout!r}")
 
 
+def segment_median(keys: jax.Array, vals: jax.Array, n_groups: int
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Exact per-group median by local sort + selection; keys < 0 are
+    EXCLUDED (the routed-buffer padding / masked-row sentinel).
+
+    The holistic (order-statistic) primitive: a group's median cannot be
+    merged from partials (paper Section 2), so every median lowering —
+    single-device, full-replication, or routed distributed selection —
+    funnels through this one sort-based selection. Sorts values first,
+    then stably by key, so each group's run is internally value-sorted;
+    the median is the mean of the run's two middle elements (NaN for
+    empty groups). Keys >= n_groups are clipped into the last group (the
+    stacked_columns convention — the selection math needs the key order
+    and the count clipping to agree, so the clip is enforced here, not
+    left to callers). Returns (medians, counts), both (n_groups,)."""
+    keys = jnp.where(keys < 0, -1, jnp.minimum(keys, n_groups - 1))
+    order_v = jnp.argsort(vals, stable=True)
+    k1, v1 = keys[order_v], vals[order_v]
+    order_k = jnp.argsort(k1, stable=True)
+    sv = v1[order_k]
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(keys, jnp.float32),
+        jnp.clip(keys, 0, n_groups - 1), num_segments=n_groups)
+    # discard excluded records (key < 0) from counts (clipped to group 0)
+    pad = jax.ops.segment_sum(
+        jnp.where(keys < 0, 1.0, 0.0),
+        jnp.zeros_like(keys), num_segments=n_groups)
+    counts = counts - pad
+    starts = jnp.cumsum(counts) - counts
+    # excluded records sort first (key < 0): shift starts past them
+    starts = starts + pad[0]
+    c, s = counts.astype(jnp.int32), starts.astype(jnp.int32)
+    lo = jnp.clip(s + jnp.maximum((c - 1) // 2, 0), 0, sv.shape[0] - 1)
+    hi = jnp.clip(s + jnp.maximum(c // 2, 0), 0, sv.shape[0] - 1)
+    med = (sv[lo] + sv[hi]) * 0.5
+    return jnp.where(c > 0, med, jnp.nan), counts
+
+
 def segment_order_stat(table: Table, keys: jax.Array, n_groups: int,
                        op: str, col: str) -> jax.Array:
-    """Masked per-group max/min via exact XLA segment ops (order statistics
-    are not distributive sums and never ride the fused sweep)."""
+    """Masked per-group max/min/median via exact XLA lowerings (order
+    statistics are not distributive sums and never ride the fused sweep)."""
     v = table.col(col).astype(jnp.float32)
     w = table.weights()
+    if op == "median":
+        return segment_median(jnp.where(w > 0, keys, -1), v, n_groups)[0]
     if op == "max":
         big = jnp.where(w > 0, v, -jnp.inf)
         return jax.ops.segment_max(big, keys, num_segments=n_groups)

@@ -1,0 +1,63 @@
+"""Shared subprocess snippet measuring the distributed-join lowerings.
+
+Both consumers of broadcast-vs-partitioned timings build their child
+process from THIS template — `benchmarks/fig7_index_join.py` (two-point
+small/large-build comparison) and `scripts/calibrate_costs.py --dist`
+(crossover sweep fitting ``dist_route_factor``). One copy matters: the
+fitted routing-overhead constant is only meaningful if the calibration
+measures exactly what the benchmark (and the planner's cost model)
+prices, so the bench function, plan shape, and table generation must
+never drift apart.
+
+The child prints one JSON object: {str(build_n): {"broadcast": us,
+"partitioned": us}} for each swept build size, joining a fixed-size probe
+against it under each forced ``dist_join`` strategy.
+"""
+
+SWEEP_CODE = """
+import json, time, numpy as np, jax, jax.numpy as jnp
+from repro.analytics import plan as L
+from repro.analytics import planner
+from repro.core.config import PlacementPolicy
+
+mesh = jax.make_mesh(({devices},), ("data",))
+rng = np.random.RandomState(7)
+probe_n = {probe}
+
+def bench(fn, *args):
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter(); jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[1] * 1e6
+
+lplan = L.LogicalPlan(
+    L.scan("probe").join(L.scan("build"), "pk", "bk", {{"_v": "bv"}})
+     .aggregate(None, 1, count=("count", "_v"), checksum=("sum", "_v")),
+    ("count", "checksum"))
+res = {{}}
+for build_n in {builds}:
+    tables = {{
+        "probe": {{"pk": jnp.asarray(
+            rng.randint(0, build_n, probe_n).astype(np.int32))}},
+        "build": {{"bk": jnp.asarray(rng.permutation(build_n)
+                                     .astype(np.int32)),
+                   "bv": jnp.asarray(rng.rand(build_n)
+                                     .astype(np.float32))}}}}
+    row = {{}}
+    for strat in ("broadcast", "partitioned"):
+        ctx = planner.ExecutionContext(executor="xla", mesh=mesh,
+                                       policy=PlacementPolicy.FIRST_TOUCH,
+                                       dist_join=strat)
+        cp = planner.compile_plan(lplan, tables, ctx)
+        row[strat] = bench(cp, tables)
+    res[str(build_n)] = row
+print(json.dumps(res))
+"""
+
+
+def sweep_code(*, probe: int, builds, devices: int) -> str:
+    """The runnable child-process source for one (probe, builds) sweep."""
+    return SWEEP_CODE.format(probe=probe, builds=sorted(builds),
+                             devices=devices)

@@ -25,6 +25,12 @@ data) — reproducing the paper's observation that holistic functions are the
 memory system's worst case — while INTERLEAVE routes each group's records
 to one owner and sorts locally.
 
+Since PR 4 none of the workloads carries its own shard_map plan: W1/W2/W3
+are logical plans lowered through the planner's distributed backend, and
+this module provides the per-policy physical primitives those lowerings
+(and the TPC-H plans) share — partial-table merging, record routing,
+partitioned join routing, and distributed selection.
+
 The AutoNUMA analogue (`auto_rebalance`) appends a policy-ideal resharding
 of the result state after the query — pure extra collective traffic when
 the plan was already local (paper Fig 5a), a rescue when the plan was
@@ -32,7 +38,6 @@ PREFERRED.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
@@ -40,7 +45,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.analytics.columnar import stacked_group_sums
+from repro.analytics.columnar import segment_median, stacked_group_sums
 from repro.core.config import PlacementPolicy
 
 
@@ -68,6 +73,61 @@ def route_records(keys: jax.Array, vals: jax.Array, n_shards: int,
     v_out = jnp.where(vmask, sv[idx], 0)
     overflow = jnp.maximum(counts - capacity, 0).sum()
     return k_out, v_out, overflow
+
+
+def route_owner(keys: jax.Array, alive: jax.Array, n: int) -> jax.Array:
+    """Owner shard for routing one row set: alive rows hash by key
+    (key % n, co-locating equal keys); dead rows — scan padding, masked
+    rows, the padding of an upstream routed buffer — spread round-robin
+    instead. Dead rows contribute nothing wherever they land, but hashed
+    together (e.g. all key -1 -> shard n-1, or all clipped to key 0 ->
+    shard 0) they would mass on ONE destination and eat its capacity,
+    surfacing overflow for records that do not exist. One copy of this
+    rule serves every routed lowering."""
+    spread = jnp.arange(keys.shape[0], dtype=jnp.int32) % n
+    return jnp.where(alive, (keys % n).astype(jnp.int32), spread)
+
+
+def routing_capacity(n_rows: int, n_shards: int,
+                     capacity_factor: float) -> int:
+    """Per-destination slot budget for routing ``n_rows`` local records to
+    ``n_shards`` owners: the balanced share times ``capacity_factor``,
+    rounded up to a 128-row tile (one copy of the formula every routed
+    lowering shares)."""
+    cap = int(capacity_factor * n_rows / n_shards)
+    return max(128, -(-cap // 128) * 128)
+
+
+def route_table_rows(cols, weights: jax.Array, owner: jax.Array,
+                     n_shards: int, capacity: int, axis: str):
+    """All-to-all route a struct-of-arrays row set to its owner shards.
+
+    Generalizes ``route_records`` to a whole table: ONE argsort-by-owner
+    layout pass shared by every column, then one all-to-all per column.
+    Integer columns pad with -1 (the key sentinel: padding never matches a
+    real join key and is excluded from order statistics), floats with 0;
+    ``weights`` rides along so routed padding rows carry zero selection
+    weight. Returns (cols, weights, overflow) — the received buffers hold
+    n_shards * capacity rows per shard; rows beyond a destination's
+    capacity are counted in overflow (local, caller psums)."""
+    n_rows = weights.shape[0]
+    order = jnp.argsort(owner, stable=True)
+    counts = jnp.bincount(owner, length=n_shards)
+    starts = jnp.cumsum(counts) - counts
+    slot = jnp.arange(capacity)
+    idx = jnp.clip(starts[:, None] + slot[None, :], 0, n_rows - 1)
+    valid = slot[None, :] < jnp.minimum(counts, capacity)[:, None]
+
+    def exchange(a, fill):
+        sent = jnp.where(valid, a[order][idx], fill)
+        return jax.lax.all_to_all(sent, axis, split_axis=0, concat_axis=0,
+                                  tiled=True).reshape(-1)
+
+    out = {c: exchange(a, -1 if jnp.issubdtype(a.dtype, jnp.integer) else 0)
+           for c, a in cols.items()}
+    w = exchange(weights, 0)
+    overflow = jnp.maximum(counts - capacity, 0).sum()
+    return out, w, overflow
 
 
 # ---------------------------------------------------------------------------
@@ -185,9 +245,12 @@ def interleave_group_sums(keys: jax.Array, vals: jax.Array, n_groups: int,
     and reporting phantom overflow). Returns ((n_groups, C) replicated,
     overflow)."""
     G_pad = n_groups + (-n_groups % n)
-    owner = keys % n
-    cap = int(capacity_factor * keys.shape[0] / n)
-    cap = max(128, -(-cap // 128) * 128)
+    if vals.ndim > 1:
+        # column 0 of a stacked matrix carries the selection weights
+        owner = route_owner(keys, vals[:, 0] > 0, n)
+    else:
+        owner = keys % n
+    cap = routing_capacity(keys.shape[0], n, capacity_factor)
     k_out, v_out, route_ovf = route_records(keys, vals, n, owner, cap)
     k_in = jax.lax.all_to_all(k_out, axis, split_axis=0, concat_axis=0,
                               tiled=True)
@@ -279,57 +342,92 @@ def _rebalance_to_interleave(table: jax.Array, n: int, axis: str) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# holistic MEDIAN backends (per-policy lowerings of the Aggregate op)
+# ---------------------------------------------------------------------------
+# These run INSIDE an open shard_map, like the distributive backends above.
+# A median cannot be merged from partials (paper Section 2), so the
+# replication-based policies degrade to full record gathering — the paper's
+# "holistic functions are the memory system's worst case" — while
+# INTERLEAVE routes each group's records to one owner and selects locally
+# (distributed selection). Both return natural-group-order replicated
+# results so one downstream plan serves every policy.
+
+def replicated_group_median(keys: jax.Array, cols, w: jax.Array,
+                            n_groups: int, axis: str):
+    """FIRST_TOUCH / LOCAL_ALLOC / PREFERRED holistic lowering: gather
+    every shard's records (all-gather of the DATA) and run one local
+    sort-based selection per value column. ``cols``: {name: (N,) values} —
+    the keys/weights are gathered ONCE for all of them. Returns
+    ({name: (n_groups,) medians}, counts), replicated."""
+    ak = jax.lax.all_gather(keys, axis, tiled=True)
+    aw = jax.lax.all_gather(w, axis, tiled=True)
+    k_eff = jnp.where(aw > 0, ak, -1)
+    meds, counts = {}, None
+    for name, v in cols.items():
+        av = jax.lax.all_gather(v, axis, tiled=True)
+        meds[name], counts = segment_median(k_eff, av, n_groups)
+    return meds, counts
+
+
+def interleave_group_median(keys: jax.Array, cols, w: jax.Array,
+                            n_groups: int, axis: str, n: int, *,
+                            capacity_factor: float = 2.0):
+    """INTERLEAVE holistic lowering: route each group's records to its
+    bucket-interleaved owner (all-to-all, O(N) wire bytes), select the
+    median locally on the owner, then republish in natural group order.
+    ``cols``: {name: (N,) values}; every value column rides ONE routing
+    pass (one argsort-by-owner layout, keys/weights exchanged once).
+    Returns ({name: (n_groups,) medians}, counts, overflow), replicated."""
+    k_eff = jnp.where(w > 0, keys, -1).astype(jnp.int32)
+    owner = route_owner(k_eff, k_eff >= 0, n)
+    cap = routing_capacity(keys.shape[0], n, capacity_factor)
+    # positional names: aggregate output names could collide with "k"
+    send = {"k": k_eff}
+    send.update({f"v{i}": v for i, v in enumerate(cols.values())})
+    routed, w_in, ovf = route_table_rows(send, w, owner, n, cap, axis)
+    n_slots = -(-n_groups // n)
+    local_ids = jnp.where((routed["k"] >= 0) & (w_in > 0),
+                          routed["k"] // n, -1)
+    g = jnp.arange(n_groups)                       # owner of g is g % n
+    pos = (g % n) * n_slots + g // n
+    meds, counts = {}, None
+    for i, name in enumerate(cols):
+        med, cnt = segment_median(local_ids, routed[f"v{i}"], n_slots)
+        meds[name] = jax.lax.all_gather(med, axis, tiled=True)[pos]
+        counts = jax.lax.all_gather(cnt, axis, tiled=True)[pos]
+    return meds, counts, jax.lax.psum(ovf, axis)
+
+
+# ---------------------------------------------------------------------------
 # W1: holistic MEDIAN under each policy
 # ---------------------------------------------------------------------------
 def dist_median(mesh: Mesh, policy: PlacementPolicy, cardinality: int, *,
                 axis: str = "data", capacity_factor: float = 2.0) -> Callable:
-    """fn(keys, vals) -> per-group medians (ownership per policy)."""
-    n = mesh.shape[axis]
-    G = cardinality
+    """fn(keys, vals) -> (G,) per-group medians, replicated in natural
+    group order under every policy.
 
-    def _local_median(keys, vals, n_groups):
-        order_v = jnp.argsort(vals, stable=True)
-        k1, v1 = keys[order_v], vals[order_v]
-        order_k = jnp.argsort(k1, stable=True)
-        sk, sv = k1[order_k], v1[order_k]
-        counts = jax.ops.segment_sum(
-            jnp.ones_like(keys, jnp.float32),
-            jnp.clip(keys, 0, n_groups - 1), num_segments=n_groups)
-        # discard padding records (key < 0) from counts
-        pad = jax.ops.segment_sum(
-            jnp.where(keys < 0, 1.0, 0.0),
-            jnp.zeros_like(keys), num_segments=n_groups)
-        counts = counts - pad  # padding clipped to group 0
-        starts = jnp.cumsum(counts) - counts
-        # padded records sorted first (key -1): shift starts by total pad
-        starts = starts + pad[0]
-        c, s = counts.astype(jnp.int32), starts.astype(jnp.int32)
-        lo = jnp.clip(s + jnp.maximum((c - 1) // 2, 0), 0, sv.shape[0] - 1)
-        hi = jnp.clip(s + jnp.maximum(c // 2, 0), 0, sv.shape[0] - 1)
-        med = (sv[lo] + sv[hi]) * 0.5
-        return jnp.where(c > 0, med, jnp.nan)
+    W1 no longer carries its own shard_map plan: the median is expressed
+    as a logical ``Aggregate`` with an order-statistic ("median") agg and
+    lowered through the planner's distributed backend onto the holistic
+    primitives above — FIRST_TOUCH / LOCAL_ALLOC / PREFERRED degrade to
+    full record replication, INTERLEAVE runs the routed distributed
+    selection. One copy of each placement strategy serves W1 and every
+    TPC-H median plan alike; this thin wrapper keeps the bare-operator
+    signature for the fig5 benchmark."""
+    from repro.analytics import plan as L
+    from repro.analytics import planner
 
-    def replicate_all(keys, vals):                       # FT / LOCAL / PREF
-        ak = jax.lax.all_gather(keys, axis, tiled=True)
-        av = jax.lax.all_gather(vals, axis, tiled=True)
-        return _local_median(ak, av, G)
+    lplan = L.LogicalPlan(
+        L.scan("t").aggregate("k", cardinality, med=("median", "v")),
+        ("med",))
+    ctx = planner.ExecutionContext(executor="xla", mesh=mesh, policy=policy,
+                                   axis=axis, capacity_factor=capacity_factor)
 
-    def interleave(keys, vals):
-        owner = keys % n
-        cap = int(capacity_factor * keys.shape[0] / n)
-        cap = max(128, -(-cap // 128) * 128)
-        k_out, v_out, _ = route_records(keys, vals, n, owner, cap)
-        k_in = jax.lax.all_to_all(k_out, axis, 0, 0, tiled=True)
-        v_in = jax.lax.all_to_all(v_out, axis, 0, 0, tiled=True)
-        local_ids = jnp.where(k_in >= 0, k_in // n, -1).reshape(-1)
-        return _local_median(local_ids, v_in.reshape(-1), G // n)
+    def fn(keys, vals):
+        return planner.execute_plan(lplan, {"t": {"k": keys, "v": vals}},
+                                    ctx)["med"]
 
-    if policy == PlacementPolicy.INTERLEAVE:
-        fn, out_spec = interleave, P(axis)
-    else:
-        fn, out_spec = replicate_all, P(None)
-    return shard_map(fn, mesh=mesh, in_specs=(P(axis), P(axis)),
-                     out_specs=out_spec, check_rep=False)
+    return fn
 
 
 # ---------------------------------------------------------------------------
@@ -339,51 +437,31 @@ def dist_hash_join(mesh: Mesh, policy: PlacementPolicy, *,
                    axis: str = "data", capacity_factor: float = 2.0) -> Callable:
     """fn(build_keys, build_vals, probe_keys) -> (count, checksum).
 
-    FIRST_TOUCH / LOCAL_ALLOC: broadcast join — the build side is
-    all-gathered (replicated, as a first-touching shard would fault it in),
-    probes stay local. INTERLEAVE: both sides routed by key hash
-    (partitioned join). PREFERRED: everything gathered (worst case)."""
-    n = mesh.shape[axis]
+    W3 no longer carries its own shard_map plan: the join is a logical
+    ``Join`` + global ``Aggregate`` lowered through the planner's
+    distributed backend. The placement policy fixes the physical join
+    strategy the cost model would otherwise choose: INTERLEAVE routes both
+    sides by join-key hash (partitioned join, the paper's winner for large
+    build sides); the replication-based policies broadcast the build side
+    (all-gather, as a first-touching shard would fault it in). PREFERRED's
+    record convergence lives in its Aggregate lowering."""
+    from repro.analytics import plan as L
+    from repro.analytics import planner
 
-    def _local_join(bk, bv, pk):
-        order = jnp.argsort(bk)
-        sk, sv = bk[order], bv[order]
-        pos = jnp.clip(jnp.searchsorted(sk, pk), 0, sk.shape[0] - 1)
-        found = (sk[pos] == pk) & (pk >= 0)
-        vals = jnp.where(found, sv[pos], 0.0)
-        return found.sum(), vals.sum()
+    probe = L.scan("probe").join(L.scan("build"), "pk", "bk", {"_v": "bv"})
+    lplan = L.LogicalPlan(
+        probe.aggregate(None, 1, count=("count", "_v"),
+                        checksum=("sum", "_v")),
+        ("count", "checksum"))
+    dist_join = ("partitioned" if policy == PlacementPolicy.INTERLEAVE
+                 else "broadcast")
+    ctx = planner.ExecutionContext(executor="xla", mesh=mesh, policy=policy,
+                                   axis=axis, capacity_factor=capacity_factor,
+                                   dist_join=dist_join)
 
-    def broadcast(bk, bv, pk):
-        abk = jax.lax.all_gather(bk, axis, tiled=True)
-        abv = jax.lax.all_gather(bv, axis, tiled=True)
-        c, s = _local_join(abk, abv, pk)
-        return jax.lax.psum(c, axis), jax.lax.psum(s, axis)
+    def fn(bk, bv, pk):
+        out = planner.execute_plan(
+            lplan, {"probe": {"pk": pk}, "build": {"bk": bk, "bv": bv}}, ctx)
+        return out["count"][0], out["checksum"][0]
 
-    def interleave(bk, bv, pk):
-        cap_b = max(128, -(-int(capacity_factor * bk.shape[0] / n) // 128) * 128)
-        cap_p = max(128, -(-int(capacity_factor * pk.shape[0] / n) // 128) * 128)
-        owner_b = (bk % n).astype(jnp.int32)
-        owner_p = (pk % n).astype(jnp.int32)
-        kb, vb, _ = route_records(bk, bv, n, owner_b, cap_b)
-        kp, _, _ = route_records(pk, jnp.ones_like(pk, jnp.float32), n,
-                                 owner_p, cap_p)
-        kb = jax.lax.all_to_all(kb, axis, 0, 0, tiled=True).reshape(-1)
-        vb = jax.lax.all_to_all(vb, axis, 0, 0, tiled=True).reshape(-1)
-        kp = jax.lax.all_to_all(kp, axis, 0, 0, tiled=True).reshape(-1)
-        kb = jnp.where(kb < 0, -1, kb)
-        c, s = _local_join(kb, vb, kp)
-        return jax.lax.psum(c, axis), jax.lax.psum(s, axis)
-
-    def preferred(bk, bv, pk):
-        abk = jax.lax.all_gather(bk, axis, tiled=True)
-        abv = jax.lax.all_gather(bv, axis, tiled=True)
-        apk = jax.lax.all_gather(pk, axis, tiled=True)
-        return _local_join(abk, abv, apk)
-
-    fn = {PlacementPolicy.FIRST_TOUCH: broadcast,
-          PlacementPolicy.LOCAL_ALLOC: broadcast,
-          PlacementPolicy.INTERLEAVE: interleave,
-          PlacementPolicy.PREFERRED: preferred}[policy]
-    return shard_map(fn, mesh=mesh,
-                     in_specs=(P(axis), P(axis), P(axis)),
-                     out_specs=(P(), P()), check_rep=False)
+    return fn

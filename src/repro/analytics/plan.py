@@ -23,9 +23,16 @@ Relational nodes (produce a Table: struct-of-arrays + selection mask):
 
 Aggregation nodes (produce a dict of (n_groups,) arrays):
 
-  Aggregate(child, key, n_groups, aggs)   grouped sum/avg/count/max/min;
-                                          key=None is a global aggregate
+  Aggregate(child, key, n_groups, aggs)   grouped sum/avg/count/max/min/
+                                          median; key=None is a global
+                                          aggregate
   TopK(child, col, k, index_name)         order-by-limit over a group dict
+
+``median`` is the HOLISTIC (order-statistic) aggregate: it cannot be
+computed from mergeable partials (paper Section 2), so the physical
+planner lowers it onto a local-sort selection — and, under a placement
+policy, onto full record replication or routed distributed selection —
+instead of the fused distributive sweeps.
 
 Scalar expressions (Filter predicates / Project columns) are their own tiny
 IR — Col / Lit / BinOp / UnOp — with operator sugar so builders read like
@@ -192,9 +199,10 @@ class Join(_NodeOps):
 @dataclass(frozen=True)
 class Aggregate(_NodeOps):
     """Grouped aggregation. ``aggs``: out_name -> (op, column); op in
-    {sum, avg, count, max, min}. ``key=None`` is a single global group
-    (returns (1,) arrays). Results always carry ``_count``; the executor
-    accumulates ``_overflow`` across every Aggregate in the plan."""
+    {sum, avg, count, max, min, median}. ``key=None`` is a single global
+    group (returns (1,) arrays). Results always carry ``_count``; the
+    executor accumulates ``_overflow`` across every Aggregate in the
+    plan."""
     child: "Node"
     key: Optional[str]
     n_groups: Cardinality
@@ -233,6 +241,91 @@ class LogicalPlan:
 
 def scan(table: str) -> Scan:
     return Scan(table)
+
+
+# ---------------------------------------------------------------------------
+# IR validation
+# ---------------------------------------------------------------------------
+AGG_OPS = ("sum", "avg", "count", "max", "min", "median")
+_BIN_OPS = ("add", "sub", "mul", "div", "le", "lt", "ge", "gt", "eq", "ne",
+            "and", "or")
+_UN_OPS = ("abs", "neg", "not")
+
+
+def _validate_expr(e: Expr) -> None:
+    if isinstance(e, (Col, Lit)):
+        return
+    if isinstance(e, UnOp):
+        if e.op not in _UN_OPS:
+            raise ValueError(f"unknown unary op {e.op!r} in plan expression")
+        _validate_expr(e.operand)
+        return
+    if isinstance(e, BinOp):
+        if e.op not in _BIN_OPS:
+            raise ValueError(f"unknown binary op {e.op!r} in plan expression")
+        _validate_expr(e.lhs)
+        _validate_expr(e.rhs)
+        return
+    raise TypeError(f"not a plan expression: {e!r}")
+
+
+def validate(plan: Union["LogicalPlan", Node]) -> None:
+    """Structural validation of a plan before it reaches the planner.
+
+    Checks what can be known without table shapes: aggregate ops are from
+    AGG_OPS, Aggregates are non-empty with positive literal group domains,
+    TopK/Attach consume an aggregation (a group dict, not a Table), every
+    Table-consuming input (Filter/Project/Aggregate child, Join sides,
+    Attach child) really is a Table node, and every expression uses known
+    operators. Raises ValueError/TypeError on the first violation; the
+    planner calls this once per plan-cache miss, so malformed plans fail
+    fast instead of dying inside a jit trace."""
+    table_nodes = (Scan, Filter, Project, Join, Attach)
+
+    def want_table(node: Node, input_name: str, child: Node) -> None:
+        if not isinstance(child, table_nodes):
+            raise ValueError(
+                f"{type(node).__name__} {input_name} must be a Table node "
+                f"(Scan/Filter/Project/Join/Attach), got a group dict from "
+                f"{type(child).__name__}")
+
+    root = plan.root if isinstance(plan, LogicalPlan) else plan
+    for node in walk(root):
+        if isinstance(node, Aggregate):
+            want_table(node, "child", node.child)
+            if not node.aggs:
+                raise ValueError("Aggregate needs at least one aggregate")
+            for name, (op, _col) in node.aggs:
+                if op not in AGG_OPS:
+                    raise ValueError(
+                        f"unknown agg op {op!r} for {name!r}; "
+                        f"expected one of {AGG_OPS}")
+            if (not isinstance(node.n_groups, TableRows)
+                    and int(node.n_groups) < 1):
+                raise ValueError(f"Aggregate n_groups must be >= 1, "
+                                 f"got {node.n_groups!r}")
+        elif isinstance(node, TopK):
+            if not isinstance(node.child, (Aggregate, TopK)):
+                raise ValueError("TopK must consume an Aggregate/TopK "
+                                 "(a group dict), not a Table node")
+            if node.k < 1:
+                raise ValueError(f"TopK k must be >= 1, got {node.k}")
+        elif isinstance(node, Attach):
+            want_table(node, "child", node.child)
+            if not isinstance(node.source, Aggregate):
+                raise ValueError("Attach source must be an Aggregate")
+            if not node.cols:
+                raise ValueError("Attach needs at least one column")
+        elif isinstance(node, Filter):
+            want_table(node, "child", node.child)
+            _validate_expr(node.pred)
+        elif isinstance(node, Project):
+            want_table(node, "child", node.child)
+            for _name, e in node.cols:
+                _validate_expr(e)
+        elif isinstance(node, Join):
+            want_table(node, "probe side", node.probe)
+            want_table(node, "build side", node.build)
 
 
 # ---------------------------------------------------------------------------

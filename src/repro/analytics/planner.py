@@ -21,6 +21,17 @@ operator chosen from static shape metadata and the ``ExecutionContext``:
                  (all-reduce / reduce-scatter / record routing / converge),
                  so the paper's Section-3.3 placement plans execute the SAME
                  logical plans as the tuned kernel path.
+  dist Join   -> broadcast (all-gather the build side) | key-partitioned
+                 (route BOTH sides by join-key hash, the dist_hash_join
+                 recipe), chosen by a wire-cost model (``dist_join_costs``)
+                 over global row counts: broadcast moves n_build*(n-1)
+                 rows, partitioned (n_probe+n_build)*(n-1)/n times the
+                 measured routing overhead — so large build sides go
+                 partitioned, small dimension tables keep broadcasting.
+  median      -> holistic order statistic: local-sort selection on one
+                 device; under a placement policy, full record replication
+                 (FIRST_TOUCH/LOCAL_ALLOC/PREFERRED — holistic partials
+                 cannot merge) or routed distributed selection (INTERLEAVE).
 
 The cost model is deliberately simple — everything is expressed in
 equivalent passes over the input rows:
@@ -69,10 +80,13 @@ from repro.analytics import plan as L
 from repro.analytics.columnar import (DENSE_GROUP_LIMIT, Table,
                                       finalize_stacked, group_aggregate,
                                       pkfk_join, pkfk_join_kernel,
-                                      segment_order_stat, stacked_columns,
-                                      stacked_group_sums)
-from repro.analytics.engine import (gather_rows, interleave_group_sums,
-                                    merge_partial_table)
+                                      segment_median, segment_order_stat,
+                                      stacked_columns, stacked_group_sums)
+from repro.analytics.engine import (gather_rows, interleave_group_median,
+                                    interleave_group_sums,
+                                    merge_partial_table,
+                                    replicated_group_median, route_owner,
+                                    route_table_rows, routing_capacity)
 from repro.core.config import PlacementPolicy
 from repro.kernels.common import kernel_mode
 
@@ -88,7 +102,10 @@ class ExecutionContext:
     sweeps (the Fig 8/9 untuned/tuned axis), "cost" lets the cost model
     choose per Aggregate. ``join``: None = cost-based, or force "sorted" /
     "kernel". A (mesh, policy) pair selects the distributed placement
-    backend; ``axis`` names the sharded mesh axis."""
+    backend; ``axis`` names the sharded mesh axis. ``dist_join``: None =
+    the wire-cost model chooses per distributed Join, or force
+    "broadcast" (all-gather the build side) / "partitioned" (route both
+    sides by join-key hash)."""
 
     executor: str = "cost"
     mode: Optional[str] = None               # kernel lowering mode
@@ -98,12 +115,16 @@ class ExecutionContext:
     join: Optional[str] = None
     n_partitions: int = 64
     capacity_factor: float = 2.0
+    dist_join: Optional[str] = None
 
     def __post_init__(self):
         if self.executor not in ("xla", "kernel", "cost"):
             raise ValueError(f"unknown executor {self.executor!r}")
         if self.join not in (None, "sorted", "kernel"):
             raise ValueError(f"unknown join strategy {self.join!r}")
+        if self.dist_join not in (None, "broadcast", "partitioned"):
+            raise ValueError(
+                f"unknown distributed join strategy {self.dist_join!r}")
 
     def cache_key(self) -> Tuple:
         mesh_key = None
@@ -111,7 +132,8 @@ class ExecutionContext:
             mesh_key = (tuple(self.mesh.shape.items()),
                         tuple(str(d) for d in self.mesh.devices.flat))
         return (self.executor, self.mode, mesh_key, self.policy, self.axis,
-                self.join, self.n_partitions, self.capacity_factor)
+                self.join, self.n_partitions, self.capacity_factor,
+                self.dist_join)
 
 
 # ---------------------------------------------------------------------------
@@ -120,6 +142,10 @@ class ExecutionContext:
 FUSED_FIXED = 1.2        # fused sweep: one-hot build + table merge overhead
 FUSED_PER_COL = 0.45     # marginal pass-equivalent per stacked column
 SORT_PASS_FACTOR = 0.25  # argsort pass-equivalents per log2(n_rows)
+DIST_ROUTE_FACTOR = 1.5  # partitioned-join routing overhead per moved row
+#   (the argsort-by-owner layout + capacity padding both sides pay, relative
+#   to the raw all-gather bytes of the broadcast lowering; measured by
+#   scripts/calibrate_costs.py --dist from the observed crossover)
 
 
 @dataclass(frozen=True)
@@ -132,6 +158,7 @@ class CostProfile:
     fused_fixed: float = FUSED_FIXED
     fused_per_col: float = FUSED_PER_COL
     sort_pass_factor: float = SORT_PASS_FACTOR
+    dist_route_factor: float = DIST_ROUTE_FACTOR
     source: str = "builtin"
 
 
@@ -164,6 +191,8 @@ def load_cost_profile(path: str) -> CostProfile:
         fused_fixed=float(raw["fused_fixed"]),
         fused_per_col=float(raw["fused_per_col"]),
         sort_pass_factor=float(raw.get("sort_pass_factor", SORT_PASS_FACTOR)),
+        dist_route_factor=float(raw.get("dist_route_factor",
+                                        DIST_ROUTE_FACTOR)),
         source=str(raw.get("backend", path))))
 
 
@@ -210,6 +239,53 @@ def choose_join(n_probe: int, n_build: int, ctx: ExecutionContext) -> str:
             and n_probe >= (1 << 14) and n_build >= 512):
         return "kernel"
     return "sorted"
+
+
+def dist_join_costs(n_probe: int, n_build: int, n_shards: int,
+                    profile: Optional[CostProfile] = None
+                    ) -> Dict[str, float]:
+    """Row-transfer-equivalent cost of each distributed Join lowering.
+
+    broadcast    all-gathers the build side: every shard receives the
+                 (n-1)/n of the build rows it does not already hold —
+                 n_build * (n-1) rows on the wire, independent of the
+                 probe side. Cheap while the build side fits a socket's
+                 share; it is the cross-socket traffic the paper's Fig 5-7
+                 placement results penalize once it does not.
+    partitioned  routes BOTH sides by join-key hash (all-to-all): each row
+                 moves once with probability (n-1)/n, and both sides pay
+                 the routing layout pass (argsort by owner + capacity
+                 padding), modeled by the dist_route_factor multiplier.
+
+    The crossover: partitioned wins once the build side outgrows roughly
+    probe/(n-1) rows — i.e. for large build sides on wide meshes."""
+    p = profile or _COST_PROFILE
+    n = max(int(n_shards), 2)
+    return {
+        "broadcast": float(n_build) * (n - 1),
+        "partitioned": (float(n_probe) + float(n_build)) * (n - 1) / n
+                       * p.dist_route_factor,
+    }
+
+
+def choose_dist_join(n_probe: int, n_build: int, n_shards: int,
+                     ctx: "ExecutionContext",
+                     profile: Optional[CostProfile] = None) -> str:
+    """"broadcast" (all-gather build) vs "partitioned" (route both sides)
+    for one distributed Join, from global row counts.
+
+    The executor prices the PHYSICAL row counts it holds — for a probe
+    that is itself the output of an upstream partitioned join, that
+    includes the routed buffer's capacity padding, which really does ride
+    every subsequent collective. explain(), which only sees logical
+    shapes, can therefore report a different choice for the downstream
+    joins of a chained-join plan."""
+    if ctx.dist_join is not None:
+        return ctx.dist_join
+    if n_shards < 2:
+        return "broadcast"       # nothing to move: routing is pure waste
+    costs = dist_join_costs(n_probe, n_build, n_shards, profile)
+    return min(costs, key=costs.get)
 
 
 def stacked_width(aggs: Tuple[Tuple[str, Tuple[str, str]], ...]) -> int:
@@ -541,6 +617,9 @@ class _LocalExecutor:
                 out[name] = jnp.where(w > 0, v, -jnp.inf).max()[None]
             elif op == "min":
                 out[name] = jnp.where(w > 0, v, jnp.inf).min()[None]
+            elif op == "median":
+                k = jnp.where(w > 0, 0, -1)
+                out[name] = segment_median(k, v, 1)[0]
             else:
                 raise ValueError(f"unknown agg op {op!r}")
         out["_count"] = cnt
@@ -577,20 +656,54 @@ class _DistributedExecutor(_LocalExecutor):
                 if c != "_valid"}
         return Table(cols, self.tables[node.table]["_valid"])
 
-    def _build_side(self, node: L.Join) -> Table:
+    def _join(self, node: L.Join) -> Table:
+        """Distributed PK-FK join: broadcast vs key-partitioned, chosen by
+        the wire-cost model (dist_join_costs) from GLOBAL row counts —
+        shapes inside the shard_map are per-shard, so multiply back by n.
+        The kernel probe stays a single-device lowering; both strategies
+        gather through the sorted index once rows are placed."""
+        probe = self.run(node.probe)
         build = self.run(node.build)
+        strategy = choose_dist_join(probe.n_rows * self.n,
+                                    build.n_rows * self.n, self.n,
+                                    self.ctx, self.profile)
+        if strategy == "partitioned":
+            return self._partitioned_join(node, probe, build)
+        return pkfk_join(probe, self._gathered(build), node.probe_key,
+                         node.build_key, dict(node.take))
+
+    def _gathered(self, build: Table) -> Table:
+        """Broadcast lowering: republish the build side on every shard
+        (all-gather — the first-touch faulting pattern)."""
         cols = gather_rows(build.columns, self.ctx.axis)
         mask = (None if build.mask is None
                 else gather_rows(build.mask, self.ctx.axis))
         return Table(cols, mask)
 
-    def _join(self, node: L.Join) -> Table:
-        probe = self.run(node.probe)
-        build = self._build_side(node)
-        # the kernel probe is a single-device lowering; distributed joins
-        # always broadcast the build side and gather through the sort index
-        return pkfk_join(probe, build, node.probe_key, node.build_key,
-                         dict(node.take))
+    def _partitioned_join(self, node: L.Join, probe: Table,
+                          build: Table) -> Table:
+        """Partitioned lowering: route BOTH sides to the join key's hash
+        owner (key % n, the dist_hash_join recipe) through one all-to-all
+        each, then join shard-locally. O((N_probe+N_build)/n) received rows
+        per shard instead of the whole build side; routed padding rows
+        carry weight 0 and key -1, so they can never match a real key.
+        Routing overflow (a destination's capacity exceeded) is surfaced
+        through the plan's ``_overflow`` accumulator, never dropped
+        silently."""
+        axis, n, cf = self.ctx.axis, self.n, self.ctx.capacity_factor
+        pk = probe.col(node.probe_key).astype(jnp.int32)
+        bk = build.col(node.build_key).astype(jnp.int32)
+        p_w0, b_w0 = probe.weights(), build.weights()
+        p_cols, p_w, p_ovf = route_table_rows(
+            probe.columns, p_w0, route_owner(pk, p_w0 > 0, n), n,
+            routing_capacity(pk.shape[0], n, cf), axis)
+        b_cols, b_w, b_ovf = route_table_rows(
+            build.columns, b_w0, route_owner(bk, b_w0 > 0, n), n,
+            routing_capacity(bk.shape[0], n, cf), axis)
+        self.overflow = self.overflow + jax.lax.psum(
+            p_ovf + b_ovf, axis).astype(jnp.int32)
+        return pkfk_join(Table(p_cols, p_w), Table(b_cols, b_w),
+                         node.probe_key, node.build_key, dict(node.take))
 
     def _aggregate(self, node: L.Aggregate) -> Dict[str, jax.Array]:
         t = self.run(node.child)
@@ -599,7 +712,18 @@ class _DistributedExecutor(_LocalExecutor):
         if node.key is None:
             return self._dist_scalar_aggregate(node, t)
         G = self.resolve_groups(node.n_groups)
-        keys, vals, src = stacked_columns(t, node.key, G, dict(node.aggs))
+        dist_aggs = tuple((nm, oc) for nm, oc in node.aggs
+                          if oc[0] != "median")
+        med_out, med_counts, med_ovf = self._dist_medians(node, t, G, policy)
+        if not dist_aggs:
+            # median-only aggregate: counts come from the selection path —
+            # no second routing/merge pass just for _count
+            out = dict(med_out)
+            out["_count"] = med_counts
+            out["_overflow"] = med_ovf
+            self.overflow = self.overflow + med_ovf
+            return out
+        keys, vals, src = stacked_columns(t, node.key, G, dict(dist_aggs))
 
         def local_sums(k, v, n_groups, allow_partitioned=True):
             layout = choose_aggregate(k.shape[0], n_groups, v.shape[1],
@@ -628,10 +752,39 @@ class _DistributedExecutor(_LocalExecutor):
         else:                                  # PREFERRED: converge rows
             ak, av = gather_rows((keys, vals), axis)
             sums, overflow = local_sums(ak, av, G)
-        out = self._finalize_groups(node, t, keys, src, sums, G)
-        out["_overflow"] = overflow.astype(jnp.int32)
+        out = self._finalize_groups(dict(dist_aggs), t, keys, src, sums, G)
+        out.update(med_out)
+        out["_overflow"] = overflow.astype(jnp.int32) + med_ovf
         self.overflow = self.overflow + out["_overflow"]
         return out
+
+    def _dist_medians(self, node: L.Aggregate, t: Table, G: int, policy
+                      ) -> Tuple[Dict[str, jax.Array], Optional[jax.Array],
+                                 jax.Array]:
+        """Per-policy lowering of an Aggregate's holistic (median) aggs.
+
+        Medians cannot merge from partials, so they bypass the stacked-sums
+        collectives entirely: replication-based policies gather the records
+        (the paper's holistic worst case), INTERLEAVE routes each group's
+        records to its owner and selects there (distributed selection).
+        Returns ({name: (G,) medians}, counts-or-None, overflow), all
+        replicated in natural group order."""
+        axis, n = self.ctx.axis, self.n
+        med_aggs = tuple((nm, oc) for nm, oc in node.aggs
+                         if oc[0] == "median")
+        if not med_aggs:
+            return {}, None, jnp.zeros((), jnp.int32)
+        keys = jnp.clip(t.col(node.key), 0, G - 1).astype(jnp.int32)
+        w = t.weights()
+        cols = {name: t.col(colname).astype(jnp.float32)
+                for name, (_op, colname) in med_aggs}
+        if policy == PlacementPolicy.INTERLEAVE:
+            meds, counts, ovf = interleave_group_median(
+                keys, cols, w, G, axis, n,
+                capacity_factor=self.ctx.capacity_factor)
+            return meds, counts, ovf.astype(jnp.int32)
+        meds, counts = replicated_group_median(keys, cols, w, G, axis)
+        return meds, counts, jnp.zeros((), jnp.int32)
 
     def _dist_scalar_aggregate(self, node: L.Aggregate,
                                t: Table) -> Dict[str, jax.Array]:
@@ -641,6 +794,7 @@ class _DistributedExecutor(_LocalExecutor):
         w = t.weights()
         cnt = jax.lax.psum(w.sum(), axis)[None]
         out: Dict[str, jax.Array] = {}
+        med_cols: Dict[str, jax.Array] = {}
         for name, (op, col) in node.aggs:
             if op == "count":
                 out[name] = cnt
@@ -655,21 +809,28 @@ class _DistributedExecutor(_LocalExecutor):
             elif op == "min":
                 out[name] = jax.lax.pmin(
                     jnp.where(w > 0, v, jnp.inf).min(), axis)[None]
+            elif op == "median":
+                med_cols[name] = v       # batched below: gather rows once
             else:
                 raise ValueError(f"unknown agg op {op!r}")
+        if med_cols:
+            # holistic: converge the records ONCE, select per column
+            meds, _ = replicated_group_median(
+                jnp.zeros_like(w, jnp.int32), med_cols, w, 1, axis)
+            out.update(meds)
         out["_count"] = cnt
         out["_overflow"] = jnp.zeros((), jnp.int32)
         return out
 
-    def _finalize_groups(self, node: L.Aggregate, t: Table, keys, src,
-                         sums, G: int) -> Dict[str, jax.Array]:
+    def _finalize_groups(self, aggs: Dict[str, Tuple[str, str]], t: Table,
+                         keys, src, sums, G: int) -> Dict[str, jax.Array]:
         def order_stat(op, col):
             # local segment op, then a cross-shard tree reduction
             local = segment_order_stat(t, keys, G, op, col)
             reduce = jax.lax.pmax if op == "max" else jax.lax.pmin
             return reduce(local, self.ctx.axis)
 
-        return finalize_stacked(dict(node.aggs), src, sums, order_stat)
+        return finalize_stacked(aggs, src, sums, order_stat)
 
 
 # ---------------------------------------------------------------------------
@@ -789,6 +950,7 @@ def compile_plan(plan: L.LogicalPlan, tables,
     key = (plan, ctx.cache_key(), _signature(tables), profile)
     fn = _PLAN_CACHE.get(key)
     if fn is None:
+        L.validate(plan)     # fail fast (and once) instead of mid-trace
         fn = jax.jit(functools.partial(_run_plan, plan, ctx, profile))
         _PLAN_CACHE.put(key, fn)
     return CompiledPlan(plan, ctx, fn, required_indexes(plan.root))
@@ -834,10 +996,18 @@ def explain(plan: L.LogicalPlan, tables,
             visit(c)
         if isinstance(node, L.Join):
             n_probe, n_build = node_rows(node.probe), node_rows(node.build)
-            decisions.append(Decision(
-                "Join", f"{node.probe_key}={node.build_key}, "
-                f"probe={n_probe}, build={n_build}",
-                choose_join(n_probe, n_build, ctx)))
+            if ctx.mesh is not None:
+                n = ctx.mesh.shape[ctx.axis]
+                decisions.append(Decision(
+                    "DistJoin", f"{node.probe_key}={node.build_key}, "
+                    f"probe={n_probe}, build={n_build}, shards={n}",
+                    choose_dist_join(n_probe, n_build, n, ctx),
+                    tuple(dist_join_costs(n_probe, n_build, n).items())))
+            else:
+                decisions.append(Decision(
+                    "Join", f"{node.probe_key}={node.build_key}, "
+                    f"probe={n_probe}, build={n_build}",
+                    choose_join(n_probe, n_build, ctx)))
         elif isinstance(node, L.Aggregate) and node.key is not None:
             N = node_rows(node.child)
             G = (rows[node.n_groups.table]

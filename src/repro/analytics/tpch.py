@@ -1,7 +1,9 @@
-"""TPC-H-style workload (W5): generated tables + five representative queries.
+"""TPC-H-style workload (W5): generated tables + six representative queries.
 
 Structure-faithful versions of Q1, Q3, Q5, Q6, Q18 (the join/aggregation
-queries the paper highlights — Q5 and Q18 are its allocator case studies)
+queries the paper highlights — Q5 and Q18 are its allocator case studies),
+plus QM, an order-statistic (median) companion to Q1 exercising the
+holistic-aggregate lowerings,
 over synthetic tables at a scale factor: lineitem 6000*SF rows, orders
 1500*SF, customer 150*SF, supplier 10*SF, nation 25, region 5. Dates are
 day-number ints; strings are dictionary-encoded ints — the standard columnar
@@ -236,8 +238,27 @@ def q18(tables: Tables, *, executor: str = "xla",
     return out
 
 
+def qm(tables: Tables, *, executor: str = "xla",
+       cutoff: int = DATE1 - 90) -> Dict[str, jax.Array]:
+    """Order-statistic pricing summary: per-returnflag MEDIAN quantity and
+    price next to distributive companions.
+
+    The holistic sibling of Q1 (paper Section 2): medians cannot be merged
+    from partials, so every executor lowers them onto the sort-based
+    selection path (and, distributed, onto record replication or routed
+    selection) while avg/count still ride the distributive sweep."""
+    li = _t(tables, "lineitem")
+    li = li.filter(li.col("l_shipdate") <= cutoff)
+    return group_aggregate(li, "l_returnflag", 3, {
+        "med_qty": ("median", "l_quantity"),
+        "med_price": ("median", "l_extendedprice"),
+        "avg_qty": ("avg", "l_quantity"),
+        "count_order": ("count", "l_quantity"),
+    }, executor=executor)
+
+
 QUERIES: Dict[str, Callable[..., Dict[str, jax.Array]]] = {
-    "q1": q1, "q3": q3, "q5": q5, "q6": q6, "q18": q18}
+    "q1": q1, "q3": q3, "q5": q5, "q6": q6, "q18": q18, "qm": qm}
 
 
 # ---------------------------------------------------------------------------
@@ -317,9 +338,21 @@ def build_q18(qty_threshold: float = 212.0) -> LogicalPlan:
     return LogicalPlan(root, ("qty", "_count", "_overflow"))
 
 
+def build_qm(cutoff: int = DATE1 - 90) -> LogicalPlan:
+    li = scan("lineitem").filter(col("l_shipdate") <= cutoff)
+    root = li.aggregate(
+        "l_returnflag", 3,
+        med_qty=("median", "l_quantity"),
+        med_price=("median", "l_extendedprice"),
+        avg_qty=("avg", "l_quantity"),
+        count_order=("count", "l_quantity"))
+    return LogicalPlan(root, ("med_qty", "med_price", "avg_qty",
+                              "count_order", "_count", "_overflow"))
+
+
 LOGICAL_QUERIES: Dict[str, LogicalPlan] = {
     "q1": build_q1(), "q3": build_q3(), "q5": build_q5(), "q6": build_q6(),
-    "q18": build_q18()}
+    "q18": build_q18(), "qm": build_qm()}
 
 
 # ---------------------------------------------------------------------------

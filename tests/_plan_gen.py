@@ -1,0 +1,91 @@
+"""Random logical-plan generator for the parity fuzz harness.
+
+Standalone on purpose: no pytest / hypothesis / conftest imports, so the
+distributed fuzz subprocess (which sees only src/ on PYTHONPATH plus this
+directory) can import it and regenerate the SAME plans from the same seeds
+that the in-process harness uses.
+
+Plans are small but structurally diverse: Scan -> optional Filter ->
+optional Project -> optional Join (with a dimension table, taking columns)
+-> Aggregate over a grouped key, a join-taken key, or the global group,
+with 1..4 aggregates drawn from every op the IR supports — including the
+holistic ``median``. Every generated plan is valid by construction (and
+re-checked via plan.validate in the harness).
+"""
+import numpy as np
+
+from repro.analytics import plan as L
+
+N_ROWS = 768          # divisible by the 4-device fuzz mesh
+G1 = 13               # fact group-key domain (not mesh-divisible: exercises
+                      # the padded INTERLEAVE slot math)
+D = 48                # dimension rows (dense PK)
+DK = 7                # dimension group-key domain
+
+AGG_OPS = ("sum", "avg", "count", "max", "min", "median")
+
+
+def make_tables(seed: int = 0):
+    """Deterministic base tables: a fact table and a joinable dimension.
+
+    ~1 in 7 fact foreign keys miss the dimension (exercises the join-miss
+    mask), and values span negative/positive so min/max/median see both
+    signs."""
+    rng = np.random.RandomState(1_000_003 + seed)
+    fact = {
+        "key1": rng.randint(0, G1, N_ROWS).astype(np.int32),
+        "fk": rng.randint(0, D + D // 6, N_ROWS).astype(np.int32),
+        "v1": (rng.randn(N_ROWS) * 10).astype(np.float32),
+        "v2": rng.rand(N_ROWS).astype(np.float32),
+        "d": rng.randint(0, 100, N_ROWS).astype(np.int32),
+    }
+    dim = {
+        "pk": np.arange(D, dtype=np.int32),
+        "dk": rng.randint(0, DK, D).astype(np.int32),
+        "dv": rng.rand(D).astype(np.float32),
+    }
+    return {"fact": fact, "dim": dim}
+
+
+def make_plan(seed: int) -> L.LogicalPlan:
+    """One deterministic random plan per seed (outputs=None: everything)."""
+    rng = np.random.RandomState(seed)
+    node = L.scan("fact")
+    projected = False
+    if rng.rand() < 0.7:
+        thresh = float(rng.randint(10, 90))
+        preds = (L.col("d") < thresh, L.col("d") >= thresh,
+                 L.col("v1") > 0.0,
+                 (L.col("d") < thresh) & (L.col("v2") > 0.25))
+        node = node.filter(preds[rng.randint(len(preds))])
+    if rng.rand() < 0.6:
+        exprs = (L.col("v1") * (1 - L.col("v2")),
+                 L.col("v1") + L.col("v2") * 2.0,
+                 abs(L.col("v1")) - L.col("v2"),
+                 -L.col("v2"))
+        node = node.project(_p=exprs[rng.randint(len(exprs))])
+        projected = True
+    joined = rng.rand() < 0.5
+    if joined:
+        node = node.join(L.scan("dim"), "fk", "pk",
+                         {"_dv": "dv", "_dk": "dk"})
+        if rng.rand() < 0.3:
+            node = node.filter(L.col("_dv") <= 0.8)
+    keys = [("key1", G1), (None, 1)]
+    if joined:
+        keys.append(("_dk", DK))
+    key, n_groups = keys[rng.randint(len(keys))]
+    cols = ["v1", "v2"] + (["_p"] if projected else []) \
+        + (["_dv"] if joined else [])
+    aggs = {}
+    for i in range(int(rng.randint(1, 5))):
+        aggs[f"a{i}"] = (AGG_OPS[rng.randint(len(AGG_OPS))],
+                         cols[rng.randint(len(cols))])
+    if not any(op == "median" for op, _ in aggs.values()) and rng.rand() < 0.5:
+        aggs["amed"] = ("median", cols[rng.randint(len(cols))])
+    return L.LogicalPlan(node.aggregate(key, n_groups, **aggs), None)
+
+
+def plan_agg_ops(plan: L.LogicalPlan):
+    """{output_name: op} of the root Aggregate (for exactness tiers)."""
+    return {name: op for name, (op, _c) in plan.root.aggs}

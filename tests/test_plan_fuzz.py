@@ -1,0 +1,129 @@
+"""Generative parity harness: random logical plans, every executor, every
+placement context — the regression net that locks in the PR-4 lowerings.
+
+Plans come from tests/_plan_gen.py (deterministic per seed; hypothesis,
+when installed, drives extra seeds through tests/_hypothesis_compat.py).
+Each plan runs under executor in {xla, kernel, cost} locally and under
+{FIRST_TOUCH, INTERLEAVE} on a 4-device mesh (one subprocess batch), and
+the results are compared against the local XLA reference:
+
+  * counts and order statistics (max/min/median) must be BIT-IDENTICAL —
+    they select or count actual values, and every lowering funnels through
+    the same segment ops / segment_median selection;
+  * sums/averages compare to tight tolerances: fused-kernel and per-shard
+    reductions legitimately reassociate float additions, so bit-equality
+    across those lowerings is not defined — reduction ORDER is part of the
+    float result, not of the relational answer;
+  * ``_overflow`` must be 0 everywhere (capacity overflow is a plan-sizing
+    bug the harness must catch, never tolerate).
+
+The local grid covers LOCAL_SEEDS plans x 3 executors; the distributed
+batch re-generates DIST_SEEDS of the same plans inside the subprocess.
+Together they satisfy the >= 50 generated-plans floor with margin.
+"""
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from _plan_gen import make_plan, make_tables, plan_agg_ops
+
+from repro.analytics import plan as L
+from repro.analytics.planner import ExecutionContext, execute_plan
+
+LOCAL_SEEDS = range(48)
+DIST_SEEDS = range(16)
+EXACT_OPS = ("count", "max", "min", "median")
+
+
+def _check_parity(got, ref, ops, tag):
+    assert set(got) == set(ref), tag
+    for k in ref:
+        a, b = np.asarray(got[k]), np.asarray(ref[k])
+        if k == "_overflow":
+            assert int(a) == 0 and int(b) == 0, (tag, k, int(a))
+        elif k == "_count" or ops.get(k) in EXACT_OPS:
+            np.testing.assert_array_equal(a, b, err_msg=f"{tag}/{k}")
+        else:
+            np.testing.assert_allclose(a, b, atol=1e-2, rtol=1e-4,
+                                       equal_nan=True,
+                                       err_msg=f"{tag}/{k}")
+
+
+def _run_local_seed(seed: int) -> None:
+    plan = make_plan(seed)
+    L.validate(plan)
+    tables = make_tables()
+    ops = plan_agg_ops(plan)
+    ref = execute_plan(plan, tables, ExecutionContext(executor="xla"))
+    for executor in ("kernel", "cost"):
+        got = execute_plan(plan, tables,
+                           ExecutionContext(executor=executor))
+        _check_parity(got, ref, ops, f"seed={seed}/{executor}")
+
+
+@pytest.mark.parametrize("chunk", range(8))
+def test_fuzz_local_executor_parity(chunk):
+    for seed in LOCAL_SEEDS:
+        if seed % 8 == chunk:
+            _run_local_seed(seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1000, max_value=100_000))
+def test_fuzz_local_hypothesis_seeds(seed):
+    """Extra seed space when hypothesis is installed (skips otherwise)."""
+    _run_local_seed(seed)
+
+
+DIST_FUZZ = """
+import sys
+sys.path.insert(0, {testdir!r})
+import numpy as np, jax
+from _plan_gen import make_plan, make_tables, plan_agg_ops
+from repro.analytics.planner import ExecutionContext, execute_plan
+from repro.core.config import PlacementPolicy
+
+EXACT_OPS = ("count", "max", "min", "median")
+mesh = jax.make_mesh((4,), ("data",))
+tables = make_tables()
+for seed in {seeds!r}:
+    plan = make_plan(seed)
+    ops = plan_agg_ops(plan)
+    ref = execute_plan(plan, tables, ExecutionContext(executor="xla"))
+    has_join = "_dk" in str(plan)
+    contexts = [("ft", ExecutionContext(executor="xla", mesh=mesh,
+                                        policy=PlacementPolicy.FIRST_TOUCH,
+                                        capacity_factor=4.0)),
+                ("il", ExecutionContext(executor="xla", mesh=mesh,
+                                        policy=PlacementPolicy.INTERLEAVE,
+                                        capacity_factor=4.0))]
+    if has_join:
+        contexts.append(
+            ("il-part", ExecutionContext(executor="xla", mesh=mesh,
+                                         policy=PlacementPolicy.INTERLEAVE,
+                                         capacity_factor=4.0,
+                                         dist_join="partitioned")))
+    for tag, ctx in contexts:
+        got = execute_plan(plan, tables, ctx)
+        assert set(got) == set(ref), (seed, tag)
+        for k in ref:
+            a, b = np.asarray(got[k]), np.asarray(ref[k])
+            if k == "_overflow":
+                assert int(a) == 0, (seed, tag, k, int(a))
+            elif k == "_count" or ops.get(k) in EXACT_OPS:
+                assert np.array_equal(a, b, equal_nan=True), (seed, tag, k)
+            else:
+                np.testing.assert_allclose(a, b, atol=1e-2, rtol=1e-4,
+                                           err_msg=f"{{seed}}/{{tag}}/{{k}}")
+print("DIST_FUZZ_OK")
+"""
+
+
+def test_fuzz_distributed_policy_parity():
+    import os
+    testdir = os.path.dirname(os.path.abspath(__file__))
+    out = run_with_devices(
+        DIST_FUZZ.format(testdir=testdir, seeds=list(DIST_SEEDS)),
+        n_devices=4, timeout=900)
+    assert "DIST_FUZZ_OK" in out

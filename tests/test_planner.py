@@ -12,12 +12,14 @@ import pytest
 
 from conftest import run_with_devices
 
+from repro.analytics import plan as L
 from repro.analytics import planner
 from repro.analytics.columnar import Table, pkfk_join, pkfk_join_kernel
-from repro.analytics.planner import (ExecutionContext, choose_aggregate,
+from repro.analytics.planner import (CostProfile, ExecutionContext,
+                                     choose_aggregate, choose_dist_join,
                                      choose_join, configure_plan_cache,
-                                     explain, join_index_pool,
-                                     plan_cache_info)
+                                     dist_join_costs, explain,
+                                     join_index_pool, plan_cache_info)
 from repro.analytics.tpch import (LOGICAL_QUERIES, QUERIES,
                                   clear_plan_cache, generate, run_query)
 
@@ -84,6 +86,84 @@ def test_cost_profile_overrides_constants(tmp_path, data):
         assert plan_cache_info().currsize == 2   # distinct cache entry
     finally:
         planner.set_cost_profile(None)
+
+
+def test_dist_join_cost_model():
+    """Broadcast wins for small dimension builds; partitioned wins once
+    the build side outgrows ~probe/(n-1); overrides and profiles apply."""
+    ctx = ExecutionContext(executor="xla")
+    # tiny dimension table vs a big fact probe: broadcast
+    assert choose_dist_join(1 << 18, 1 << 10, 8, ctx) == "broadcast"
+    # build as large as the probe: the all-gather moves ~n x more rows
+    # than routing both sides once
+    assert choose_dist_join(1 << 18, 1 << 18, 8, ctx) == "partitioned"
+    # wider mesh moves the crossover lower, never higher
+    assert choose_dist_join(1 << 18, 1 << 15, 2, ctx) == "broadcast"
+    assert choose_dist_join(1 << 18, 1 << 16, 16, ctx) == "partitioned"
+    # explicit override beats the model
+    forced = ExecutionContext(executor="xla", dist_join="broadcast")
+    assert choose_dist_join(1 << 18, 1 << 18, 8, forced) == "broadcast"
+    with pytest.raises(ValueError):
+        ExecutionContext(dist_join="bogus")
+    # a measured routing overhead shifts the crossover
+    costs = dist_join_costs(1 << 18, 1 << 14, 8)
+    assert costs["broadcast"] < costs["partitioned"]
+    heavy = CostProfile(dist_route_factor=30.0)
+    assert choose_dist_join(1 << 18, 1 << 18, 8, ctx, heavy) == "broadcast"
+
+
+def test_explain_reports_dist_join_choice(data):
+    """explain() surfaces the distributed-join decision (with costs) when
+    the context carries a mesh: TPC-H dimension builds stay broadcast."""
+    import jax
+    mesh = jax.make_mesh((1,), ("data",))
+    tables = data.as_jax()
+    dj = [d for d in explain(LOGICAL_QUERIES["q5"], tables,
+                             ExecutionContext(executor="xla", mesh=mesh))
+          if d.node == "DistJoin"]
+    assert len(dj) == 4 and all(d.costs for d in dj)
+    assert all(d.choice == "broadcast" for d in dj)     # small dim builds
+    # and honors a forced strategy
+    forced = [d for d in explain(LOGICAL_QUERIES["q5"], tables,
+                                 ExecutionContext(executor="xla", mesh=mesh,
+                                                  dist_join="partitioned"))
+              if d.node == "DistJoin"]
+    assert all(d.choice == "partitioned" for d in forced)
+    # without a mesh the local sorted/kernel decision is reported instead
+    local = explain(LOGICAL_QUERIES["q5"], tables,
+                    ExecutionContext(executor="xla"))
+    assert not any(d.node == "DistJoin" for d in local)
+
+
+def test_validate_rejects_malformed_plans(data):
+    with pytest.raises(ValueError, match="unknown agg op"):
+        L.validate(L.scan("t").aggregate("k", 4, x=("mode", "v")))
+    with pytest.raises(ValueError, match="at least one aggregate"):
+        L.validate(L.Aggregate(L.scan("t"), "k", 4, ()))
+    with pytest.raises(ValueError, match="n_groups"):
+        L.validate(L.scan("t").aggregate("k", 0, x=("sum", "v")))
+    with pytest.raises(ValueError, match="TopK"):
+        L.validate(L.scan("t").top_k("v", 5, "i"))
+    with pytest.raises(ValueError, match="unknown binary op"):
+        L.validate(L.scan("t").filter(L.BinOp("xor", L.col("a"),
+                                              L.col("b"))))
+    # group dicts cannot feed Table-consuming nodes (would die mid-trace)
+    agg = L.scan("t").aggregate("k", 4, x=("sum", "v"))
+    with pytest.raises(ValueError, match="must be a Table node"):
+        L.validate(agg.filter(L.col("x") > 0))
+    with pytest.raises(ValueError, match="must be a Table node"):
+        L.validate(agg.project(_y=L.col("x") * 2))
+    with pytest.raises(ValueError, match="must be a Table node"):
+        L.validate(agg.join(L.scan("d"), "x", "pk"))
+    with pytest.raises(ValueError, match="must be a Table node"):
+        L.validate(agg.aggregate("x", 4, y=("sum", "x")))
+    # the planner validates on cache miss and refuses to trace garbage
+    bad = L.LogicalPlan(L.scan("lineitem").aggregate(
+        "l_returnflag", 3, x=("mode", "l_quantity")), None)
+    with pytest.raises(ValueError, match="unknown agg op"):
+        planner.execute_plan(bad, data.as_jax())
+    # the median op is a valid aggregate kind
+    L.validate(L.scan("t").aggregate("k", 4, m=("median", "v")))
 
 
 def test_join_choice_is_sorted_without_mxu():
@@ -304,13 +384,47 @@ def test_pkfk_join_kernel_matches_sorted(rng, mode):
 
 def test_pkfk_join_kernel_counts_overflow(rng):
     # all build keys hash-collide into few partitions at capacity 1.0 ->
-    # overflow must be surfaced, and overflowed rows degrade to misses
+    # without the residual pass, overflow must be surfaced and overflowed
+    # rows degrade to misses (the PR-2 accounting behavior)
     n = 4096
     dim = Table({"dk": jnp.asarray(np.arange(n), jnp.int32),
                  "v": jnp.ones((n,), jnp.float32)})
     fact = Table({"fk": jnp.asarray(np.arange(n), jnp.int32)})
     got, ovf = pkfk_join_kernel(fact, dim, "fk", "dk", {"v": "v"},
                                 n_partitions=2, capacity_factor=0.25,
-                                mode="ref")
+                                mode="ref", residual=False)
     assert int(np.asarray(ovf)) > 0
     assert float(np.asarray(got.weights()).sum()) < n
+
+
+def test_pkfk_join_kernel_residual_pass_exact(rng):
+    """Deliberate capacity overflow on both sides: the residual sorted
+    re-probe (default) must recover every missed match — zero misses, and
+    values identical to the exact sorted join."""
+    n_dim, n_fact = 2048, 4096
+    dk = jnp.asarray(rng.permutation(n_dim), jnp.int32)
+    dim = Table({"dk": dk,
+                 "payload": jnp.asarray(rng.randn(n_dim), jnp.float32)})
+    # skewed probe: half the probes hammer 32 hot keys, so partitions
+    # overflow at capacity_factor 0.25 on either side
+    hot = rng.randint(0, 32, n_fact // 2)
+    cold = rng.randint(0, n_dim + 64, n_fact - n_fact // 2)
+    fk = jnp.asarray(np.concatenate([hot, cold]), jnp.int32)
+    fact = Table({"fk": fk}).filter(jnp.asarray(rng.rand(n_fact) < 0.9))
+    ref = pkfk_join(fact, dim, "fk", "dk", {"p": "payload"})
+
+    # sanity: this configuration really does overflow without the residual
+    _, raw_ovf = pkfk_join_kernel(fact, dim, "fk", "dk", {"p": "payload"},
+                                  n_partitions=2, capacity_factor=0.25,
+                                  mode="ref", residual=False)
+    assert int(np.asarray(raw_ovf)) > 0
+
+    got, ovf = pkfk_join_kernel(fact, dim, "fk", "dk", {"p": "payload"},
+                                n_partitions=2, capacity_factor=0.25,
+                                mode="ref")
+    assert int(np.asarray(ovf)) == 0          # repaired, not surfaced
+    np.testing.assert_array_equal(np.asarray(got.weights()),
+                                  np.asarray(ref.weights()))
+    np.testing.assert_allclose(
+        np.asarray(got.col("p")) * np.asarray(got.weights()),
+        np.asarray(ref.col("p")) * np.asarray(ref.weights()), rtol=1e-6)
