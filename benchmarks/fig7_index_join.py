@@ -21,7 +21,8 @@ import jax.numpy as jnp
 from benchmarks.common import Row, run_in_mesh, time_fn
 from repro.analytics import planner
 from repro.analytics.datasets import blanas_join
-from repro.analytics.dist_join_bench import sweep_code
+from repro.analytics.dist_join_bench import (chain_code, pushdown_code,
+                                             sweep_code)
 from repro.analytics.join import (build_hash_index, build_radix_index,
                                   build_sorted_index, hash_join, index_join,
                                   probe_hash_index, probe_radix_index,
@@ -30,6 +31,8 @@ from repro.analytics.join import (build_hash_index, build_radix_index,
 DIST_PROBE = 1 << 18
 DIST_BUILDS = {"small_build": 1 << 10, "large_build": 1 << 18}
 DIST_DEVICES = 8
+PUSHDOWN_ROWS, PUSHDOWN_GROUPS = 1 << 18, 1 << 9
+CHAIN_ROWS, CHAIN_DIM = 1 << 17, 1 << 15
 
 
 def run() -> List[Row]:
@@ -80,4 +83,27 @@ def run_dist() -> List[Row]:
                          dist[str(build_n)][strat],
                          f"build={build_n};probe={DIST_PROBE};"
                          f"cost_model_picks={chosen}"))
+
+    # aggregate push-down: the same distributed group-by with the
+    # PPartialAggregate split forced on vs off — the physical plan's
+    # estimated moved rows shrink from ~n_rows/shard to ~n_groups
+    pd = run_in_mesh(pushdown_code(rows=PUSHDOWN_ROWS,
+                                   groups=PUSHDOWN_GROUPS,
+                                   devices=DIST_DEVICES),
+                     n_devices=DIST_DEVICES, timeout=900)
+    for tag in ("pushdown", "no_pushdown"):
+        rows.append((f"fig7_dist_agg_{tag}", pd[tag]["us"],
+                     f"rows={PUSHDOWN_ROWS};groups={PUSHDOWN_GROUPS};"
+                     f"moved_rows={pd[tag]['moved_rows']}"))
+
+    # chained partitioned joins: occupancy-aware Compact bounds the
+    # routed-buffer growth between hops (the max buffer is read off the
+    # physical plan, the wall-clock off the execution)
+    ch = run_in_mesh(chain_code(rows=CHAIN_ROWS, dim=CHAIN_DIM,
+                                devices=DIST_DEVICES),
+                     n_devices=DIST_DEVICES, timeout=900)
+    for tag in ("compact", "no_compact"):
+        rows.append((f"fig7_dist_chain_{tag}", ch[tag]["us"],
+                     f"rows={CHAIN_ROWS};dim={CHAIN_DIM};"
+                     f"max_buffer_rows={ch[tag]['max_buffer_rows']}"))
     return rows

@@ -29,8 +29,22 @@ the MEASURED crossover build size B* gives
 which is written into the profile so planner.choose_dist_join flips
 strategies where this hardware actually flips.
 
+With ``--sweep-groups`` it additionally sweeps the GROUP DOMAIN and fits
+the two remaining hand-set constants:
+
+  * ``dense_group_limit`` — the largest swept n_groups where the dense
+    full-width fused layout still beats the range-partitioned one (the
+    hand-set constant is a VMEM model; the sweep measures where the
+    crossover actually sits on this backend);
+  * ``partition_capacity_factor`` — the smallest capacity factor at which
+    the range-partitioned layout reports ZERO overflow on a zipf-skewed
+    key set (the paper's e=0.5 skew), times a 1.25 safety margin. The
+    planner applies it to the partitioned AGGREGATE layout only; routing
+    capacities stay on the ExecutionContext.
+
     PYTHONPATH=src python scripts/calibrate_costs.py --out cost_profile.json
     PYTHONPATH=src python scripts/calibrate_costs.py --dist --out cost_profile.json
+    PYTHONPATH=src python scripts/calibrate_costs.py --sweep-groups --out cost_profile.json
     >>> planner.load_cost_profile("cost_profile.json")
 """
 from __future__ import annotations
@@ -77,6 +91,86 @@ def calibrate_dist(probe: int, builds, devices: int):
     return max(round(float(factor), 4), 0.01), raw
 
 
+def sweep_groups(rows: int, groups_sweep, cols: int, mode,
+                 capacity_factors) -> dict:
+    """Measure the dense/partitioned crossover over n_groups and the
+    smallest zero-overflow partition capacity factor under zipf skew.
+
+    Returns {"dense_group_limit", "partition_capacity_factor", raw
+    timings}. dense_group_limit falls back to the builtin constant when
+    dense wins everywhere in range (the sweep then only certifies it)."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analytics.columnar import (DENSE_GROUP_LIMIT,
+                                          stacked_group_sums)
+    from repro.analytics.datasets import zipf
+
+    rng = np.random.RandomState(1)
+    raw = {"dense": {}, "partitioned": {}}
+    wins = []                      # (G, dense_won) in ascending-G order
+    for G in sorted(groups_sweep):
+        keys = jnp.asarray(rng.randint(0, G, rows).astype(np.int32))
+        vals = jnp.asarray(rng.rand(rows, cols).astype(np.float32))
+        t = {}
+        for layout in ("dense", "partitioned"):
+            fn = jax.jit(functools.partial(stacked_group_sums, n_groups=G,
+                                           layout=layout, mode=mode))
+            t[layout] = time_fn(lambda: fn(keys, vals))
+            raw[layout][str(G)] = round(t[layout] * 1e6, 1)
+        wins.append((G, t["dense"] <= t["partitioned"]))
+    # Crossover = first SUSTAINED loss (a loss followed by another loss,
+    # or a loss at the end of the range): a single noisy sample at either
+    # end can neither disable dense everywhere nor extend it past the
+    # measured flip. The fitted limit is the last win before it.
+    cross_idx = next(
+        (i for i, (_G, won) in enumerate(wins)
+         if not won and (i == len(wins) - 1 or not wins[i + 1][1])), None)
+    if cross_idx is None:
+        # dense never sustainedly lost in range: no crossover observed,
+        # keep the VMEM-model constant rather than extrapolate past data
+        limit = DENSE_GROUP_LIMIT
+    else:
+        prior_wins = [G for G, won in wins[:cross_idx] if won]
+        # no win below the crossover: the measurement upper-bounds the
+        # limit just below the smallest swept point (recording the
+        # permissive builtin would contradict the sweep's own numbers)
+        limit = max(prior_wins) if prior_wins else min(groups_sweep) - 1
+
+    # capacity-factor fit: smallest cf with zero overflow on zipf keys
+    ds = zipf(rows, max(groups_sweep), seed=3)
+    keys = jnp.asarray(ds.keys)
+    vals = jnp.asarray(np.stack([ds.vals] * cols, axis=1))
+    fitted_cf = None
+    raw["overflow_at_cf"] = {}
+    for cf in sorted(capacity_factors):
+        fn = jax.jit(functools.partial(
+            stacked_group_sums, n_groups=max(groups_sweep),
+            layout="partitioned", mode=mode, capacity_factor=cf))
+        _sums, ovf = jax.block_until_ready(fn(keys, vals))
+        raw["overflow_at_cf"][str(cf)] = int(np.asarray(ovf))
+        if int(np.asarray(ovf)) == 0:
+            fitted_cf = cf
+            break
+    if fitted_cf is None:
+        # every swept factor overflowed: the fit is INCONCLUSIVE — leave
+        # the profile entry null (the planner keeps the context's factor)
+        # rather than record a known-overflowing value as calibrated
+        print(f"sweep_groups: no overflow-free capacity factor in "
+              f"{sorted(capacity_factors)} (overflows: "
+              f"{raw['overflow_at_cf']}); leaving "
+              f"partition_capacity_factor unset", file=sys.stderr)
+    return {
+        "dense_group_limit": int(limit),
+        "partition_capacity_factor": (None if fitted_cf is None
+                                      else round(float(fitted_cf) * 1.25,
+                                                 4)),
+        "raw": raw,
+    }
+
+
 def time_fn(fn, *, warmup: int = 2, iters: int = 5) -> float:
     """Median seconds per call, results blocked."""
     import jax
@@ -105,6 +199,16 @@ def main() -> None:
                     help="also measure the broadcast vs partitioned "
                          "distributed-join crossover on a fake-device mesh "
                          "and fit dist_route_factor")
+    ap.add_argument("--sweep-groups", action="store_true",
+                    help="also sweep n_groups to fit dense_group_limit and "
+                         "the partitioned-layout capacity factor")
+    ap.add_argument("--groups-sweep", type=int, nargs="+",
+                    default=[512, 1024, 2048, 4096, 8192, 16384],
+                    help="group domains for the --sweep-groups crossover")
+    ap.add_argument("--capacity-factors", type=float, nargs="+",
+                    default=[1.0, 1.25, 1.5, 2.0, 3.0],
+                    help="candidate partition capacity factors "
+                         "(--sweep-groups fits the smallest overflow-free)")
     ap.add_argument("--dist-devices", type=int, default=8)
     ap.add_argument("--dist-probe", type=int, default=1 << 17,
                     help="probe rows for the distributed-join sweep")
@@ -163,6 +267,13 @@ def main() -> None:
             "sort": round(t_sort * 1e6, 1),
         },
     }
+    if args.sweep_groups:
+        fit = sweep_groups(args.rows, args.groups_sweep, max(cols),
+                           args.mode, args.capacity_factors)
+        profile["dense_group_limit"] = fit["dense_group_limit"]
+        profile["partition_capacity_factor"] = \
+            fit["partition_capacity_factor"]
+        profile["raw_us"]["groups_sweep"] = fit["raw"]
     if args.dist:
         factor, raw_dist = calibrate_dist(args.dist_probe, args.dist_builds,
                                           args.dist_devices)

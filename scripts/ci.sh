@@ -21,6 +21,11 @@ cd "$(dirname "$0")/.."
 BASELINE="${1:-bench_baseline.json}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# named gate: the physical-plan golden snapshots (explain_physical must
+# stay string-stable; a drift here means the lowering/rewrites changed —
+# fail fast with a readable tree diff before the full suite runs)
+python -m pytest -x -q tests/test_explain_golden.py
+
 python -m pytest -x -q
 
 if [ -f "$BASELINE" ]; then

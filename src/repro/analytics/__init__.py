@@ -6,25 +6,30 @@ W3 hash join                          join.hash_join / dist_hash_join
 W4 index nested-loop join             join.index_join (radix/sorted/hash)
 W5 TPC-H                              tpch.run_query (q1, q3, q5, q6, q18)
 
-Queries are authored as logical plans (plan.py) and lowered by the
-cost-based physical planner (planner.py) onto the columnar operators
-(columnar.py) — single-device or under a placement-policy mesh backend
-(engine.py) — without changing the plan. EVERY workload flows through
-that one IR/planner/cache: dist_count, dist_median and dist_hash_join
-are thin wrappers over logical plans (the holistic median is a "median"
-Aggregate op; the distributed join is cost-chosen between broadcast and
-key-partitioned lowerings). Concurrent multi-query serving (admission
-queue -> batcher -> morsel scheduler over socket-pinned pools) lives in
-the service/ subpackage.
+Queries are authored as logical plans (plan.py), lowered by the
+cost-based planner (planner.lower) into an EXPLICIT physical plan
+(physical.py: relational operators plus first-class Exchange/Compact
+data-movement nodes, improved by aggregate push-down, route-once
+exchange dedup/elision, and occupancy-aware compaction), and executed by
+thin walkers over the columnar operators (columnar.py) — single-device
+or under a placement-policy mesh backend (engine.py) — without changing
+the plan. EVERY workload flows through that one IR/planner/cache:
+dist_count, dist_median and dist_hash_join are thin wrappers over
+logical plans (the holistic median is a "median" Aggregate op —
+generalized to arbitrary-rank "quantile:R" — and the distributed join is
+cost-chosen between broadcast and key-partitioned lowerings). Concurrent
+multi-query serving (admission queue -> batcher -> morsel scheduler over
+socket-pinned pools) lives in the service/ subpackage.
 """
-from repro.analytics import datasets, plan
+from repro.analytics import datasets, physical, plan
 from repro.analytics.aggregate import (count_direct, count_partitioned,
                                        median_direct)
 from repro.analytics.engine import dist_count, dist_hash_join, dist_median
 from repro.analytics.join import hash_join, index_join
 from repro.analytics.planner import (CompiledPlan, ExecutionContext,
                                      compile_plan, execute_plan, explain,
-                                     load_cost_profile, plan_cache_info)
+                                     explain_physical, load_cost_profile,
+                                     lower, plan_cache_info)
 from repro.analytics.tpch import LOGICAL_QUERIES
 from repro.analytics.tpch import generate as tpch_generate
 from repro.analytics.tpch import run_query as tpch_run_query

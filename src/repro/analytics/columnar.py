@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.analytics.hashing import pad_partitions, partition_of
+from repro.analytics.plan import is_holistic, parse_quantile
 from repro.kernels.hash_aggregate import hash_aggregate_multi
 from repro.kernels.join_probe import join_probe
 
@@ -268,7 +269,7 @@ def _group_aggregate_xla(table: Table, key: str, n_groups: int,
         if op in ("sum", "avg"):
             s = jax.ops.segment_sum(v * w, keys, num_segments=n_groups)
             out[name] = s if op == "sum" else s / jnp.maximum(cnt, 1.0)
-        elif op in ("max", "min", "median"):
+        elif op in ("max", "min") or is_holistic(op):
             out[name] = segment_order_stat(table, keys, n_groups, op, col)
         else:
             raise ValueError(f"unknown agg op {op!r}")
@@ -290,7 +291,8 @@ def stacked_columns(table: Table, key: str, n_groups: int,
     for name, (op, col) in aggs.items():
         if op in ("sum", "avg") and col not in src:
             src.append(col)
-        elif op not in ("sum", "avg", "count", "max", "min", "median"):
+        elif (op not in ("sum", "avg", "count", "max", "min")
+              and not is_holistic(op)):
             raise ValueError(f"unknown agg op {op!r}")
     vals = jnp.stack(
         [w] + [table.col(c).astype(jnp.float32) * w for c in src], axis=1)
@@ -321,21 +323,14 @@ def stacked_group_sums(keys: jax.Array, vals: jax.Array, n_groups: int, *,
     raise ValueError(f"unknown layout {layout!r}")
 
 
-def segment_median(keys: jax.Array, vals: jax.Array, n_groups: int
-                   ) -> Tuple[jax.Array, jax.Array]:
-    """Exact per-group median by local sort + selection; keys < 0 are
-    EXCLUDED (the routed-buffer padding / masked-row sentinel).
-
-    The holistic (order-statistic) primitive: a group's median cannot be
-    merged from partials (paper Section 2), so every median lowering —
-    single-device, full-replication, or routed distributed selection —
-    funnels through this one sort-based selection. Sorts values first,
-    then stably by key, so each group's run is internally value-sorted;
-    the median is the mean of the run's two middle elements (NaN for
-    empty groups). Keys >= n_groups are clipped into the last group (the
-    stacked_columns convention — the selection math needs the key order
-    and the count clipping to agree, so the clip is enforced here, not
-    left to callers). Returns (medians, counts), both (n_groups,)."""
+def _segment_selection(keys: jax.Array, vals: jax.Array, n_groups: int):
+    """Shared sort pass of the order-statistic primitives: per-group
+    value-sorted runs plus each run's (count, start). Keys < 0 are
+    EXCLUDED (the routed-buffer padding / masked-row sentinel); keys >=
+    n_groups clip into the last group (the stacked_columns convention —
+    the selection math needs the key order and the count clipping to
+    agree, so the clip is enforced here, not left to callers). Returns
+    (sorted_vals, counts f32, starts i32 shifted past the excluded run)."""
     keys = jnp.where(keys < 0, -1, jnp.minimum(keys, n_groups - 1))
     order_v = jnp.argsort(vals, stable=True)
     k1, v1 = keys[order_v], vals[order_v]
@@ -352,6 +347,21 @@ def segment_median(keys: jax.Array, vals: jax.Array, n_groups: int
     starts = jnp.cumsum(counts) - counts
     # excluded records sort first (key < 0): shift starts past them
     starts = starts + pad[0]
+    return sv, counts, starts
+
+
+def segment_median(keys: jax.Array, vals: jax.Array, n_groups: int
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Exact per-group median by local sort + selection.
+
+    The holistic (order-statistic) primitive: a group's median cannot be
+    merged from partials (paper Section 2), so every median lowering —
+    single-device, full-replication, or routed distributed selection —
+    funnels through this one sort-based selection (shared with
+    ``segment_quantile``, the arbitrary-rank generalization). The median
+    is the mean of the run's two middle elements (NaN for empty groups).
+    Returns (medians, counts), both (n_groups,)."""
+    sv, counts, starts = _segment_selection(keys, vals, n_groups)
     c, s = counts.astype(jnp.int32), starts.astype(jnp.int32)
     lo = jnp.clip(s + jnp.maximum((c - 1) // 2, 0), 0, sv.shape[0] - 1)
     hi = jnp.clip(s + jnp.maximum(c // 2, 0), 0, sv.shape[0] - 1)
@@ -359,14 +369,45 @@ def segment_median(keys: jax.Array, vals: jax.Array, n_groups: int
     return jnp.where(c > 0, med, jnp.nan), counts
 
 
+def segment_quantile(keys: jax.Array, vals: jax.Array, n_groups: int,
+                     rank: float) -> Tuple[jax.Array, jax.Array]:
+    """Exact per-group ``rank`` quantile (linear interpolation, the
+    numpy default): median generalized to an arbitrary selection index.
+
+    Rides the same sort pass as ``segment_median`` — the selection
+    position within a group's value-sorted run is rank * (count - 1); a
+    fractional position interpolates between the two neighboring order
+    statistics. Keys < 0 are excluded, empty groups yield NaN. ``rank``
+    must lie in the OPEN interval (0, 1) — the endpoints are min/max,
+    which have exact distributive lowerings. Returns (quantiles, counts),
+    both (n_groups,)."""
+    if not 0.0 < float(rank) < 1.0:
+        raise ValueError(f"quantile rank must be in (0, 1), got {rank}")
+    sv, counts, starts = _segment_selection(keys, vals, n_groups)
+    c, s = counts.astype(jnp.int32), starts.astype(jnp.int32)
+    pos = jnp.float32(rank) * jnp.maximum(c - 1, 0).astype(jnp.float32)
+    base = jnp.floor(pos).astype(jnp.int32)
+    frac = pos - base.astype(jnp.float32)
+    lo = jnp.clip(s + base, 0, sv.shape[0] - 1)
+    hi = jnp.clip(s + jnp.minimum(base + 1, jnp.maximum(c - 1, 0)),
+                  0, sv.shape[0] - 1)
+    q = sv[lo] + (sv[hi] - sv[lo]) * frac
+    return jnp.where(c > 0, q, jnp.nan), counts
+
+
 def segment_order_stat(table: Table, keys: jax.Array, n_groups: int,
                        op: str, col: str) -> jax.Array:
-    """Masked per-group max/min/median via exact XLA lowerings (order
-    statistics are not distributive sums and never ride the fused sweep)."""
+    """Masked per-group max/min/median/quantile via exact XLA lowerings
+    (order statistics are not distributive sums and never ride the fused
+    sweep)."""
     v = table.col(col).astype(jnp.float32)
     w = table.weights()
     if op == "median":
         return segment_median(jnp.where(w > 0, keys, -1), v, n_groups)[0]
+    rank = parse_quantile(op)
+    if rank is not None:
+        return segment_quantile(jnp.where(w > 0, keys, -1), v, n_groups,
+                                rank)[0]
     if op == "max":
         big = jnp.where(w > 0, v, -jnp.inf)
         return jax.ops.segment_max(big, keys, num_segments=n_groups)

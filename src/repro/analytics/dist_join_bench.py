@@ -12,10 +12,35 @@ never drift apart.
 The child prints one JSON object: {str(build_n): {"broadcast": us,
 "partitioned": us}} for each swept build size, joining a fixed-size probe
 against it under each forced ``dist_join`` strategy.
+
+Two further snippets measure the PR-5 physical-plan movement rewrites on
+the same subprocess-mesh harness: ``pushdown_code`` (one distributed
+group-by, aggregate push-down forced on vs off, wall-clock + the physical
+plan's estimated moved rows) and ``chain_code`` (two chained partitioned
+joins, occupancy-aware Compact on vs off, wall-clock + the largest routed
+buffer either plan materializes).
 """
 
-SWEEP_CODE = """
-import json, time, numpy as np, jax, jax.numpy as jnp
+# ONE timing helper shared (textually prepended) by every child template:
+# warmup dispatch, then the median of timed iterations, results blocked.
+# A change here changes every consumer in lockstep — the fitted
+# dist_route_factor is only meaningful if calibration and benchmark time
+# the same way.
+BENCH_SNIPPET = """
+import time as _time
+import jax as _jax
+
+def bench(fn, *args, iters=5):
+    _jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = _time.perf_counter(); _jax.block_until_ready(fn(*args))
+        ts.append(_time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2] * 1e6
+"""
+
+SWEEP_CODE = BENCH_SNIPPET + """
+import json, numpy as np, jax, jax.numpy as jnp
 from repro.analytics import plan as L
 from repro.analytics import planner
 from repro.core.config import PlacementPolicy
@@ -23,14 +48,6 @@ from repro.core.config import PlacementPolicy
 mesh = jax.make_mesh(({devices},), ("data",))
 rng = np.random.RandomState(7)
 probe_n = {probe}
-
-def bench(fn, *args):
-    jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(3):
-        t0 = time.perf_counter(); jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return sorted(ts)[1] * 1e6
 
 lplan = L.LogicalPlan(
     L.scan("probe").join(L.scan("build"), "pk", "bk", {{"_v": "bv"}})
@@ -61,3 +78,90 @@ def sweep_code(*, probe: int, builds, devices: int) -> str:
     """The runnable child-process source for one (probe, builds) sweep."""
     return SWEEP_CODE.format(probe=probe, builds=sorted(builds),
                              devices=devices)
+
+
+PUSHDOWN_CODE = BENCH_SNIPPET + """
+import json, numpy as np, jax, jax.numpy as jnp
+from repro.analytics import plan as L
+from repro.analytics import physical as PH
+from repro.analytics import planner
+from repro.core.config import PlacementPolicy
+
+mesh = jax.make_mesh(({devices},), ("data",))
+rng = np.random.RandomState(11)
+N, G = {rows}, {groups}
+tables = {{"t": {{"k": jnp.asarray(rng.randint(0, G, N).astype(np.int32)),
+                  "v": jnp.asarray(rng.rand(N).astype(np.float32)),
+                  "w": jnp.asarray(rng.rand(N).astype(np.float32))}}}}
+lplan = L.LogicalPlan(
+    L.scan("t").aggregate("k", G, s=("sum", "v"), s2=("sum", "w"),
+                          a=("avg", "v"), c=("count", "v")),
+    ("s", "s2", "a", "c", "_overflow"))
+
+res = {{}}
+for tag, pd in (("pushdown", True), ("no_pushdown", False)):
+    ctx = planner.ExecutionContext(executor="xla", mesh=mesh,
+                                   policy=PlacementPolicy.INTERLEAVE,
+                                   agg_pushdown=pd)
+    cp = planner.compile_plan(lplan, tables, ctx)
+    out = cp(tables)
+    assert int(np.asarray(out["_overflow"])) == 0, tag
+    res[tag] = {{"us": bench(cp, tables),
+                 "moved_rows": PH.moved_rows(cp.physical.root)}}
+print(json.dumps(res))
+"""
+
+
+def pushdown_code(*, rows: int, groups: int, devices: int) -> str:
+    """Child source measuring one distributed group-by with aggregate
+    push-down forced on vs off (same plan, same mesh): wall-clock plus the
+    physical plan's estimated per-shard moved rows."""
+    return PUSHDOWN_CODE.format(rows=rows, groups=groups, devices=devices)
+
+
+CHAIN_CODE = BENCH_SNIPPET + """
+import json, numpy as np, jax, jax.numpy as jnp
+from repro.analytics import plan as L
+from repro.analytics import physical as PH
+from repro.analytics import planner
+from repro.core.config import PlacementPolicy
+
+mesh = jax.make_mesh(({devices},), ("data",))
+rng = np.random.RandomState(13)
+N, D = {rows}, {dim}
+tables = {{
+    "fact": {{"k1": jnp.asarray(rng.randint(0, D, N).astype(np.int32)),
+              "k2": jnp.asarray(rng.randint(0, D, N).astype(np.int32))}},
+    "d1": {{"pk1": jnp.asarray(rng.permutation(D).astype(np.int32)),
+            "v1": jnp.asarray(rng.rand(D).astype(np.float32))}},
+    "d2": {{"pk2": jnp.asarray(rng.permutation(D).astype(np.int32)),
+            "v2": jnp.asarray(rng.rand(D).astype(np.float32))}}}}
+node = L.scan("fact").join(L.scan("d1"), "k1", "pk1", {{"_v1": "v1"}})
+node = node.join(L.scan("d2"), "k2", "pk2", {{"_v2": "v2"}})
+lplan = L.LogicalPlan(
+    node.aggregate(None, 1, c=("count", "_v2"), s=("sum", "_v2")),
+    ("c", "s", "_overflow"))
+
+def max_buffer(phys):
+    return max(n.rows for n in PH.walk_unique(phys.root)
+               if isinstance(n, PH.Exchange) and n.key is not None)
+
+res = {{}}
+for tag, compact in (("compact", None), ("no_compact", False)):
+    ctx = planner.ExecutionContext(executor="xla", mesh=mesh,
+                                   policy=PlacementPolicy.INTERLEAVE,
+                                   dist_join="partitioned", compact=compact)
+    cp = planner.compile_plan(lplan, tables, ctx)
+    out = cp(tables)
+    assert int(np.asarray(out["_overflow"])) == 0, tag
+    res[tag] = {{"us": bench(cp, tables),
+                 "max_buffer_rows": max_buffer(cp.physical)}}
+print(json.dumps(res))
+"""
+
+
+def chain_code(*, rows: int, dim: int, devices: int) -> str:
+    """Child source measuring two chained partitioned joins with the
+    occupancy-aware Compact pass on vs off: wall-clock plus the largest
+    routed-buffer rows either plan materializes."""
+    return CHAIN_CODE.format(rows=rows, dim=dim, devices=devices)

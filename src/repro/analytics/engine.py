@@ -45,7 +45,10 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.analytics.columnar import segment_median, stacked_group_sums
+from repro.analytics.columnar import (segment_median, segment_quantile,
+                                      stacked_group_sums)
+from repro.analytics.hashing import partition_of
+from repro.analytics.physical import ceil128
 from repro.core.config import PlacementPolicy
 
 
@@ -75,17 +78,34 @@ def route_records(keys: jax.Array, vals: jax.Array, n_shards: int,
     return k_out, v_out, overflow
 
 
-def route_owner(keys: jax.Array, alive: jax.Array, n: int) -> jax.Array:
-    """Owner shard for routing one row set: alive rows hash by key
-    (key % n, co-locating equal keys); dead rows — scan padding, masked
-    rows, the padding of an upstream routed buffer — spread round-robin
-    instead. Dead rows contribute nothing wherever they land, but hashed
-    together (e.g. all key -1 -> shard n-1, or all clipped to key 0 ->
-    shard 0) they would mass on ONE destination and eat its capacity,
-    surfacing overflow for records that do not exist. One copy of this
-    rule serves every routed lowering."""
+def route_owner(keys: jax.Array, alive: jax.Array, n: int,
+                method: str = "modulo") -> jax.Array:
+    """Owner shard for routing one row set: alive rows co-locate by key;
+    dead rows — scan padding, masked rows, the padding of an upstream
+    routed buffer — spread round-robin instead. Dead rows contribute
+    nothing wherever they land, but co-located (e.g. all key -1 -> shard
+    n-1, or all clipped to key 0 -> shard 0) they would mass on ONE
+    destination and eat its capacity, surfacing overflow for records that
+    do not exist. One copy of this rule serves every routed lowering.
+
+    ``method`` picks the owner function. "modulo" (key % n) is ideal for
+    DENSE id domains — group ids, permuted PKs — and is what the
+    interleaved republish slot math (owner g = g % n, slot g // n)
+    requires. "hash" takes the TOP radix bits of the multiplicative hash
+    (hashing.partition_of — the same choice the join kernels make; the
+    LOW hash bits are degenerate for power-of-two strides, where
+    key * KNUTH stays a multiple of the stride): the right choice for
+    CLUSTERED key spaces (sequential/moving-window keys, strided ids),
+    where key % n would mass whole key runs — or every key of one stride
+    class — onto a few shards."""
     spread = jnp.arange(keys.shape[0], dtype=jnp.int32) % n
-    return jnp.where(alive, (keys % n).astype(jnp.int32), spread)
+    if method == "hash":
+        owned = partition_of(keys, n)
+    elif method == "modulo":
+        owned = (keys % n).astype(jnp.int32)
+    else:
+        raise ValueError(f"unknown routing method {method!r}")
+    return jnp.where(alive, owned, spread)
 
 
 def routing_capacity(n_rows: int, n_shards: int,
@@ -93,9 +113,9 @@ def routing_capacity(n_rows: int, n_shards: int,
     """Per-destination slot budget for routing ``n_rows`` local records to
     ``n_shards`` owners: the balanced share times ``capacity_factor``,
     rounded up to a 128-row tile (one copy of the formula every routed
-    lowering shares)."""
-    cap = int(capacity_factor * n_rows / n_shards)
-    return max(128, -(-cap // 128) * 128)
+    lowering shares; the tile rounding itself is physical.ceil128, shared
+    with the Compact occupancy budgets)."""
+    return ceil128(int(capacity_factor * n_rows / n_shards))
 
 
 def route_table_rows(cols, weights: jax.Array, owner: jax.Array,
@@ -128,6 +148,70 @@ def route_table_rows(cols, weights: jax.Array, owner: jax.Array,
     w = exchange(weights, 0)
     overflow = jnp.maximum(counts - capacity, 0).sum()
     return out, w, overflow
+
+
+def compact_routed_rows(cols, weights: jax.Array, capacity: int):
+    """Occupancy-aware re-compaction of a routed buffer (the physical
+    planner's ``Compact`` operator).
+
+    A routed buffer holds n_shards * capacity slots but only ~its share of
+    the ALIVE rows; feeding it to another routing pass sizes the next
+    capacity from the padded length, so chained partitioned joins grow
+    their buffers by a capacity_factor per hop. Compacting between hops
+    stable-partitions the alive rows (weight > 0) to the front — original
+    relative order preserved, so downstream float reductions stay
+    deterministic — and cuts the buffer back to ``capacity`` rows. Alive
+    rows beyond capacity are COUNTED into the returned overflow (the
+    caller folds it into the plan's ``_overflow``), never dropped
+    silently. Returns (cols, weights, overflow int32)."""
+    alive = weights > 0
+    order = jnp.argsort(jnp.where(alive, 0, 1).astype(jnp.int32),
+                        stable=True)
+    idx = order[:capacity]
+    kept = {c: jnp.asarray(a)[idx] for c, a in cols.items()}
+    w = weights[idx]
+    n_alive = alive.sum()
+    overflow = jnp.maximum(n_alive - capacity, 0).astype(jnp.int32)
+    return kept, w, overflow
+
+
+def pushdown_group_sums(partial: jax.Array, n_groups: int, axis: str,
+                        n: int, *, capacity_factor: float = 2.0,
+                        capacity: Optional[int] = None
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Aggregate push-down merge: exchange per-shard PARTIAL sums instead
+    of records.
+
+    ``partial`` is the local (n_groups, C) stacked-sums table. Each group
+    row g routes to its modulo owner (g % n) — deterministic and balanced
+    by construction, since every shard ships the same group ids — the
+    owner adds its received contributions, and the merged rows republish
+    in natural group order (the same slot math as interleave_group_sums).
+    Per-shard wire volume is O(n_groups) rows where routing the records
+    costs O(n_rows): the win the physical planner's push-down rewrite
+    prices. ``capacity`` overrides the slot budget (the planner passes
+    its Exchange node's capacity, as in interleave_group_sums). Returns
+    ((n_groups, C) replicated, overflow) — overflow is 0 by construction
+    for capacity_factor >= 1 (each destination receives exactly its owned
+    groups from each source)."""
+    G = n_groups
+    g = jnp.arange(G, dtype=jnp.int32)
+    owner = g % n
+    cap = (capacity if capacity is not None
+           else routing_capacity(G, n, capacity_factor))
+    k_out, v_out, route_ovf = route_records(g, partial, n, owner, cap)
+    k_in = jax.lax.all_to_all(k_out, axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+    v_in = jax.lax.all_to_all(v_out, axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+    n_slots = (G + (-G % n)) // n
+    slot = jnp.where(k_in >= 0, k_in // n, n_slots)      # OOB drop slot
+    local = jax.ops.segment_sum(v_in.reshape((-1,) + v_in.shape[2:]),
+                                slot.reshape(-1), num_segments=n_slots + 1)
+    gathered = jax.lax.all_gather(local[:n_slots], axis, tiled=True)
+    full = gathered[(g % n) * n_slots + g // n]
+    overflow = jax.lax.psum(route_ovf, axis)
+    return full, overflow
 
 
 # ---------------------------------------------------------------------------
@@ -230,7 +314,8 @@ def merge_partial_table(table: jax.Array, policy: PlacementPolicy,
 
 def interleave_group_sums(keys: jax.Array, vals: jax.Array, n_groups: int,
                           axis: str, n: int, aggregate_fn, *,
-                          capacity_factor: float = 2.0
+                          capacity_factor: float = 2.0,
+                          capacity: Optional[int] = None
                           ) -> Tuple[jax.Array, jax.Array]:
     """INTERLEAVE backend: route records to bucket-interleaved owners
     (all-to-all of the DATA, O(N) wire bytes), aggregate once on the owner,
@@ -242,15 +327,18 @@ def interleave_group_sums(keys: jax.Array, vals: jax.Array, n_groups: int,
     result does not depend on row OCCUPANCY — xla segment ops or the dense
     chunked kernel, not the range-partitioned layout, whose per-partition
     capacity the massed padding rows would consume (dropping real records
-    and reporting phantom overflow). Returns ((n_groups, C) replicated,
-    overflow)."""
+    and reporting phantom overflow). ``capacity`` overrides the
+    per-destination slot budget — the physical planner passes its
+    Exchange node's capacity so the executed routing can never drift from
+    the rendered plan. Returns ((n_groups, C) replicated, overflow)."""
     G_pad = n_groups + (-n_groups % n)
     if vals.ndim > 1:
         # column 0 of a stacked matrix carries the selection weights
         owner = route_owner(keys, vals[:, 0] > 0, n)
     else:
         owner = keys % n
-    cap = routing_capacity(keys.shape[0], n, capacity_factor)
+    cap = (capacity if capacity is not None
+           else routing_capacity(keys.shape[0], n, capacity_factor))
     k_out, v_out, route_ovf = route_records(keys, vals, n, owner, cap)
     k_in = jax.lax.all_to_all(k_out, axis, split_axis=0, concat_axis=0,
                               tiled=True)
@@ -352,32 +440,47 @@ def _rebalance_to_interleave(table: jax.Array, n: int, axis: str) -> jax.Array:
 # (distributed selection). Both return natural-group-order replicated
 # results so one downstream plan serves every policy.
 
+def _select(k, v, n_groups, rank):
+    """One sort-based selection: the median when ``rank`` is None, the
+    interpolated ``rank`` quantile otherwise (both exclude keys < 0)."""
+    if rank is None:
+        return segment_median(k, v, n_groups)
+    return segment_quantile(k, v, n_groups, rank)
+
+
 def replicated_group_median(keys: jax.Array, cols, w: jax.Array,
-                            n_groups: int, axis: str):
+                            n_groups: int, axis: str, ranks=None):
     """FIRST_TOUCH / LOCAL_ALLOC / PREFERRED holistic lowering: gather
     every shard's records (all-gather of the DATA) and run one local
     sort-based selection per value column. ``cols``: {name: (N,) values} —
-    the keys/weights are gathered ONCE for all of them. Returns
-    ({name: (n_groups,) medians}, counts), replicated."""
+    the keys/weights are gathered ONCE for all of them. ``ranks`` maps a
+    column name to a quantile rank in (0, 1); absent/None means the
+    median (the selection machinery is the same — a quantile is just a
+    different selection index). Returns ({name: (n_groups,) order
+    statistics}, counts), replicated."""
+    ranks = ranks or {}
     ak = jax.lax.all_gather(keys, axis, tiled=True)
     aw = jax.lax.all_gather(w, axis, tiled=True)
     k_eff = jnp.where(aw > 0, ak, -1)
     meds, counts = {}, None
     for name, v in cols.items():
         av = jax.lax.all_gather(v, axis, tiled=True)
-        meds[name], counts = segment_median(k_eff, av, n_groups)
+        meds[name], counts = _select(k_eff, av, n_groups, ranks.get(name))
     return meds, counts
 
 
 def interleave_group_median(keys: jax.Array, cols, w: jax.Array,
                             n_groups: int, axis: str, n: int, *,
-                            capacity_factor: float = 2.0):
+                            capacity_factor: float = 2.0, ranks=None):
     """INTERLEAVE holistic lowering: route each group's records to its
     bucket-interleaved owner (all-to-all, O(N) wire bytes), select the
-    median locally on the owner, then republish in natural group order.
-    ``cols``: {name: (N,) values}; every value column rides ONE routing
-    pass (one argsort-by-owner layout, keys/weights exchanged once).
-    Returns ({name: (n_groups,) medians}, counts, overflow), replicated."""
+    order statistic locally on the owner, then republish in natural group
+    order. ``cols``: {name: (N,) values}; every value column rides ONE
+    routing pass (one argsort-by-owner layout, keys/weights exchanged
+    once). ``ranks`` as in replicated_group_median (None entry = median).
+    Returns ({name: (n_groups,) order stats}, counts, overflow),
+    replicated."""
+    ranks = ranks or {}
     k_eff = jnp.where(w > 0, keys, -1).astype(jnp.int32)
     owner = route_owner(k_eff, k_eff >= 0, n)
     cap = routing_capacity(keys.shape[0], n, capacity_factor)
@@ -392,7 +495,8 @@ def interleave_group_median(keys: jax.Array, cols, w: jax.Array,
     pos = (g % n) * n_slots + g // n
     meds, counts = {}, None
     for i, name in enumerate(cols):
-        med, cnt = segment_median(local_ids, routed[f"v{i}"], n_slots)
+        med, cnt = _select(local_ids, routed[f"v{i}"], n_slots,
+                           ranks.get(name))
         meds[name] = jax.lax.all_gather(med, axis, tiled=True)[pos]
         counts = jax.lax.all_gather(cnt, axis, tiled=True)[pos]
     return meds, counts, jax.lax.psum(ovf, axis)
@@ -455,9 +559,13 @@ def dist_hash_join(mesh: Mesh, policy: PlacementPolicy, *,
         ("count", "checksum"))
     dist_join = ("partitioned" if policy == PlacementPolicy.INTERLEAVE
                  else "broadcast")
+    # dist_route="modulo": the retired W3 shard_map plan routed by key % n,
+    # and the pinned fixture (tests/fixtures/w1w3_retired_plans.npz) checks
+    # the float checksums BIT-exactly — identical data movement, identical
+    # per-shard reduction order. New plans default to hash-based routing.
     ctx = planner.ExecutionContext(executor="xla", mesh=mesh, policy=policy,
                                    axis=axis, capacity_factor=capacity_factor,
-                                   dist_join=dist_join)
+                                   dist_join=dist_join, dist_route="modulo")
 
     def fn(bk, bv, pk):
         out = planner.execute_plan(

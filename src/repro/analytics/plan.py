@@ -247,9 +247,37 @@ def scan(table: str) -> Scan:
 # IR validation
 # ---------------------------------------------------------------------------
 AGG_OPS = ("sum", "avg", "count", "max", "min", "median")
+# "quantile:R" (R a literal rank in (0, 1), e.g. "quantile:0.9") is also a
+# valid agg op: the arbitrary-rank generalization of median, riding the
+# same sort-based selection machinery (columnar.segment_quantile).
 _BIN_OPS = ("add", "sub", "mul", "div", "le", "lt", "ge", "gt", "eq", "ne",
             "and", "or")
 _UN_OPS = ("abs", "neg", "not")
+
+
+def parse_quantile(op: str) -> Optional[float]:
+    """Rank of a "quantile:R" agg op, or None for every other op.
+
+    Raises ValueError when the op IS a quantile but the rank is not a
+    literal in the OPEN interval (0, 1) — rank 0/1 are min/max, which have
+    exact distributive lowerings and must be spelled that way."""
+    if not isinstance(op, str) or not op.startswith("quantile:"):
+        return None
+    try:
+        rank = float(op.split(":", 1)[1])
+    except ValueError:
+        raise ValueError(f"malformed quantile op {op!r}; "
+                         f"expected 'quantile:R' with R a float") from None
+    if not 0.0 < rank < 1.0:
+        raise ValueError(f"quantile rank must be in (0, 1), got {rank} "
+                         f"(use 'min'/'max' for the endpoints)")
+    return rank
+
+
+def is_holistic(op: str) -> bool:
+    """True for order-statistic ops whose result cannot be merged from
+    partials (paper Section 2): median and arbitrary-rank quantiles."""
+    return op == "median" or parse_quantile(op) is not None
 
 
 def _validate_expr(e: Expr) -> None:
@@ -296,10 +324,10 @@ def validate(plan: Union["LogicalPlan", Node]) -> None:
             if not node.aggs:
                 raise ValueError("Aggregate needs at least one aggregate")
             for name, (op, _col) in node.aggs:
-                if op not in AGG_OPS:
+                if op not in AGG_OPS and parse_quantile(op) is None:
                     raise ValueError(
                         f"unknown agg op {op!r} for {name!r}; "
-                        f"expected one of {AGG_OPS}")
+                        f"expected one of {AGG_OPS} or 'quantile:R'")
             if (not isinstance(node.n_groups, TableRows)
                     and int(node.n_groups) < 1):
                 raise ValueError(f"Aggregate n_groups must be >= 1, "

@@ -2,36 +2,52 @@
 
 This is the "execution strategy changes underneath" half of the paper's
 application-agnostic thesis: one logical plan, many physical realizations.
-``execute_plan(plan, tables, ctx)`` lowers each logical node to a physical
-operator chosen from static shape metadata and the ``ExecutionContext``:
+Since PR 5 the planner is a genuine THREE-LAYER pipeline:
+
+  logical plan  --lower(plan, ctx)-->  PHYSICAL PLAN  --walk-->  executors
+
+``lower`` turns each logical node into an explicit physical operator
+(physical.py) with every strategy decision resolved to a plain field —
+join algorithm, aggregate layout, Exchange kind, compaction point — from
+static shape metadata and the ``ExecutionContext``:
 
   Aggregate   -> XLA segment ops | dense-chunked fused kernel |
                  range-partitioned fused kernel (``choose_aggregate``, a
-                 documented cost model over (n_rows, n_groups, n_cols) —
-                 fixes the ROADMAP note that large-domain single-aggregate
-                 queries paid the range-partition argsort with no payoff)
+                 documented cost model over (n_rows, n_groups, n_cols))
   Join        -> sorted-index searchsorted gather (build argsorts hoisted
                  out of the compiled plan by ``JoinIndexPool``) | the
                  kernels/join_probe broadcast-compare kernel when the MXU
                  executes it (``choose_join``)
-  whole plan  -> single-device | a placement-policy shard_map backend when
-                 the context carries (mesh, PlacementPolicy): rows are
-                 sharded over the mesh axis and distributive Aggregates
-                 lower onto the engine.py collectives per policy
-                 (all-reduce / reduce-scatter / record routing / converge),
-                 so the paper's Section-3.3 placement plans execute the SAME
-                 logical plans as the tuned kernel path.
-  dist Join   -> broadcast (all-gather the build side) | key-partitioned
-                 (route BOTH sides by join-key hash, the dist_hash_join
-                 recipe), chosen by a wire-cost model (``dist_join_costs``)
-                 over global row counts: broadcast moves n_build*(n-1)
-                 rows, partitioned (n_probe+n_build)*(n-1)/n times the
-                 measured routing overhead — so large build sides go
-                 partitioned, small dimension tables keep broadcasting.
-  median      -> holistic order statistic: local-sort selection on one
-                 device; under a placement policy, full record replication
-                 (FIRST_TOUCH/LOCAL_ALLOC/PREFERRED — holistic partials
-                 cannot merge) or routed distributed selection (INTERLEAVE).
+  dist Join   -> PJoin over Exchange(broadcast) | PJoin over two
+                 Exchange(hash) routings, chosen by a wire-cost model
+                 (``dist_join_costs``) over physical row counts
+  dist Agg    -> PPartialAggregate + per-policy merge collectives; under
+                 INTERLEAVE the record routing is an explicit
+                 Exchange(hash) that three movement REWRITES then improve:
+
+  (1) aggregate PUSH-DOWN: a distributive Aggregate splits into
+      PPartialAggregate below a hash Exchange + merge above it, shipping
+      ~n_groups partial rows per shard instead of n_rows records
+      (physical.pushdown_profitable prices the split);
+  (2) ROUTE-ONCE: structurally identical hash Exchanges deduplicate via
+      executor memoization, and an Exchange whose child is already
+      co-located by the same key (an upstream partitioned join on that
+      key) is elided entirely — join AND aggregate route one time
+      (physical.routes_once / placed_key);
+  (3) occupancy-aware COMPACT: a routed buffer is cut back to
+      COMPACT_MARGIN x its estimated alive rows before being routed
+      again (engine.compact_routed_rows), so chained partitioned joins
+      stop growing padding by a capacity_factor per hop
+      (physical.maybe_compact).
+
+``explain`` reports one Decision per physical Join/Aggregate/Exchange/
+Compact (estimated moved rows included); ``explain_physical`` renders the
+whole physical tree (golden-snapshot tested). The executors
+(_LocalExecutor / _DistributedExecutor) are thin walkers over the
+physical IR: they dispatch on node type and call the engine/columnar
+primitives the node names — every placement policy, median strategy, and
+routing plan that existed before the physical layer executes the same
+primitives in the same order (the parity grids pin this).
 
 The cost model is deliberately simple — everything is expressed in
 equivalent passes over the input rows:
@@ -42,23 +58,16 @@ equivalent passes over the input rows:
   cost(dense)       = 1.2 + 0.45 * C          (one fused sweep; per-column
                                                slope for the wider MXU dot;
                                                valid iff n_groups <=
-                                               DENSE_GROUP_LIMIT)
+                                               profile.dense_group_limit)
   cost(partitioned) = cost(dense)
                       + 0.25 * log2(n_rows)   (the range-partition argsort)
 
-so a single-aggregate query (C=2) always stays on segment ops, Q1's seven
-aggregates (C=5) win with one fused sweep, and the partitioned layout is
-chosen only when enough fused columns amortize the sort.
-
 Compiled plans live in a bounded LRU cache keyed by (logical plan
-structure, context key, table shape signature) — the logical plan IS the
-cache key, no query names involved. ``plan_cache_info()`` /
-``configure_plan_cache()`` expose and bound it. Join build-side argsort
-indexes are pooled across calls keyed on column-array *identity* (so they
-survive Table/pytree reconstruction) and enter the compiled plan as traced
-arguments: repeated ``run_query`` calls on the same dataset never re-sort a
-build side, fixing the per-call argsort the per-Table cache could not
-amortize across traces.
+structure, context key, table shape signature, cost profile); the cache
+VALUE is the (physical plan, jitted executable) pair, so the physical
+tree is inspectable for every cached entry. Join build-side argsort
+indexes are pooled across calls keyed on column-array *identity* and
+enter the compiled plan as traced arguments.
 """
 from __future__ import annotations
 
@@ -69,24 +78,29 @@ import threading
 import weakref
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, List, NamedTuple, Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.analytics import physical as PH
 from repro.analytics import plan as L
 from repro.analytics.columnar import (DENSE_GROUP_LIMIT, Table,
                                       finalize_stacked, group_aggregate,
                                       pkfk_join, pkfk_join_kernel,
                                       segment_median, segment_order_stat,
-                                      stacked_columns, stacked_group_sums)
-from repro.analytics.engine import (gather_rows, interleave_group_median,
+                                      segment_quantile, stacked_columns,
+                                      stacked_group_sums)
+from repro.analytics.engine import (compact_routed_rows, gather_rows,
+                                    interleave_group_median,
                                     interleave_group_sums,
                                     merge_partial_table,
+                                    pushdown_group_sums,
                                     replicated_group_median, route_owner,
                                     route_table_rows, routing_capacity)
+from repro.analytics.plan import is_holistic, parse_quantile
 from repro.core.config import PlacementPolicy
 from repro.kernels.common import kernel_mode
 
@@ -104,8 +118,17 @@ class ExecutionContext:
     "kernel". A (mesh, policy) pair selects the distributed placement
     backend; ``axis`` names the sharded mesh axis. ``dist_join``: None =
     the wire-cost model chooses per distributed Join, or force
-    "broadcast" (all-gather the build side) / "partitioned" (route both
-    sides by join-key hash)."""
+    "broadcast" / "partitioned". ``dist_route`` picks the owner function
+    for partitioned-join routing: "hash" (default; multiplicative hash,
+    robust to clustered/strided key spaces) or "modulo" (the legacy
+    dense-id map — dist_hash_join pins it to reproduce the retired W3
+    plans bit-identically). ``agg_pushdown``: None = push distributive
+    aggregates below the exchange when n_groups < per-shard rows, or
+    force True/False. ``route_once``: elide exchanges whose child is
+    already placed by the same key (False disables). ``compact``: None =
+    insert occupancy-aware Compact nodes before re-routing padded
+    buffers (COMPACT_MARGIN occupancy headroom), False disables, a float
+    overrides the margin."""
 
     executor: str = "cost"
     mode: Optional[str] = None               # kernel lowering mode
@@ -116,6 +139,10 @@ class ExecutionContext:
     n_partitions: int = 64
     capacity_factor: float = 2.0
     dist_join: Optional[str] = None
+    dist_route: str = "hash"
+    agg_pushdown: Optional[bool] = None
+    route_once: bool = True
+    compact: Union[None, bool, int, float] = None
 
     def __post_init__(self):
         if self.executor not in ("xla", "kernel", "cost"):
@@ -125,15 +152,36 @@ class ExecutionContext:
         if self.dist_join not in (None, "broadcast", "partitioned"):
             raise ValueError(
                 f"unknown distributed join strategy {self.dist_join!r}")
+        if self.dist_route not in ("hash", "modulo"):
+            raise ValueError(f"unknown routing method {self.dist_route!r}")
+        if (not isinstance(self.compact, bool) and self.compact is not None
+                and (not isinstance(self.compact, (int, float))
+                     or self.compact < 1.0)):
+            raise ValueError("compact must be None, a bool, or a numeric "
+                             f"margin >= 1.0; got {self.compact!r}")
 
     def cache_key(self) -> Tuple:
         mesh_key = None
         if self.mesh is not None:
             mesh_key = (tuple(self.mesh.shape.items()),
                         tuple(str(d) for d in self.mesh.devices.flat))
+        # compact keys by its RESOLVED margin (None when disabled):
+        # compact=True, None and 1.5 lower to identical physical plans,
+        # while the raw values would collide bool/int spellings of
+        # DIFFERENT margins (True == 1 == 1.0 in Python)
         return (self.executor, self.mode, mesh_key, self.policy, self.axis,
                 self.join, self.n_partitions, self.capacity_factor,
-                self.dist_join)
+                self.dist_join, self.dist_route, self.agg_pushdown,
+                self.route_once, self.compact_margin())
+
+    # -- rewrite-knob resolution -------------------------------------------
+    def compact_margin(self) -> Optional[float]:
+        """Occupancy headroom for Compact nodes, or None when disabled."""
+        if self.compact is False:
+            return None
+        if self.compact is None or self.compact is True:
+            return COMPACT_MARGIN
+        return float(self.compact)           # numeric margin override
 
 
 # ---------------------------------------------------------------------------
@@ -146,6 +194,10 @@ DIST_ROUTE_FACTOR = 1.5  # partitioned-join routing overhead per moved row
 #   (the argsort-by-owner layout + capacity padding both sides pay, relative
 #   to the raw all-gather bytes of the broadcast lowering; measured by
 #   scripts/calibrate_costs.py --dist from the observed crossover)
+COMPACT_MARGIN = 1.5     # Compact budget: margin x estimated alive rows.
+#   Routing capacity_factor absorbs per-destination ROUTING skew; this
+#   margin absorbs occupancy-estimate error of an already-routed buffer.
+#   Alive rows beyond the budget surface as _overflow, never vanish.
 
 
 @dataclass(frozen=True)
@@ -153,12 +205,19 @@ class CostProfile:
     """Pass-equivalent cost constants, either the hand-set defaults or a
     measured profile (scripts/calibrate_costs.py). Frozen/hashable so the
     active profile participates in the plan-cache key — plans compiled
-    under one profile are never served after the constants change."""
+    under one profile are never served after the constants change.
+    ``dense_group_limit`` bounds the dense fused layout's key domain
+    (measured by the --sweep-groups calibration; defaults to the VMEM
+    model constant) and ``partition_capacity_factor``, when fitted,
+    overrides the context's capacity factor for the range-partitioned
+    aggregate layout only (routing capacities stay on the context)."""
 
     fused_fixed: float = FUSED_FIXED
     fused_per_col: float = FUSED_PER_COL
     sort_pass_factor: float = SORT_PASS_FACTOR
     dist_route_factor: float = DIST_ROUTE_FACTOR
+    dense_group_limit: int = DENSE_GROUP_LIMIT
+    partition_capacity_factor: Optional[float] = None
     source: str = "builtin"
 
 
@@ -182,17 +241,23 @@ def load_cost_profile(path: str) -> CostProfile:
     """Install the measured constants written by scripts/calibrate_costs.py.
 
     The JSON carries {"fused_fixed", "fused_per_col", "sort_pass_factor"}
-    (extra keys — backend, raw timings — are kept as provenance in
-    ``source``); when present they replace the hand-set defaults for every
-    subsequent planning decision."""
+    plus, when the respective sweeps ran, "dist_route_factor",
+    "dense_group_limit" and "partition_capacity_factor" (extra keys —
+    backend, raw timings — are kept as provenance in ``source``); when
+    present they replace the hand-set defaults for every subsequent
+    planning decision."""
     with open(path) as f:
         raw = json.load(f)
+    pcf = raw.get("partition_capacity_factor")
     return set_cost_profile(CostProfile(
         fused_fixed=float(raw["fused_fixed"]),
         fused_per_col=float(raw["fused_per_col"]),
         sort_pass_factor=float(raw.get("sort_pass_factor", SORT_PASS_FACTOR)),
         dist_route_factor=float(raw.get("dist_route_factor",
                                         DIST_ROUTE_FACTOR)),
+        dense_group_limit=int(raw.get("dense_group_limit",
+                                      DENSE_GROUP_LIMIT)),
+        partition_capacity_factor=(None if pcf is None else float(pcf)),
         source=str(raw.get("backend", path))))
 
 
@@ -209,7 +274,7 @@ def aggregate_costs(n_rows: int, n_groups: int, n_cols: int,
     fused = p.fused_fixed + p.fused_per_col * n_cols
     return {
         "xla": float(n_cols),
-        "dense": fused if n_groups <= DENSE_GROUP_LIMIT else math.inf,
+        "dense": fused if n_groups <= p.dense_group_limit else math.inf,
         "partitioned": fused + p.sort_pass_factor * math.log2(max(n_rows, 2)),
     }
 
@@ -218,11 +283,12 @@ def choose_aggregate(n_rows: int, n_groups: int, n_cols: int,
                      executor: str = "cost",
                      profile: Optional[CostProfile] = None) -> str:
     """Physical layout for one Aggregate: "xla" | "dense" | "partitioned"."""
+    p = profile or _COST_PROFILE
     if executor == "xla":
         return "xla"
     if executor == "kernel":     # the tuned-path preference: always fused
-        return "dense" if n_groups <= DENSE_GROUP_LIMIT else "partitioned"
-    costs = aggregate_costs(n_rows, n_groups, n_cols, profile)
+        return "dense" if n_groups <= p.dense_group_limit else "partitioned"
+    costs = aggregate_costs(n_rows, n_groups, n_cols, p)
     return min(costs, key=costs.get)
 
 
@@ -274,12 +340,14 @@ def choose_dist_join(n_probe: int, n_build: int, n_shards: int,
     """"broadcast" (all-gather build) vs "partitioned" (route both sides)
     for one distributed Join, from global row counts.
 
-    The executor prices the PHYSICAL row counts it holds — for a probe
-    that is itself the output of an upstream partitioned join, that
-    includes the routed buffer's capacity padding, which really does ride
-    every subsequent collective. explain(), which only sees logical
-    shapes, can therefore report a different choice for the downstream
-    joins of a chained-join plan."""
+    The lowering prices the PHYSICAL row counts each side holds BEFORE
+    the movement rewrites touch them — for a probe that is itself the
+    output of an upstream partitioned join, that includes the routed
+    buffer's full capacity padding. Compact is inserted after this
+    choice, so the partitioned estimate is conservative (pads the cost of
+    rows compaction will reclaim), biasing borderline chained joins
+    toward broadcast; pricing post-compact rows is a ROADMAP
+    refinement."""
     if ctx.dist_join is not None:
         return ctx.dist_join
     if n_shards < 2:
@@ -293,10 +361,20 @@ def stacked_width(aggs: Tuple[Tuple[str, Tuple[str, str]], ...]) -> int:
     return 1 + len({c for _, (op, c) in aggs if op in ("sum", "avg")})
 
 
+def _stacked_src(aggs) -> list:
+    """Distinct sum/avg source columns, insertion order — the static twin
+    of the ``src`` list stacked_columns derives from data."""
+    src: list = []
+    for _name, (op, c) in aggs:
+        if op in ("sum", "avg") and c not in src:
+            src.append(c)
+    return src
+
+
 @dataclass(frozen=True)
 class Decision:
     """One planner choice, for ``explain`` output and tests."""
-    node: str            # "Aggregate" | "Join"
+    node: str            # "Aggregate" | "Join" | "DistJoin" | "Exchange" ...
     detail: str
     choice: str
     costs: Optional[Tuple[Tuple[str, float], ...]] = None
@@ -499,40 +577,251 @@ def eval_expr(e: L.Expr, table: Table):
 
 
 # ---------------------------------------------------------------------------
-# physical execution
+# lowering: logical plan -> physical plan
+# ---------------------------------------------------------------------------
+def lower(plan: L.LogicalPlan, ctx: ExecutionContext,
+          rows: Dict[str, int], profile: Optional[CostProfile] = None,
+          n_shards: Optional[int] = None) -> PH.PhysicalPlan:
+    """Cost-driven lowering pass: resolve every strategy decision into an
+    explicit physical tree, then let the movement rewrites (push-down,
+    route-once, compaction — see module docstring) improve it.
+
+    ``rows`` maps table name -> true row count (the shape signature the
+    plan-cache key already carries). ``n_shards`` overrides the mesh width
+    — lowering is pure shape arithmetic, so tests and explain can lower
+    distributed plans without materializing fake devices."""
+    profile = profile or current_cost_profile()
+    if n_shards is None:
+        n_shards = ctx.mesh.shape[ctx.axis] if ctx.mesh is not None else 1
+        distributed = ctx.mesh is not None
+    else:
+        distributed = True
+    lo = _Lowering(ctx, rows, profile, n_shards, distributed)
+    root = lo.node(plan.root)
+    return PH.PhysicalPlan(root, plan.outputs,
+                           n_shards if distributed else 1)
+
+
+class _Lowering:
+    """One lower() pass: shape propagation + strategy choice per node."""
+
+    def __init__(self, ctx, rows, profile, n, distributed):
+        self.ctx = ctx
+        self.rows = rows
+        self.profile = profile
+        self.n = n
+        self.distributed = distributed
+        self.margin = ctx.compact_margin()   # None = compaction disabled
+
+    def groups(self, card: L.Cardinality) -> int:
+        if isinstance(card, L.TableRows):
+            return self.rows[card.table]
+        return int(card)
+
+    def node(self, node: L.Node) -> PH.PNode:
+        method = getattr(self, "_" + type(node).__name__.lower())
+        return method(node)
+
+    # -- relational nodes ---------------------------------------------------
+    def _scan(self, node: L.Scan) -> PH.PScan:
+        r = self.rows[node.table]
+        per = (r + (-r % self.n)) // self.n if self.distributed else r
+        return PH.PScan(node.table, rows=per, est=per)
+
+    def _filter(self, node: L.Filter) -> PH.PFilter:
+        c = self.node(node.child)
+        return PH.PFilter(c, node.pred, rows=c.rows, est=c.est)
+
+    def _project(self, node: L.Project) -> PH.PProject:
+        c = self.node(node.child)
+        return PH.PProject(c, node.cols, rows=c.rows, est=c.est)
+
+    def _attach(self, node: L.Attach) -> PH.PAttach:
+        c = self.node(node.child)
+        src = self.node(node.source)
+        return PH.PAttach(c, src, node.key, node.cols, rows=c.rows,
+                          est=c.est)
+
+    def _topk(self, node: L.TopK) -> PH.PTopK:
+        c = self.node(node.child)
+        return PH.PTopK(c, node.col, node.k, node.index_name,
+                        rows=node.k, est=node.k)
+
+    # -- joins --------------------------------------------------------------
+    def _join(self, node: L.Join) -> PH.PJoin:
+        probe = self.node(node.probe)
+        build = self.node(node.build)
+        if not self.distributed:
+            strategy = choose_join(probe.rows, build.rows, self.ctx)
+            return PH.PJoin(probe, build, node.probe_key, node.build_key,
+                            node.take, strategy, None,
+                            rows=probe.rows, est=probe.est)
+        choice = choose_dist_join(probe.rows * self.n, build.rows * self.n,
+                                  self.n, self.ctx, self.profile)
+        if choice == "broadcast":
+            b = PH.Exchange(build, "broadcast", rows=build.rows * self.n,
+                            est=build.est * self.n,
+                            moved_rows=build.rows * (self.n - 1))
+            return PH.PJoin(probe, b, node.probe_key, node.build_key,
+                            node.take, "sorted", "broadcast",
+                            rows=probe.rows, est=probe.est)
+        p_in = self._routed(probe, node.probe_key)
+        b_in = self._routed(build, node.build_key)
+        return PH.PJoin(p_in, b_in, node.probe_key, node.build_key,
+                        node.take, "sorted", "partitioned",
+                        rows=p_in.rows, est=probe.est)
+
+    def _routed(self, side: PH.PNode, key: str) -> PH.PNode:
+        """One partitioned-join side: route-once elision, else
+        compact-then-hash-Exchange to the key's owner shards."""
+        method = self.ctx.dist_route
+        if (self.ctx.route_once
+                and PH.placed_key(side) == (key, method)):
+            return side              # rule 2: an upstream routing suffices
+        side = PH.maybe_compact(side, self.margin or 0.0,
+                                self.margin is not None)       # rule 3
+        cap = routing_capacity(side.rows, self.n, self.ctx.capacity_factor)
+        return PH.Exchange(side, "hash", key=key, capacity=cap,
+                           method=method, rows=self.n * cap, est=side.est,
+                           moved_rows=side.est * (self.n - 1) // self.n)
+
+    # -- aggregates ---------------------------------------------------------
+    def _aggregate(self, node: L.Aggregate) -> PH.PAggregate:
+        child = self.node(node.child)
+        if node.key is None:
+            merge = "scalar" if self.distributed else None
+            return PH.PAggregate(child, None, 1, node.aggs, "xla", merge,
+                                 None, rows=1, est=1)
+        G = self.groups(node.n_groups)
+        C = stacked_width(node.aggs)
+        has_med = any(is_holistic(op) for _, (op, _c) in node.aggs)
+        if not self.distributed:
+            layout = choose_aggregate(child.rows, G, C, self.ctx.executor,
+                                      self.profile)
+            return PH.PAggregate(child, node.key, G, node.aggs, layout,
+                                 None, None, rows=G, est=G)
+        policy = self.ctx.policy or PlacementPolicy.FIRST_TOUCH
+        med = (("route" if policy == PlacementPolicy.INTERLEAVE
+                else "replicate") if has_med else None)
+        dist_aggs = tuple((nm, oc) for nm, oc in node.aggs
+                          if not is_holistic(oc[0]))
+        if not dist_aggs:
+            # holistic-only: counts come from the selection path, no
+            # stacked-sums merge at all
+            return PH.PAggregate(child, node.key, G, node.aggs, "xla",
+                                 "holistic", med, rows=G, est=G)
+        if policy in (PlacementPolicy.FIRST_TOUCH,
+                      PlacementPolicy.LOCAL_ALLOC):
+            layout = self._occupancy_safe(child, choose_aggregate(
+                child.rows, G, C, self.ctx.executor, self.profile))
+            partial = PH.PPartialAggregate(child, node.key, G, dist_aggs,
+                                           layout, rows=G, est=G)
+            merge = ("psum" if policy == PlacementPolicy.FIRST_TOUCH
+                     else "reduce_scatter")
+            return PH.PAggregate(partial, node.key, G, node.aggs, layout,
+                                 merge, med, rows=G, est=G)
+        if policy == PlacementPolicy.PREFERRED:
+            ex = PH.Exchange(child, "gather", rows=child.rows * self.n,
+                             est=child.est * self.n,
+                             moved_rows=child.rows * (self.n - 1))
+            layout = self._occupancy_safe(child, choose_aggregate(
+                child.rows * self.n, G, C, self.ctx.executor,
+                self.profile))
+            return PH.PAggregate(ex, node.key, G, node.aggs, layout,
+                                 "gather", med, rows=G, est=G)
+        return self._interleave_aggregate(node, child, G, C, dist_aggs, med)
+
+    def _interleave_aggregate(self, node, child, G, C, dist_aggs, med):
+        """INTERLEAVE grouped aggregation: route-once elision, push-down,
+        or the record-routing Exchange — in that preference order."""
+        ctx = self.ctx
+        if ctx.route_once and PH.routes_once(child, node.key):
+            # rule 2: rows already co-located by the group key — each
+            # group's table is complete on one shard, merge is a psum of
+            # disjoint tables. Records route ONE time, join + aggregate.
+            layout = self._occupancy_safe(child, choose_aggregate(
+                child.rows, G, C, ctx.executor, self.profile))
+            return PH.PAggregate(child, node.key, G, node.aggs, layout,
+                                 "placed", med, rows=G, est=G)
+        pushdown = (ctx.agg_pushdown is True
+                    or (ctx.agg_pushdown is None
+                        and PH.pushdown_profitable(G, child.rows)))
+        if pushdown:
+            # rule 1: partial-aggregate below the exchange, ship ~G
+            # partial rows instead of the records
+            layout = self._occupancy_safe(child, choose_aggregate(
+                child.rows, G, C, ctx.executor, self.profile))
+            partial = PH.PPartialAggregate(child, node.key, G, dist_aggs,
+                                           layout, rows=G, est=G)
+            cap = routing_capacity(G, self.n, ctx.capacity_factor)
+            ex = PH.Exchange(partial, "hash", key=None, capacity=cap,
+                             rows=self.n * cap, est=G,
+                             moved_rows=G * (self.n - 1) // self.n)
+            return PH.PAggregate(ex, node.key, G, node.aggs, layout,
+                                 "pushdown", med, rows=G, est=G)
+        # record routing: the classic INTERLEAVE all-to-all of the data
+        rchild = PH.maybe_compact(child, self.margin or 0.0,
+                                  self.margin is not None)
+        cap = routing_capacity(rchild.rows, self.n, ctx.capacity_factor)
+        ex = PH.Exchange(rchild, "hash", key=node.key, capacity=cap,
+                         method="modulo", rows=self.n * cap, est=rchild.est,
+                         moved_rows=rchild.est * (self.n - 1) // self.n)
+        n_slots = (G + (-G % self.n)) // self.n
+        layout = choose_aggregate(self.n * cap, n_slots + 1, C,
+                                  ctx.executor, self.profile)
+        if layout == "partitioned":
+            # the routed buffer masses its padding on one drop slot; the
+            # partitioned layout's capacity accounting counts those rows,
+            # so fall back to the occupancy-independent segment ops
+            layout = "xla"
+        return PH.PAggregate(ex, node.key, G, node.aggs, layout, "owner",
+                             med, rows=G, est=G)
+
+    def _occupancy_safe(self, child: PH.PNode, layout: str) -> str:
+        """Range-partitioned layouts size per-partition capacity from row
+        COUNTS — on a routed buffer the padding would eat it (phantom
+        overflow, dropped records), so fall back to segment ops there."""
+        if layout == "partitioned" and PH.has_routed_buffer(child):
+            return "xla"
+        return layout
+
+
+# ---------------------------------------------------------------------------
+# physical execution: thin walkers over the physical IR
 # ---------------------------------------------------------------------------
 class _LocalExecutor:
-    """Single-device lowering of a logical plan (trace-time recursion)."""
+    """Single-device walker over a physical plan (trace-time recursion).
 
-    def __init__(self, tables, ctx: ExecutionContext, indexes, true_rows,
+    Memoization is by NODE STRUCTURE (physical nodes are frozen
+    dataclasses), so structurally identical subtrees — including
+    deduplicated Exchanges — execute exactly once."""
+
+    def __init__(self, tables, ctx: ExecutionContext, indexes,
                  profile: Optional[CostProfile] = None):
         self.tables = tables
         self.ctx = ctx
         self.indexes = indexes           # {"table.column": (order, sk)}
-        self.true_rows = true_rows       # unpadded row counts per table
-        self.profile = profile           # cost-constant snapshot (cache key)
+        self.profile = profile
+        # fitted partitioned-layout capacity (profile) falls back to ctx
+        self.agg_cf = ((profile.partition_capacity_factor
+                        if profile is not None else None)
+                       or ctx.capacity_factor)
         self.overflow = jnp.zeros((), jnp.int32)
-        self._memo: Dict[L.Node, object] = {}
+        self._memo: Dict[PH.PNode, object] = {}
 
-    # -- helpers ------------------------------------------------------------
-    def resolve_groups(self, n: L.Cardinality) -> int:
-        if isinstance(n, L.TableRows):
-            return self.true_rows[n.table]
-        return int(n)
-
-    def run(self, node: L.Node):
+    def run(self, node: PH.PNode):
         hit = self._memo.get(node)
         if hit is None:
             hit = self._eval(node)
             self._memo[node] = hit
         return hit
 
-    # -- node lowerings -----------------------------------------------------
-    def _eval(self, node: L.Node):
+    def _eval(self, node: PH.PNode):
         method = getattr(self, "_" + type(node).__name__.lower())
         return method(node)
 
-    def _scan(self, node: L.Scan) -> Table:
+    # -- node lowerings -----------------------------------------------------
+    def _pscan(self, node: PH.PScan) -> Table:
         cols = dict(self.tables[node.table])
         cache = {}
         for (key, idx) in self.indexes.items():
@@ -541,65 +830,69 @@ class _LocalExecutor:
                 cache[c] = idx
         return Table(cols, None, cache)
 
-    def _filter(self, node: L.Filter) -> Table:
+    def _pfilter(self, node: PH.PFilter) -> Table:
         t = self.run(node.child)
         return t.filter(eval_expr(node.pred, t))
 
-    def _project(self, node: L.Project) -> Table:
+    def _pproject(self, node: PH.PProject) -> Table:
         t = self.run(node.child)
         return t.with_columns(**{n: eval_expr(e, t) for n, e in node.cols})
 
-    def _join(self, node: L.Join) -> Table:
+    def _pjoin(self, node: PH.PJoin) -> Table:
         probe = self.run(node.probe)
-        build = self._build_side(node)
-        strategy = choose_join(probe.n_rows, build.n_rows, self.ctx)
-        if strategy == "kernel":
+        build = self.run(node.build)
+        if node.strategy == "kernel":
             joined, ovf = pkfk_join_kernel(
                 probe, build, node.probe_key, node.build_key,
                 dict(node.take), mode=self.ctx.mode,
+                n_partitions=self.ctx.n_partitions,
                 capacity_factor=self.ctx.capacity_factor)
             self.overflow = self.overflow + ovf
             return joined
         return pkfk_join(probe, build, node.probe_key, node.build_key,
                          dict(node.take))
 
-    def _build_side(self, node: L.Join) -> Table:
-        return self.run(node.build)
-
-    def _attach(self, node: L.Attach) -> Table:
+    def _pattach(self, node: PH.PAttach) -> Table:
         t = self.run(node.child)
         src = self.run(node.source)
         first = src[node.cols[0][1]]
         pos = jnp.clip(t.col(node.key), 0, first.shape[0] - 1)
         return t.with_columns(**{new: src[s][pos] for new, s in node.cols})
 
-    def _topk(self, node: L.TopK) -> Dict[str, jax.Array]:
+    def _ptopk(self, node: PH.PTopK) -> Dict[str, jax.Array]:
         g = self.run(node.child)
         vals, idx = jax.lax.top_k(g[node.col], node.k)
         return {node.col: vals, node.index_name: idx}
 
-    def _aggregate(self, node: L.Aggregate) -> Dict[str, jax.Array]:
+    def _exchange(self, node: PH.Exchange):
+        raise TypeError("Exchange in a single-device physical plan")
+
+    def _compact(self, node: PH.Compact):
+        raise TypeError("Compact in a single-device physical plan")
+
+    def _ppartialaggregate(self, node: PH.PPartialAggregate):
+        raise TypeError("PPartialAggregate in a single-device plan")
+
+    def _paggregate(self, node: PH.PAggregate) -> Dict[str, jax.Array]:
         t = self.run(node.child)
         if node.key is None:
             return self._scalar_aggregate(node, t)
-        G = self.resolve_groups(node.n_groups)
-        layout = choose_aggregate(t.n_rows, G, stacked_width(node.aggs),
-                                  self.ctx.executor, self.profile)
-        out = self._grouped(node, t, G, layout)
+        out = self._grouped(node, t)
         self.overflow = self.overflow + out["_overflow"]
         return out
 
-    def _grouped(self, node: L.Aggregate, t: Table, G: int,
-                 layout: str) -> Dict[str, jax.Array]:
+    def _grouped(self, node: PH.PAggregate, t: Table) -> Dict[str, jax.Array]:
         aggs = dict(node.aggs)
-        if layout == "xla":
-            return group_aggregate(t, node.key, G, aggs, executor="xla")
-        return group_aggregate(t, node.key, G, aggs, executor="kernel",
-                               layout=layout, mode=self.ctx.mode,
+        if node.layout == "xla":
+            return group_aggregate(t, node.key, node.n_groups, aggs,
+                                   executor="xla")
+        return group_aggregate(t, node.key, node.n_groups, aggs,
+                               executor="kernel", layout=node.layout,
+                               mode=self.ctx.mode,
                                n_partitions=self.ctx.n_partitions,
-                               capacity_factor=self.ctx.capacity_factor)
+                               capacity_factor=self.agg_cf)
 
-    def _scalar_aggregate(self, node: L.Aggregate,
+    def _scalar_aggregate(self, node: PH.PAggregate,
                           t: Table) -> Dict[str, jax.Array]:
         w = t.weights()
         cnt = w.sum()[None]
@@ -620,6 +913,9 @@ class _LocalExecutor:
             elif op == "median":
                 k = jnp.where(w > 0, 0, -1)
                 out[name] = segment_median(k, v, 1)[0]
+            elif parse_quantile(op) is not None:
+                k = jnp.where(w > 0, 0, -1)
+                out[name] = segment_quantile(k, v, 1, parse_quantile(op))[0]
             else:
                 raise ValueError(f"unknown agg op {op!r}")
         out["_count"] = cnt
@@ -627,166 +923,207 @@ class _LocalExecutor:
         return out
 
     # -- plan root ----------------------------------------------------------
-    def execute(self, plan: L.LogicalPlan) -> Dict[str, jax.Array]:
-        res = self.run(plan.root)
+    def execute(self, phys: PH.PhysicalPlan) -> Dict[str, jax.Array]:
+        res = self.run(phys.root)
         if isinstance(res, Table):
             raise TypeError("plan root must be an Aggregate or TopK node")
         out = dict(res)
         out["_overflow"] = self.overflow
-        if plan.outputs is not None:
-            out = {k: out[k] for k in plan.outputs}
+        if phys.outputs is not None:
+            out = {k: out[k] for k in phys.outputs}
         return out
 
 
 class _DistributedExecutor(_LocalExecutor):
-    """Placement-policy backend: runs inside an open shard_map over
+    """Placement-policy walker: runs inside an open shard_map over
     ``ctx.axis``. Tables arrive row-sharded (zero-padded, with a ``_valid``
-    weight column folded into each Scan's mask); build sides are
-    republished with an all-gather before probing; distributive Aggregates
-    merge through the engine.py per-policy collectives. The merged group
-    tables (and therefore every post-aggregation node) are replicated."""
+    weight column folded into each Scan's mask); Exchange nodes execute
+    the engine collectives (broadcast all-gathers, hash routes through
+    route_table_rows), Compact nodes re-compact routed buffers, and
+    PAggregate's ``merge`` field names the per-policy combine. The merged
+    group tables (and therefore every post-aggregation node) are
+    replicated.
 
-    def __init__(self, tables, ctx: ExecutionContext, true_rows, n_shards,
+    Two Exchange kinds execute FUSED inside their consuming aggregate
+    rather than standalone: "gather" (the stacked (keys, vals) matrix is
+    gathered, not the whole table — fewer columns on the wire, and the
+    holistic path must see the un-gathered records exactly once) and the
+    partial-sums hash exchange of a pushed-down aggregate (the routing and
+    owner-merge are one engine primitive, pushdown_group_sums)."""
+
+    def __init__(self, tables, ctx: ExecutionContext, n_shards,
                  profile: Optional[CostProfile] = None):
-        super().__init__(tables, ctx, {}, true_rows, profile)
+        super().__init__(tables, ctx, {}, profile)
         self.n = n_shards
 
-    def _scan(self, node: L.Scan) -> Table:
+    def _pscan(self, node: PH.PScan) -> Table:
         cols = {c: a for c, a in self.tables[node.table].items()
                 if c != "_valid"}
         return Table(cols, self.tables[node.table]["_valid"])
 
-    def _join(self, node: L.Join) -> Table:
-        """Distributed PK-FK join: broadcast vs key-partitioned, chosen by
-        the wire-cost model (dist_join_costs) from GLOBAL row counts —
-        shapes inside the shard_map are per-shard, so multiply back by n.
-        The kernel probe stays a single-device lowering; both strategies
-        gather through the sorted index once rows are placed."""
-        probe = self.run(node.probe)
-        build = self.run(node.build)
-        strategy = choose_dist_join(probe.n_rows * self.n,
-                                    build.n_rows * self.n, self.n,
-                                    self.ctx, self.profile)
-        if strategy == "partitioned":
-            return self._partitioned_join(node, probe, build)
-        return pkfk_join(probe, self._gathered(build), node.probe_key,
-                         node.build_key, dict(node.take))
-
-    def _gathered(self, build: Table) -> Table:
-        """Broadcast lowering: republish the build side on every shard
-        (all-gather — the first-touch faulting pattern)."""
-        cols = gather_rows(build.columns, self.ctx.axis)
-        mask = (None if build.mask is None
-                else gather_rows(build.mask, self.ctx.axis))
-        return Table(cols, mask)
-
-    def _partitioned_join(self, node: L.Join, probe: Table,
-                          build: Table) -> Table:
-        """Partitioned lowering: route BOTH sides to the join key's hash
-        owner (key % n, the dist_hash_join recipe) through one all-to-all
-        each, then join shard-locally. O((N_probe+N_build)/n) received rows
-        per shard instead of the whole build side; routed padding rows
-        carry weight 0 and key -1, so they can never match a real key.
-        Routing overflow (a destination's capacity exceeded) is surfaced
-        through the plan's ``_overflow`` accumulator, never dropped
-        silently."""
-        axis, n, cf = self.ctx.axis, self.n, self.ctx.capacity_factor
-        pk = probe.col(node.probe_key).astype(jnp.int32)
-        bk = build.col(node.build_key).astype(jnp.int32)
-        p_w0, b_w0 = probe.weights(), build.weights()
-        p_cols, p_w, p_ovf = route_table_rows(
-            probe.columns, p_w0, route_owner(pk, p_w0 > 0, n), n,
-            routing_capacity(pk.shape[0], n, cf), axis)
-        b_cols, b_w, b_ovf = route_table_rows(
-            build.columns, b_w0, route_owner(bk, b_w0 > 0, n), n,
-            routing_capacity(bk.shape[0], n, cf), axis)
+    def _exchange(self, node: PH.Exchange) -> Table:
+        if node.kind == "gather":
+            raise TypeError("gather Exchange executes fused in PAggregate")
+        child = self.run(node.child)
+        if node.kind == "broadcast":
+            cols = gather_rows(child.columns, self.ctx.axis)
+            mask = (None if child.mask is None
+                    else gather_rows(child.mask, self.ctx.axis))
+            return Table(cols, mask)
+        # hash: all-to-all route the table's rows to their key's owner.
+        # Routed padding rows carry weight 0 and key -1, so they can never
+        # match a real join key; routing overflow is surfaced through the
+        # plan's ``_overflow`` accumulator, never dropped silently.
+        keys = child.col(node.key).astype(jnp.int32)
+        w0 = child.weights()
+        owner = route_owner(keys, w0 > 0, self.n, node.method)
+        cols, w, ovf = route_table_rows(child.columns, w0, owner, self.n,
+                                        node.capacity, self.ctx.axis)
         self.overflow = self.overflow + jax.lax.psum(
-            p_ovf + b_ovf, axis).astype(jnp.int32)
-        return pkfk_join(Table(p_cols, p_w), Table(b_cols, b_w),
-                         node.probe_key, node.build_key, dict(node.take))
+            ovf, self.ctx.axis).astype(jnp.int32)
+        return Table(cols, w)
 
-    def _aggregate(self, node: L.Aggregate) -> Dict[str, jax.Array]:
+    def _compact(self, node: PH.Compact) -> Table:
         t = self.run(node.child)
-        policy = self.ctx.policy or PlacementPolicy.FIRST_TOUCH
-        axis, n = self.ctx.axis, self.n
+        cols, w, ovf = compact_routed_rows(t.columns, t.weights(),
+                                           node.capacity)
+        self.overflow = self.overflow + jax.lax.psum(
+            ovf, self.ctx.axis).astype(jnp.int32)
+        return Table(cols, w)
+
+    def _ppartialaggregate(self, node: PH.PPartialAggregate):
+        """Local (n_groups, C) stacked partial sums — the below-the-
+        exchange half of push-down and of the FT/LA partial-table merges."""
+        t = self.run(node.child)
+        keys, vals, _src = stacked_columns(t, node.key, node.n_groups,
+                                           dict(node.aggs))
+        return stacked_group_sums(
+            keys, vals, node.n_groups, layout=node.layout,
+            mode=self.ctx.mode, n_partitions=self.ctx.n_partitions,
+            capacity_factor=self.agg_cf)
+
+    def _table_source(self, node: PH.PNode) -> PH.PNode:
+        """The table-producing node under an aggregate's movement/partial
+        wrappers — order statistics and holistic medians must see the
+        records exactly once, BEFORE any exchange."""
+        while isinstance(node, (PH.Exchange, PH.PPartialAggregate)):
+            node = node.child
+        return node
+
+    def _paggregate(self, node: PH.PAggregate) -> Dict[str, jax.Array]:
         if node.key is None:
-            return self._dist_scalar_aggregate(node, t)
-        G = self.resolve_groups(node.n_groups)
+            return self._dist_scalar_aggregate(node,
+                                               self.run(node.child))
+        t = self.run(self._table_source(node.child))
+        G = node.n_groups
         dist_aggs = tuple((nm, oc) for nm, oc in node.aggs
-                          if oc[0] != "median")
-        med_out, med_counts, med_ovf = self._dist_medians(node, t, G, policy)
+                          if not is_holistic(oc[0]))
+        med_out, med_counts, med_ovf = self._dist_medians(node, t, G)
         if not dist_aggs:
-            # median-only aggregate: counts come from the selection path —
-            # no second routing/merge pass just for _count
+            # holistic-only aggregate: counts come from the selection path
+            # — no second routing/merge pass just for _count
             out = dict(med_out)
             out["_count"] = med_counts
             out["_overflow"] = med_ovf
             self.overflow = self.overflow + med_ovf
             return out
-        keys, vals, src = stacked_columns(t, node.key, G, dict(dist_aggs))
-
-        def local_sums(k, v, n_groups, allow_partitioned=True):
-            layout = choose_aggregate(k.shape[0], n_groups, v.shape[1],
-                                      self.ctx.executor, self.profile)
-            if layout == "partitioned" and not allow_partitioned:
-                # the routed interleave buffer masses its padding on one
-                # drop slot; the partitioned layout's capacity accounting
-                # counts those rows (see engine.interleave_group_sums), so
-                # fall back to the occupancy-independent segment ops
-                layout = "xla"
-            return stacked_group_sums(
-                k, v, n_groups, layout=layout, mode=self.ctx.mode,
-                n_partitions=self.ctx.n_partitions,
-                capacity_factor=self.ctx.capacity_factor)
-
-        if policy in (PlacementPolicy.FIRST_TOUCH,
-                      PlacementPolicy.LOCAL_ALLOC):
-            partial, ovf = local_sums(keys, vals, G)
-            sums = merge_partial_table(partial, policy, axis, n)
-            overflow = jax.lax.psum(ovf, axis)
-        elif policy == PlacementPolicy.INTERLEAVE:
-            sums, overflow = interleave_group_sums(
-                keys, vals, G, axis, n,
-                functools.partial(local_sums, allow_partitioned=False),
-                capacity_factor=self.ctx.capacity_factor)
-        else:                                  # PREFERRED: converge rows
-            ak, av = gather_rows((keys, vals), axis)
-            sums, overflow = local_sums(ak, av, G)
-        out = self._finalize_groups(dict(dist_aggs), t, keys, src, sums, G)
+        sums, overflow = self._merged_sums(node, t, G, dist_aggs)
+        out = finalize_stacked(dict(dist_aggs), _stacked_src(dist_aggs),
+                               sums, self._order_stat_fn(t, node, G))
         out.update(med_out)
         out["_overflow"] = overflow.astype(jnp.int32) + med_ovf
         self.overflow = self.overflow + out["_overflow"]
         return out
 
-    def _dist_medians(self, node: L.Aggregate, t: Table, G: int, policy
+    def _merged_sums(self, node: PH.PAggregate, t: Table, G: int,
+                     dist_aggs) -> Tuple[jax.Array, jax.Array]:
+        """The distributive stacked-sums table under ``node.merge``."""
+        axis, n = self.ctx.axis, self.n
+        merge = node.merge
+        if merge in ("psum", "reduce_scatter"):
+            partial, ovf = self.run(node.child)
+            policy = (PlacementPolicy.FIRST_TOUCH if merge == "psum"
+                      else PlacementPolicy.LOCAL_ALLOC)
+            return (merge_partial_table(partial, policy, axis, n),
+                    jax.lax.psum(ovf, axis))
+        if merge == "pushdown":
+            partial, ovf = self.run(node.child.child)
+            sums, route_ovf = pushdown_group_sums(
+                partial, G, axis, n,
+                capacity_factor=self.ctx.capacity_factor,
+                capacity=node.child.capacity)
+            return sums, jax.lax.psum(ovf, axis) + route_ovf
+        if merge == "placed":
+            # route-once: every group's rows are co-located, so the
+            # per-shard tables are DISJOINT and the psum is exact
+            keys, vals, _ = stacked_columns(t, node.key, G, dict(dist_aggs))
+            sums, ovf = self._stacked(keys, vals, G, node.layout)
+            return jax.lax.psum(sums, axis), jax.lax.psum(ovf, axis)
+        if merge == "owner":
+            keys, vals, _ = stacked_columns(t, node.key, G, dict(dist_aggs))
+            agg_fn = functools.partial(self._stacked, layout=node.layout)
+            # the Exchange node's capacity drives the routing: execution
+            # can never drift from the rendered physical plan
+            return interleave_group_sums(
+                keys, vals, G, axis, n, agg_fn,
+                capacity_factor=self.ctx.capacity_factor,
+                capacity=node.child.capacity)
+        if merge == "gather":
+            keys, vals, _ = stacked_columns(t, node.key, G, dict(dist_aggs))
+            ak, av = gather_rows((keys, vals), axis)
+            return self._stacked(ak, av, G, node.layout)
+        raise ValueError(f"unknown aggregate merge {merge!r}")
+
+    def _stacked(self, keys, vals, n_groups, layout):
+        return stacked_group_sums(
+            keys, vals, n_groups, layout=layout, mode=self.ctx.mode,
+            n_partitions=self.ctx.n_partitions, capacity_factor=self.agg_cf)
+
+    def _order_stat_fn(self, t: Table, node: PH.PAggregate, G: int):
+        keys = jnp.clip(t.col(node.key), 0, G - 1).astype(jnp.int32)
+
+        def order_stat(op, col):
+            # local segment op, then a cross-shard tree reduction
+            local = segment_order_stat(t, keys, G, op, col)
+            reduce = jax.lax.pmax if op == "max" else jax.lax.pmin
+            return reduce(local, self.ctx.axis)
+
+        return order_stat
+
+    def _dist_medians(self, node: PH.PAggregate, t: Table, G: int
                       ) -> Tuple[Dict[str, jax.Array], Optional[jax.Array],
                                  jax.Array]:
-        """Per-policy lowering of an Aggregate's holistic (median) aggs.
+        """Per-policy lowering of an Aggregate's holistic (median/
+        quantile) aggs.
 
-        Medians cannot merge from partials, so they bypass the stacked-sums
-        collectives entirely: replication-based policies gather the records
-        (the paper's holistic worst case), INTERLEAVE routes each group's
-        records to its owner and selects there (distributed selection).
-        Returns ({name: (G,) medians}, counts-or-None, overflow), all
-        replicated in natural group order."""
+        Order statistics cannot merge from partials, so they bypass the
+        stacked-sums collectives entirely: ``med_strategy`` "replicate"
+        gathers the records (the paper's holistic worst case), "route"
+        sends each group's records to its owner and selects there
+        (distributed selection). Returns ({name: (G,) stats},
+        counts-or-None, overflow), all replicated in natural group
+        order."""
         axis, n = self.ctx.axis, self.n
         med_aggs = tuple((nm, oc) for nm, oc in node.aggs
-                         if oc[0] == "median")
+                         if is_holistic(oc[0]))
         if not med_aggs:
             return {}, None, jnp.zeros((), jnp.int32)
         keys = jnp.clip(t.col(node.key), 0, G - 1).astype(jnp.int32)
         w = t.weights()
         cols = {name: t.col(colname).astype(jnp.float32)
                 for name, (_op, colname) in med_aggs}
-        if policy == PlacementPolicy.INTERLEAVE:
+        ranks = {name: parse_quantile(op)
+                 for name, (op, _c) in med_aggs}          # None = median
+        if node.med_strategy == "route":
             meds, counts, ovf = interleave_group_median(
                 keys, cols, w, G, axis, n,
-                capacity_factor=self.ctx.capacity_factor)
+                capacity_factor=self.ctx.capacity_factor, ranks=ranks)
             return meds, counts, ovf.astype(jnp.int32)
-        meds, counts = replicated_group_median(keys, cols, w, G, axis)
+        meds, counts = replicated_group_median(keys, cols, w, G, axis,
+                                               ranks=ranks)
         return meds, counts, jnp.zeros((), jnp.int32)
 
-    def _dist_scalar_aggregate(self, node: L.Aggregate,
+    def _dist_scalar_aggregate(self, node: PH.PAggregate,
                                t: Table) -> Dict[str, jax.Array]:
         """Global aggregate: merge the SUMS across shards (an average of
         per-shard averages would weight shards, not rows)."""
@@ -795,6 +1132,7 @@ class _DistributedExecutor(_LocalExecutor):
         cnt = jax.lax.psum(w.sum(), axis)[None]
         out: Dict[str, jax.Array] = {}
         med_cols: Dict[str, jax.Array] = {}
+        med_ranks: Dict[str, Optional[float]] = {}
         for name, (op, col) in node.aggs:
             if op == "count":
                 out[name] = cnt
@@ -809,28 +1147,20 @@ class _DistributedExecutor(_LocalExecutor):
             elif op == "min":
                 out[name] = jax.lax.pmin(
                     jnp.where(w > 0, v, jnp.inf).min(), axis)[None]
-            elif op == "median":
+            elif is_holistic(op):
                 med_cols[name] = v       # batched below: gather rows once
+                med_ranks[name] = parse_quantile(op)
             else:
                 raise ValueError(f"unknown agg op {op!r}")
         if med_cols:
             # holistic: converge the records ONCE, select per column
             meds, _ = replicated_group_median(
-                jnp.zeros_like(w, jnp.int32), med_cols, w, 1, axis)
+                jnp.zeros_like(w, jnp.int32), med_cols, w, 1, axis,
+                ranks=med_ranks)
             out.update(meds)
         out["_count"] = cnt
         out["_overflow"] = jnp.zeros((), jnp.int32)
         return out
-
-    def _finalize_groups(self, aggs: Dict[str, Tuple[str, str]], t: Table,
-                         keys, src, sums, G: int) -> Dict[str, jax.Array]:
-        def order_stat(op, col):
-            # local segment op, then a cross-shard tree reduction
-            local = segment_order_stat(t, keys, G, op, col)
-            reduce = jax.lax.pmax if op == "max" else jax.lax.pmin
-            return reduce(local, self.ctx.axis)
-
-        return finalize_stacked(aggs, src, sums, order_stat)
 
 
 # ---------------------------------------------------------------------------
@@ -870,13 +1200,13 @@ def _true_rows(tables) -> Dict[str, int]:
             for t, cols in tables.items()}
 
 
-def _run_local(plan: L.LogicalPlan, ctx: ExecutionContext, profile, tables,
-               indexes):
-    ex = _LocalExecutor(tables, ctx, indexes, _true_rows(tables), profile)
-    return ex.execute(plan)
+def _run_local(phys: PH.PhysicalPlan, ctx: ExecutionContext, profile,
+               tables, indexes):
+    ex = _LocalExecutor(tables, ctx, indexes, profile)
+    return ex.execute(phys)
 
 
-def _run_distributed(plan: L.LogicalPlan, ctx: ExecutionContext, profile,
+def _run_distributed(phys: PH.PhysicalPlan, ctx: ExecutionContext, profile,
                      tables, indexes):
     del indexes          # full-table indexes don't survive the row padding
     mesh, axis = ctx.mesh, ctx.axis
@@ -893,19 +1223,19 @@ def _run_distributed(plan: L.LogicalPlan, ctx: ExecutionContext, profile,
         padded[t] = pcols
 
     def local_fn(local_tables):
-        ex = _DistributedExecutor(local_tables, ctx, rows, n, profile)
-        return ex.execute(plan)
+        ex = _DistributedExecutor(local_tables, ctx, n, profile)
+        return ex.execute(phys)
 
     specs = jax.tree_util.tree_map(lambda _: P(axis), padded)
     return shard_map(local_fn, mesh=mesh, in_specs=(specs,), out_specs=P(),
                      check_rep=False)(padded)
 
 
-def _run_plan(plan: L.LogicalPlan, ctx: ExecutionContext, profile, tables,
-              indexes):
+def _run_plan(phys: PH.PhysicalPlan, ctx: ExecutionContext, profile,
+              tables, indexes):
     if ctx.mesh is None:
-        return _run_local(plan, ctx, profile, tables, indexes)
-    return _run_distributed(plan, ctx, profile, tables, indexes)
+        return _run_local(phys, ctx, profile, tables, indexes)
+    return _run_distributed(phys, ctx, profile, tables, indexes)
 
 
 class CompiledPlan:
@@ -916,16 +1246,19 @@ class CompiledPlan:
     only the join-index pool is consulted per call (a lock-protected LRU
     hit), so concurrent dispatch never re-plans, re-jits, or races an
     eviction. This is the entry point the serving scheduler pins into its
-    worker pools."""
+    worker pools. ``physical`` is the explicit physical plan the
+    executable walks — the plan-cache value, inspectable per handle."""
 
-    __slots__ = ("plan", "ctx", "fn", "index_specs")
+    __slots__ = ("plan", "ctx", "fn", "index_specs", "physical")
 
     def __init__(self, plan: L.LogicalPlan, ctx: ExecutionContext, fn,
-                 index_specs: Tuple[Tuple[str, str], ...]):
+                 index_specs: Tuple[Tuple[str, str], ...],
+                 physical: PH.PhysicalPlan):
         self.plan = plan
         self.ctx = ctx
         self.fn = fn
         self.index_specs = index_specs
+        self.physical = physical
 
     def __call__(self, tables) -> Dict[str, jax.Array]:
         indexes = {}
@@ -937,23 +1270,27 @@ class CompiledPlan:
 
 def compile_plan(plan: L.LogicalPlan, tables,
                  ctx: Optional[ExecutionContext] = None) -> CompiledPlan:
-    """Resolve (or build) the compiled executable for a logical plan.
+    """Lower to a physical plan and resolve (or build) its executable.
 
     ``tables`` supplies only the shape signature — the returned handle runs
     on ANY tables pytree of the same shapes. The active CostProfile is
-    snapshotted ONCE: it keys the cache AND is baked into the compiled
-    closure (jit traces lazily on first call — reading the global there
-    would let a concurrent recalibration plan under the new constants but
-    cache under the old key)."""
+    snapshotted ONCE: it keys the cache AND parameterizes the lowering, so
+    a concurrent recalibration can never plan under the new constants but
+    cache under the old key. The cache VALUE is the (physical plan, jitted
+    executable) pair — the physical tree is the product, the jit its
+    interpretation."""
     ctx = ctx or ExecutionContext()
     profile = current_cost_profile()
     key = (plan, ctx.cache_key(), _signature(tables), profile)
-    fn = _PLAN_CACHE.get(key)
-    if fn is None:
+    entry = _PLAN_CACHE.get(key)
+    if entry is None:
         L.validate(plan)     # fail fast (and once) instead of mid-trace
-        fn = jax.jit(functools.partial(_run_plan, plan, ctx, profile))
-        _PLAN_CACHE.put(key, fn)
-    return CompiledPlan(plan, ctx, fn, required_indexes(plan.root))
+        phys = lower(plan, ctx, _true_rows(tables), profile)
+        fn = jax.jit(functools.partial(_run_plan, phys, ctx, profile))
+        entry = (phys, fn)
+        _PLAN_CACHE.put(key, entry)
+    phys, fn = entry
+    return CompiledPlan(plan, ctx, fn, required_indexes(plan.root), phys)
 
 
 def execute_plan(plan: L.LogicalPlan, tables,
@@ -968,57 +1305,107 @@ def execute_plan(plan: L.LogicalPlan, tables,
     return compile_plan(plan, tables, ctx)(tables)
 
 
+# ---------------------------------------------------------------------------
+# explain: decisions + physical-tree rendering
+# ---------------------------------------------------------------------------
+def _strip_movement(node: PH.PNode) -> PH.PNode:
+    """The record-producing node under movement/partial wrappers — what
+    explain() reports row counts from (a split aggregate's input is its
+    records, not its (n_groups, C) partial table)."""
+    while isinstance(node, (PH.Exchange, PH.Compact,
+                            PH.PPartialAggregate)):
+        node = node.child
+    return node
+
+
 def explain(plan: L.LogicalPlan, tables,
             ctx: Optional[ExecutionContext] = None) -> List[Decision]:
-    """Dry-run the planner's choices from shape metadata alone (no
-    execution): one Decision per Join / grouped Aggregate, plan order."""
+    """The planner's choices from shape metadata alone (no execution):
+    one Decision per Join / grouped Aggregate — plus, since the physical
+    layer, per Exchange (kind + estimated moved rows) and per Compact —
+    in plan order. Decisions are derived from the SAME lower() pass that
+    produces the executed physical plan, so explain can never drift from
+    execution."""
     ctx = ctx or ExecutionContext()
-    rows = _true_rows(tables)
+    phys = lower(plan, ctx, _true_rows(tables))
+    n = phys.n_shards
     decisions: List[Decision] = []
+    seen = set()
 
-    def node_rows(node: L.Node) -> int:
-        if isinstance(node, L.Scan):
-            return rows[node.table]
-        if isinstance(node, L.Aggregate):
-            if node.key is None:
-                return 1
-            return (rows[node.n_groups.table]
-                    if isinstance(node.n_groups, L.TableRows)
-                    else int(node.n_groups))
-        if isinstance(node, L.TopK):
-            return node.k
-        if isinstance(node, L.Join):
-            return node_rows(node.probe)
-        return node_rows(L.children(node)[0])
-
-    def visit(node: L.Node) -> None:
-        for c in L.children(node):
+    def visit(node: PH.PNode) -> None:
+        if node in seen:         # structural dedup == executor memoization
+            return
+        seen.add(node)
+        for c in PH.children(node):
             visit(c)
-        if isinstance(node, L.Join):
-            n_probe, n_build = node_rows(node.probe), node_rows(node.build)
-            if ctx.mesh is not None:
-                n = ctx.mesh.shape[ctx.axis]
+        if isinstance(node, PH.PJoin):
+            probe = _strip_movement(node.probe)
+            build = _strip_movement(node.build)
+            if node.dist is not None:
                 decisions.append(Decision(
                     "DistJoin", f"{node.probe_key}={node.build_key}, "
-                    f"probe={n_probe}, build={n_build}, shards={n}",
-                    choose_dist_join(n_probe, n_build, n, ctx),
-                    tuple(dist_join_costs(n_probe, n_build, n).items())))
+                    f"probe={probe.rows * n}, build={build.rows * n}, "
+                    f"shards={n}", node.dist,
+                    tuple(dist_join_costs(probe.rows * n, build.rows * n,
+                                          n).items())))
             else:
                 decisions.append(Decision(
                     "Join", f"{node.probe_key}={node.build_key}, "
-                    f"probe={n_probe}, build={n_build}",
-                    choose_join(n_probe, n_build, ctx)))
-        elif isinstance(node, L.Aggregate) and node.key is not None:
-            N = node_rows(node.child)
-            G = (rows[node.n_groups.table]
-                 if isinstance(node.n_groups, L.TableRows)
-                 else int(node.n_groups))
-            C = stacked_width(node.aggs)
+                    f"probe={probe.rows}, build={build.rows}",
+                    node.strategy))
+        elif isinstance(node, PH.Exchange):
+            # key=None marks a partial-sums routing ONLY for hash
+            # exchanges; broadcast/gather move whole tables and carry no
+            # routing key at all
+            if node.key is not None:
+                detail = f"kind={node.kind}, key={node.key}"
+            elif node.kind == "hash":
+                detail = f"kind={node.kind}, key=<group-partials>"
+            else:
+                detail = f"kind={node.kind}"
             decisions.append(Decision(
-                "Aggregate", f"key={node.key}, rows={N}, groups={G}, "
-                f"cols={C}",
-                choose_aggregate(N, G, C, ctx.executor),
-                tuple(aggregate_costs(N, G, C).items())))
+                "Exchange", f"{detail}, rows={node.rows}", node.kind,
+                (("moved_rows", float(node.moved_rows)),)))
+        elif isinstance(node, PH.Compact):
+            decisions.append(Decision(
+                "Compact", f"capacity={node.capacity}, "
+                f"from={node.child.rows}", "compact",
+                (("rows_cut", float(node.child.rows - node.capacity)),)))
+        elif isinstance(node, PH.PAggregate) and node.key is not None:
+            N = _strip_movement(node.child).rows
+            C = stacked_width(node.aggs)
+            G = node.n_groups
+            # cost basis = the inputs the layout was actually CHOSEN from
+            # (lower's per-merge arithmetic), so the printed table can
+            # justify the printed choice: owner-merge aggregates run on
+            # the routed buffer over per-shard slots, gather-merge on the
+            # converged rows, everything else on the record input
+            if node.merge == "owner" and isinstance(node.child, PH.Exchange):
+                cost_n = node.child.rows
+                cost_g = (G + (-G % n)) // n + 1
+            elif node.merge == "gather":
+                cost_n, cost_g = N * n, G
+            else:
+                cost_n, cost_g = N, G
+            detail = f"key={node.key}, rows={N}, groups={G}, cols={C}"
+            if node.merge is not None:
+                detail += f", merge={node.merge}"
+            decisions.append(Decision(
+                "Aggregate", detail, node.layout,
+                tuple(aggregate_costs(cost_n, cost_g, C).items())))
 
-    visit(plan.root)
+    visit(phys.root)
     return decisions
+
+
+def explain_physical(plan: L.LogicalPlan, tables,
+                     ctx: Optional[ExecutionContext] = None,
+                     n_shards: Optional[int] = None) -> str:
+    """Render the lowered physical tree (physical.describe): Exchange
+    kinds with estimated moved rows, compaction points, resolved join/
+    aggregate strategies. Deterministic for fixed table shapes — the
+    golden-snapshot format. ``n_shards`` lowers for a mesh width without
+    materializing devices."""
+    ctx = ctx or ExecutionContext()
+    return PH.describe(lower(plan, ctx, _true_rows(tables),
+                             n_shards=n_shards))

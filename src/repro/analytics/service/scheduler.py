@@ -111,6 +111,13 @@ class QueryTask:
     def split(self) -> bool:
         return self.morsel_fn is not None
 
+    @property
+    def physical(self):
+        """The explicit physical plan a whole-plan task dispatches (the
+        plan-cache value compile_plan resolved); None for morsel-split
+        tasks, whose unit is the per-morsel partial executable."""
+        return None if self.compiled is None else self.compiled.physical
+
     def _run_morsel(self, m: _Morsel) -> None:
         try:
             if self.morsel_fn is None:
@@ -254,7 +261,11 @@ class MorselScheduler:
         Decomposable plans (distributive Aggregate over a Scan chain, no
         mesh) become per-morsel partials when ``morsel_rows`` is set; all
         others become a single whole-plan morsel whose result is
-        bit-identical to serial execution by construction. The whole-plan
+        bit-identical to serial execution by construction. Whole-plan
+        dispatch goes through ``planner.compile_plan`` and therefore the
+        EXPLICIT physical plan (lowered once, cached as the plan-cache
+        value; inspectable via ``task.physical``) — the scheduler never
+        re-derives strategy decisions at dispatch time. The whole-plan
         executable is only compiled on that fallback path — a split task
         must not push a never-invoked entry into the bounded plan cache."""
         ctx = ctx or ExecutionContext()

@@ -2,8 +2,8 @@
 
 Structure-faithful versions of Q1, Q3, Q5, Q6, Q18 (the join/aggregation
 queries the paper highlights — Q5 and Q18 are its allocator case studies),
-plus QM, an order-statistic (median) companion to Q1 exercising the
-holistic-aggregate lowerings,
+plus QM and QQ, order-statistic (median / arbitrary-rank quantile)
+companions to Q1 exercising the holistic-aggregate lowerings,
 over synthetic tables at a scale factor: lineitem 6000*SF rows, orders
 1500*SF, customer 150*SF, supplier 10*SF, nation 25, region 5. Dates are
 day-number ints; strings are dictionary-encoded ints — the standard columnar
@@ -257,8 +257,28 @@ def qm(tables: Tables, *, executor: str = "xla",
     }, executor=executor)
 
 
+def qq(tables: Tables, *, executor: str = "xla",
+       cutoff: int = DATE1 - 90) -> Dict[str, jax.Array]:
+    """Quantile pricing summary: per-returnflag p90 price / p25 quantity
+    tails next to their median and count.
+
+    The arbitrary-rank generalization of QM: "quantile:R" ops ride the
+    same sort-based selection machinery as median (one selection index per
+    rank instead of the middle), so every lowering that serves medians —
+    local, record replication, routed distributed selection — serves
+    arbitrary quantiles unchanged."""
+    li = _t(tables, "lineitem")
+    li = li.filter(li.col("l_shipdate") <= cutoff)
+    return group_aggregate(li, "l_returnflag", 3, {
+        "p90_price": ("quantile:0.9", "l_extendedprice"),
+        "p25_qty": ("quantile:0.25", "l_quantity"),
+        "med_price": ("median", "l_extendedprice"),
+        "count_order": ("count", "l_quantity"),
+    }, executor=executor)
+
+
 QUERIES: Dict[str, Callable[..., Dict[str, jax.Array]]] = {
-    "q1": q1, "q3": q3, "q5": q5, "q6": q6, "q18": q18, "qm": qm}
+    "q1": q1, "q3": q3, "q5": q5, "q6": q6, "q18": q18, "qm": qm, "qq": qq}
 
 
 # ---------------------------------------------------------------------------
@@ -350,9 +370,21 @@ def build_qm(cutoff: int = DATE1 - 90) -> LogicalPlan:
                               "count_order", "_count", "_overflow"))
 
 
+def build_qq(cutoff: int = DATE1 - 90) -> LogicalPlan:
+    li = scan("lineitem").filter(col("l_shipdate") <= cutoff)
+    root = li.aggregate(
+        "l_returnflag", 3,
+        p90_price=("quantile:0.9", "l_extendedprice"),
+        p25_qty=("quantile:0.25", "l_quantity"),
+        med_price=("median", "l_extendedprice"),
+        count_order=("count", "l_quantity"))
+    return LogicalPlan(root, ("p90_price", "p25_qty", "med_price",
+                              "count_order", "_count", "_overflow"))
+
+
 LOGICAL_QUERIES: Dict[str, LogicalPlan] = {
     "q1": build_q1(), "q3": build_q3(), "q5": build_q5(), "q6": build_q6(),
-    "q18": build_q18(), "qm": build_qm()}
+    "q18": build_q18(), "qm": build_qm(), "qq": build_qq()}
 
 
 # ---------------------------------------------------------------------------

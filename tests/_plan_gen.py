@@ -7,10 +7,22 @@ that the in-process harness uses.
 
 Plans are small but structurally diverse: Scan -> optional Filter ->
 optional Project -> optional Join (with a dimension table, taking columns)
--> Aggregate over a grouped key, a join-taken key, or the global group,
-with 1..4 aggregates drawn from every op the IR supports — including the
-holistic ``median``. Every generated plan is valid by construction (and
-re-checked via plan.validate in the harness).
+-> optional Attach (a per-key1 COUNT aggregate gathered back through the
+dense key column, q18's HAVING idiom — the attach filter thresholds a
+COUNT so the selected rows are bit-identical across every executor and
+placement) -> Aggregate over a grouped key, a join-taken key, or the
+global group, with 1..4 aggregates drawn from every op the IR supports —
+including the holistic ``median`` and arbitrary-rank ``quantile:R`` —
+-> optional TopK over a COUNT output (count values are bit-exact across
+all lowerings, so the top-k selection and its indices are too). Every
+generated plan is valid by construction (and re-checked via plan.validate
+in the harness).
+
+``context_capacity_factor`` fuzzes the routing/partition capacity factor
+per seed — tight-but-safe values for the distributed grids, plus a
+deliberately overflowing kernel-join configuration for the local grid so
+the residual re-probe path is exercised (it must repair to exactness and
+report zero overflow).
 """
 import numpy as np
 
@@ -22,7 +34,18 @@ G1 = 13               # fact group-key domain (not mesh-divisible: exercises
 D = 48                # dimension rows (dense PK)
 DK = 7                # dimension group-key domain
 
-AGG_OPS = ("sum", "avg", "count", "max", "min", "median")
+AGG_OPS = ("sum", "avg", "count", "max", "min", "median", "quantile:0.25",
+           "quantile:0.9")
+
+# tight-but-safe routing capacities for the 4-shard distributed grid: the
+# generated keys are uniform, so per-owner shares stay well under the
+# 128-row capacity tile even at 1.5 (overflow across this sweep must be 0)
+DIST_CAPACITY_FACTORS = (1.5, 2.5, 4.0)
+
+
+def context_capacity_factor(seed: int) -> float:
+    """Deterministic per-seed capacity factor for the distributed grid."""
+    return DIST_CAPACITY_FACTORS[seed % len(DIST_CAPACITY_FACTORS)]
 
 
 def make_tables(seed: int = 0):
@@ -71,21 +94,68 @@ def make_plan(seed: int) -> L.LogicalPlan:
                          {"_dv": "dv", "_dk": "dk"})
         if rng.rand() < 0.3:
             node = node.filter(L.col("_dv") <= 0.8)
+    attached = rng.rand() < 0.35
+    if attached:
+        # q18's HAVING idiom: gather a per-key1 COUNT back into the rows
+        # and threshold it — counts are bit-exact under every lowering, so
+        # the resulting selection mask is too
+        src = L.scan("fact").aggregate("key1", G1, att=("count", "d"))
+        node = node.attach(src, "key1", {"_att": "att"})
+        if rng.rand() < 0.6:
+            node = node.filter(L.col("_att") > float(rng.randint(40, 70)))
     keys = [("key1", G1), (None, 1)]
     if joined:
         keys.append(("_dk", DK))
     key, n_groups = keys[rng.randint(len(keys))]
     cols = ["v1", "v2"] + (["_p"] if projected else []) \
-        + (["_dv"] if joined else [])
+        + (["_dv"] if joined else []) + (["_att"] if attached else [])
     aggs = {}
     for i in range(int(rng.randint(1, 5))):
         aggs[f"a{i}"] = (AGG_OPS[rng.randint(len(AGG_OPS))],
                          cols[rng.randint(len(cols))])
-    if not any(op == "median" for op, _ in aggs.values()) and rng.rand() < 0.5:
+    if (not any(op in ("median",) or op.startswith("quantile:")
+                for op, _ in aggs.values()) and rng.rand() < 0.5):
         aggs["amed"] = ("median", cols[rng.randint(len(cols))])
-    return L.LogicalPlan(node.aggregate(key, n_groups, **aggs), None)
+    root = node.aggregate(key, n_groups, **aggs)
+    if key is not None and rng.rand() < 0.35:
+        # TopK rides a COUNT output: count values are bit-identical across
+        # executors/policies, so the selection (and tie-breaks, which
+        # lax.top_k resolves by index) is deterministic everywhere
+        aggs["acnt"] = ("count", cols[0])
+        root = node.aggregate(key, n_groups, **aggs)
+        root = root.top_k("acnt", min(int(rng.randint(3, 9)), n_groups),
+                          "top_idx")
+    return L.LogicalPlan(root, None)
+
+
+def _root_aggregate(plan: L.LogicalPlan) -> L.Aggregate:
+    node = plan.root
+    while isinstance(node, L.TopK):
+        node = node.child
+    return node
 
 
 def plan_agg_ops(plan: L.LogicalPlan):
-    """{output_name: op} of the root Aggregate (for exactness tiers)."""
-    return {name: op for name, (op, _c) in plan.root.aggs}
+    """{output_name: op} of the plan's Aggregate (for exactness tiers) —
+    found below any TopK wrapper. TopK index outputs are integer-exact by
+    construction; the harness treats ``top_idx`` specially."""
+    return {name: op for name, (op, _c) in _root_aggregate(plan).aggs}
+
+
+def plan_has_join(plan: L.LogicalPlan) -> bool:
+    return any(isinstance(n, L.Join) for n in L.walk(plan.root))
+
+
+EXACT_OPS = ("count", "max", "min", "median")
+
+
+def exact_output(key: str, ops) -> bool:
+    """ONE copy of the exactness tier shared by the in-process and
+    subprocess grids: counts, TopK indices, and every order statistic
+    (max/min/median/quantile) select or count actual values, so they must
+    be BIT-IDENTICAL across all lowerings; everything else (sums/avgs)
+    compares to tolerances because reduction order is part of the float
+    result, not of the relational answer."""
+    op = ops.get(key)
+    return (key in ("_count", "top_idx") or op in EXACT_OPS
+            or (op is not None and op.startswith("quantile:")))

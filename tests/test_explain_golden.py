@@ -1,0 +1,82 @@
+"""Golden snapshots of the physical-plan explain output.
+
+``explain_physical`` renders the lowered tree — Exchange kinds with
+estimated moved rows, Compact points, resolved join/aggregate strategies
+— from shape metadata alone, so for fixed table shapes the string is
+deterministic. These snapshots pin the physical plans of three
+representative queries (lowered for a 4-shard mesh, no devices needed):
+
+  q3  route-once — the INTERLEAVE aggregate on the join key runs with
+      merge=placed, no record Exchange (the partitioned join already
+      co-located every group's rows);
+  q5  chained partitioned joins with occupancy-aware Compact between
+      hops, plus aggregate push-down (partials exchange, moved~n_groups);
+  qm  holistic medians routed (med=route) next to pushed-down
+      distributive companions.
+
+Any change to the lowering or rewrite rules shows up as a readable tree
+diff here — regenerate with the snippet in REGEN below ONLY when the
+change is intentional. Wired into scripts/ci.sh as a named gate.
+"""
+import os
+
+import pytest
+
+from repro.analytics import planner
+from repro.analytics.planner import ExecutionContext, explain_physical
+from repro.analytics.tpch import LOGICAL_QUERIES, generate
+from repro.core.config import PlacementPolicy
+
+FIXDIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "fixtures")
+
+# REGEN: for name, ctx in CONTEXTS.items():
+#     open(f"tests/fixtures/explain_{name}.txt", "w").write(
+#         explain_physical(LOGICAL_QUERIES[name], tables, ctx,
+#                          n_shards=4) + "\n")
+CONTEXTS = {
+    "q3": ExecutionContext(executor="cost",
+                           policy=PlacementPolicy.INTERLEAVE,
+                           dist_join="partitioned"),
+    "q5": ExecutionContext(executor="cost",
+                           policy=PlacementPolicy.INTERLEAVE,
+                           dist_join="partitioned"),
+    "qm": ExecutionContext(executor="cost",
+                           policy=PlacementPolicy.INTERLEAVE),
+}
+
+
+@pytest.fixture(autouse=True)
+def _default_profile():
+    """The rendered layouts depend on the active cost profile: pin the
+    hand-set defaults for the snapshot comparison."""
+    prev = planner.current_cost_profile()
+    planner.set_cost_profile(None)
+    yield
+    planner.set_cost_profile(prev)
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return generate(scale=0.004, seed=1).as_jax()
+
+
+@pytest.mark.parametrize("name", sorted(CONTEXTS))
+def test_explain_physical_matches_golden(tables, name):
+    got = explain_physical(LOGICAL_QUERIES[name], tables, CONTEXTS[name],
+                           n_shards=4)
+    with open(os.path.join(FIXDIR, f"explain_{name}.txt")) as f:
+        want = f.read().rstrip("\n")
+    assert got == want, (
+        f"physical plan for {name} drifted from the golden snapshot;\n"
+        f"if intentional, regenerate tests/fixtures/explain_{name}.txt "
+        f"(see REGEN note in this file)\n--- got ---\n{got}")
+
+
+def test_explain_physical_is_stable_across_runs(tables):
+    """Two independent lowerings render identical strings (no dict-order,
+    id(), or RNG dependence in the renderer)."""
+    for name, ctx in CONTEXTS.items():
+        a = explain_physical(LOGICAL_QUERIES[name], tables, ctx, n_shards=4)
+        b = explain_physical(LOGICAL_QUERIES[name], tables, ctx, n_shards=4)
+        assert a == b, name

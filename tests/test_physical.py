@@ -1,0 +1,300 @@
+"""The explicit physical-plan layer: lowering, movement rewrites,
+compaction, and their execution semantics.
+
+Lowering is pure shape arithmetic (``lower(..., n_shards=4)`` needs no
+devices), so the rewrite rules — aggregate push-down, route-once,
+occupancy-aware Compact — are asserted directly on the physical trees;
+one subprocess batch then executes the chained-partitioned-join and
+push-down plans on a real 4-device mesh and pins parity + zero overflow.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from conftest import run_with_devices
+
+from repro.analytics import physical as PH
+from repro.analytics import plan as L
+from repro.analytics import planner
+from repro.analytics.engine import compact_routed_rows, routing_capacity
+from repro.analytics.planner import ExecutionContext, compile_plan, lower
+from repro.core.config import PlacementPolicy
+
+ROWS = {"fact": 1 << 14, "d1": 1 << 11, "d2": 1 << 11}
+IL = dict(executor="xla", policy=PlacementPolicy.INTERLEAVE)
+
+
+def _group_plan(G: int) -> L.LogicalPlan:
+    return L.LogicalPlan(
+        L.scan("fact").aggregate("k", G, s=("sum", "v"), c=("count", "v")),
+        None)
+
+
+def _chain_plan(n_joins: int) -> L.LogicalPlan:
+    node = L.scan("fact")
+    for i in (1, 2)[:n_joins]:
+        node = node.join(L.scan(f"d{i}"), f"k{i}", f"pk{i}",
+                         {f"_v{i}": f"v{i}"})
+    return L.LogicalPlan(node.aggregate(None, 1, c=("count", "_v1")), None)
+
+
+# ---------------------------------------------------------------------------
+# lowering basics
+# ---------------------------------------------------------------------------
+def test_local_lowering_has_no_movement_nodes():
+    phys = lower(_chain_plan(2), ExecutionContext(), ROWS)
+    kinds = {type(n).__name__ for n in PH.walk(phys.root)}
+    assert "Exchange" not in kinds and "Compact" not in kinds
+    assert phys.n_shards == 1
+    joins = [n for n in PH.walk(phys.root) if isinstance(n, PH.PJoin)]
+    assert all(j.dist is None and j.strategy in ("sorted", "kernel")
+               for j in joins)
+
+
+def test_compiled_plan_exposes_physical_tree():
+    planner.clear_plan_cache()
+    tables = {"fact": {"k": np.zeros(64, np.int32),
+                       "v": np.zeros(64, np.float32)}}
+    cp = compile_plan(_group_plan(8), tables, ExecutionContext())
+    assert isinstance(cp.physical, PH.PhysicalPlan)
+    # the physical plan is the plan-cache VALUE: a second compile returns
+    # the same lowered tree without re-lowering
+    cp2 = compile_plan(_group_plan(8), tables, ExecutionContext())
+    assert cp2.physical is cp.physical
+
+
+# ---------------------------------------------------------------------------
+# rewrite rule 1: aggregate push-down
+# ---------------------------------------------------------------------------
+def test_pushdown_splits_aggregate_below_exchange():
+    phys = lower(_group_plan(64), ExecutionContext(**IL), ROWS, n_shards=4)
+    root = phys.root
+    assert root.merge == "pushdown"
+    assert isinstance(root.child, PH.Exchange)
+    assert isinstance(root.child.child, PH.PPartialAggregate)
+    # moved rows shrink from ~per-shard records to ~n_groups
+    on = PH.moved_rows(root)
+    off = PH.moved_rows(lower(_group_plan(64),
+                              ExecutionContext(agg_pushdown=False, **IL),
+                              ROWS, n_shards=4).root)
+    assert on == 64 * 3 // 4 and off > 64 * 10
+
+
+def test_pushdown_declined_when_groups_exceed_rows():
+    big = ROWS["fact"] * 2            # more groups than per-shard rows
+    phys = lower(_group_plan(big), ExecutionContext(**IL), ROWS, n_shards=4)
+    assert phys.root.merge == "owner"
+    assert isinstance(phys.root.child, PH.Exchange)
+    assert phys.root.child.key == "k"
+    forced = lower(_group_plan(big), ExecutionContext(agg_pushdown=True,
+                                                      **IL),
+                   ROWS, n_shards=4)
+    assert forced.root.merge == "pushdown"
+
+
+def test_explain_reports_fewer_moved_rows_with_pushdown():
+    tables = {"fact": {"k": np.zeros(ROWS["fact"], np.int32),
+                       "v": np.zeros(ROWS["fact"], np.float32)}}
+
+    def moved(ctx):
+        return sum(c[0][1] for c in
+                   [d.costs for d in planner.explain(_group_plan(64),
+                                                     tables, ctx)
+                    if d.node == "Exchange"])
+
+    import jax
+    mesh = jax.make_mesh((1,), ("data",))
+    on = moved(ExecutionContext(mesh=mesh, **IL))
+    off = moved(ExecutionContext(mesh=mesh, agg_pushdown=False, **IL))
+    # n=1 zeroes wire estimates for record routing too, so lower for a
+    # 4-shard tree through explain_physical instead for the headline
+    on4 = PH.moved_rows(lower(_group_plan(64), ExecutionContext(**IL),
+                              ROWS, n_shards=4).root)
+    off4 = PH.moved_rows(lower(_group_plan(64),
+                               ExecutionContext(agg_pushdown=False, **IL),
+                               ROWS, n_shards=4).root)
+    assert on4 < off4
+    assert on <= off
+
+
+# ---------------------------------------------------------------------------
+# rewrite rule 2: route-once
+# ---------------------------------------------------------------------------
+def test_route_once_elides_aggregate_record_exchange():
+    jp = L.scan("fact").join(L.scan("d1"), "k1", "pk1", {"_v": "v1"})
+    p = L.LogicalPlan(jp.aggregate("k1", ROWS["d1"], s=("sum", "_v")), None)
+    phys = lower(p, ExecutionContext(dist_join="partitioned", **IL),
+                 ROWS, n_shards=4)
+    assert phys.root.merge == "placed"
+    # only the two join-side routings remain: records moved ONCE
+    ex = PH.exchanges(phys.root)
+    assert len(ex) == 2 and {e.key for e in ex} == {"k1", "pk1"}
+    # disabled, the aggregate routes the records again
+    off = lower(p, ExecutionContext(dist_join="partitioned",
+                                    route_once=False, **IL),
+                ROWS, n_shards=4)
+    assert off.root.merge in ("owner", "pushdown")
+
+
+def test_route_once_elides_probe_rerouting_on_same_key():
+    node = L.scan("fact").join(L.scan("d1"), "k1", "pk1", {"_v1": "v1"})
+    node = node.join(L.scan("d2"), "k1", "pk2", {"_v2": "v2"})
+    p = L.LogicalPlan(node.aggregate(None, 1, c=("count", "_v2")), None)
+    phys = lower(p, ExecutionContext(dist_join="partitioned", **IL),
+                 ROWS, n_shards=4)
+    outer = phys.root.child
+    assert isinstance(outer, PH.PJoin) and outer.dist == "partitioned"
+    # probe side is the inner join DIRECTLY — already placed by k1
+    assert isinstance(outer.probe, PH.PJoin)
+    assert isinstance(outer.build, PH.Exchange)
+
+
+def test_structurally_identical_build_exchanges_dedup():
+    d = L.scan("d1")
+    node = L.scan("fact").join(d, "k1", "pk1", {"_a": "v1"})
+    node = node.join(d, "k2", "pk1", {"_b": "v1"})
+    p = L.LogicalPlan(node.aggregate(None, 1, c=("count", "_b")), None)
+    phys = lower(p, ExecutionContext(dist_join="partitioned", **IL),
+                 ROWS, n_shards=4)
+    build_ex = [n for n in PH.walk(phys.root)
+                if isinstance(n, PH.Exchange) and n.key == "pk1"]
+    assert len(build_ex) == 2 and build_ex[0] == build_ex[1]
+    # walk_unique (the executor's memoization view) sees it once
+    assert sum(1 for n in PH.walk_unique(phys.root)
+               if isinstance(n, PH.Exchange) and n.key == "pk1") == 1
+
+
+# ---------------------------------------------------------------------------
+# rewrite rule 3: occupancy-aware Compact
+# ---------------------------------------------------------------------------
+def test_compact_bounds_chained_join_buffers():
+    ctx = ExecutionContext(dist_join="partitioned", **IL)
+    off_ctx = ExecutionContext(dist_join="partitioned", compact=False, **IL)
+    n, cf = 4, ctx.capacity_factor
+    est = (ROWS["fact"] + (-ROWS["fact"] % n)) // n
+
+    def probe_buffers(plan):
+        """Probe-side hash-Exchange buffer rows, inner join outward."""
+        out = []
+        node = plan.root.child            # the outermost PJoin
+        while isinstance(node, PH.PJoin):
+            side = node.probe
+            if isinstance(side, PH.Exchange):
+                out.append(side.rows)
+                side = side.child
+            if isinstance(side, PH.Compact):
+                side = side.child
+            node = side
+        return list(reversed(out))
+
+    with_c = probe_buffers(lower(_chain_plan(2), ctx, ROWS, n_shards=n))
+    without = probe_buffers(lower(_chain_plan(2), off_ctx, ROWS,
+                                  n_shards=n))
+    # hop 1 identical (nothing to compact on a scan); hop 2 bounded by the
+    # occupancy-aware budget instead of growing another capacity_factor
+    assert with_c[0] == without[0]
+    assert with_c[1] < without[1]
+    bound = n * routing_capacity(PH.ceil128(planner.COMPACT_MARGIN * est),
+                                 n, cf)
+    assert with_c[1] <= bound
+    # and a Compact node sits under the second routing
+    compacts = [x for x in PH.walk(lower(_chain_plan(2), ctx, ROWS,
+                                         n_shards=n).root)
+                if isinstance(x, PH.Compact)]
+    assert compacts and all(c.capacity < c.child.rows for c in compacts)
+
+
+def test_compact_not_inserted_on_tight_buffers():
+    # a scan is occupancy-tight: est == rows, nothing to reclaim
+    phys = lower(_chain_plan(1), ExecutionContext(dist_join="partitioned",
+                                                  **IL),
+                 ROWS, n_shards=4)
+    assert not any(isinstance(x, PH.Compact) for x in PH.walk(phys.root))
+
+
+def test_compact_routed_rows_unit():
+    cols = {"k": jnp.asarray(np.array([5, -1, 7, -1, 9, -1, 11, -1],
+                                      np.int32)),
+            "v": jnp.asarray(np.arange(8, dtype=np.float32))}
+    w = jnp.asarray(np.array([1, 0, 1, 0, 1, 0, 1, 0], np.float32))
+    kept, kw, ovf = compact_routed_rows(cols, w, 4)
+    assert int(ovf) == 0
+    # alive rows first, original relative order preserved
+    np.testing.assert_array_equal(np.asarray(kept["k"]), [5, 7, 9, 11])
+    np.testing.assert_array_equal(np.asarray(kept["v"]), [0, 2, 4, 6])
+    np.testing.assert_array_equal(np.asarray(kw), [1, 1, 1, 1])
+    # alive rows beyond capacity are COUNTED, never silently vanish
+    _, _, ovf2 = compact_routed_rows(cols, w, 2)
+    assert int(ovf2) == 2
+
+
+# ---------------------------------------------------------------------------
+# execution: the rewritten plans answer identically (4-device subprocess)
+# ---------------------------------------------------------------------------
+EXEC_TEST = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.analytics import plan as L
+from repro.analytics import physical as PH
+from repro.analytics import planner
+from repro.analytics.planner import ExecutionContext, compile_plan
+from repro.core.config import PlacementPolicy
+
+mesh = jax.make_mesh((4,), ("data",))
+rng = np.random.RandomState(3)
+N, D = 1 << 13, 1 << 10
+tables = {
+    "fact": {"k1": jnp.asarray(rng.randint(0, D, N).astype(np.int32)),
+             "k2": jnp.asarray(rng.randint(0, D, N).astype(np.int32)),
+             "g": jnp.asarray(rng.randint(0, 64, N).astype(np.int32)),
+             "v": jnp.asarray(rng.rand(N).astype(np.float32))},
+    "d1": {"pk1": jnp.asarray(rng.permutation(D).astype(np.int32)),
+           "v1": jnp.asarray(rng.rand(D).astype(np.float32))},
+    "d2": {"pk2": jnp.asarray(rng.permutation(D).astype(np.int32)),
+           "v2": jnp.asarray(rng.rand(D).astype(np.float32))}}
+
+node = L.scan("fact").join(L.scan("d1"), "k1", "pk1", {"_v1": "v1"})
+node = node.join(L.scan("d2"), "k2", "pk2", {"_v2": "v2"})
+chain = L.LogicalPlan(node.aggregate(
+    "g", 64, c=("count", "_v2"), s=("sum", "_v2"), m=("max", "_v1")), None)
+
+ref = planner.execute_plan(chain, tables, ExecutionContext(executor="xla"))
+for compact in (None, False):
+    ctx = ExecutionContext(executor="xla", mesh=mesh,
+                           policy=PlacementPolicy.INTERLEAVE,
+                           dist_join="partitioned", compact=compact)
+    cp = compile_plan(chain, tables, ctx)
+    has_compact = any(isinstance(x, PH.Compact)
+                      for x in PH.walk(cp.physical.root))
+    assert has_compact == (compact is None), compact
+    got = cp(tables)
+    assert int(np.asarray(got["_overflow"])) == 0, compact
+    for k in ref:
+        a, b = np.asarray(got[k]), np.asarray(ref[k])
+        if k in ("c", "m", "_count"):
+            assert np.array_equal(a, b, equal_nan=True), (compact, k)
+        elif k != "_overflow":
+            np.testing.assert_allclose(a, b, atol=1e-2, rtol=1e-4,
+                                       err_msg=f"{compact}/{k}")
+
+# push-down on/off answer identically (counts bit-equal) on a group-by
+gp = L.LogicalPlan(L.scan("fact").aggregate(
+    "g", 64, s=("sum", "v"), c=("count", "v")), None)
+ref = planner.execute_plan(gp, tables, ExecutionContext(executor="xla"))
+for pd in (True, False):
+    ctx = ExecutionContext(executor="xla", mesh=mesh,
+                           policy=PlacementPolicy.INTERLEAVE,
+                           agg_pushdown=pd)
+    cp = compile_plan(gp, tables, ctx)
+    assert (cp.physical.root.merge == "pushdown") == pd
+    got = cp(tables)
+    assert int(np.asarray(got["_overflow"])) == 0
+    assert np.array_equal(np.asarray(got["c"]), np.asarray(ref["c"]))
+    np.testing.assert_allclose(np.asarray(got["s"]), np.asarray(ref["s"]),
+                               atol=1e-2, rtol=1e-4)
+print("PHYSICAL_EXEC_OK")
+"""
+
+
+def test_rewritten_plans_execute_identically():
+    out = run_with_devices(EXEC_TEST, n_devices=4, timeout=900)
+    assert "PHYSICAL_EXEC_OK" in out

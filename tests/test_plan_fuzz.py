@@ -1,21 +1,28 @@
 """Generative parity harness: random logical plans, every executor, every
-placement context — the regression net that locks in the PR-4 lowerings.
+placement context — the regression net that locks in the PR-4 lowerings
+and (PR 5) the explicit physical-plan layer they now compile through.
 
 Plans come from tests/_plan_gen.py (deterministic per seed; hypothesis,
-when installed, drives extra seeds through tests/_hypothesis_compat.py).
-Each plan runs under executor in {xla, kernel, cost} locally and under
-{FIRST_TOUCH, INTERLEAVE} on a 4-device mesh (one subprocess batch), and
-the results are compared against the local XLA reference:
+when installed, drives extra seeds through tests/_hypothesis_compat.py)
+and since PR 5 include Attach (the q18 HAVING idiom) and TopK roots.
+Each plan runs under executor in {xla, kernel, cost} locally — plus a
+deliberately-overflowing kernel-join configuration whose residual
+re-probe must repair to exactness — and under {FIRST_TOUCH, INTERLEAVE,
+INTERLEAVE without aggregate push-down, INTERLEAVE with a forced
+partitioned join} on a 4-device mesh (one subprocess batch) with the
+routing capacity_factor fuzzed per seed; results are compared against
+the local XLA reference:
 
-  * counts and order statistics (max/min/median) must be BIT-IDENTICAL —
-    they select or count actual values, and every lowering funnels through
-    the same segment ops / segment_median selection;
+  * counts, order statistics (max/min/median/quantile) and TopK indices
+    must be BIT-IDENTICAL — they select or count actual values, and every
+    lowering funnels through the same segment ops / sort-based selection;
   * sums/averages compare to tight tolerances: fused-kernel and per-shard
     reductions legitimately reassociate float additions, so bit-equality
     across those lowerings is not defined — reduction ORDER is part of the
     float result, not of the relational answer;
   * ``_overflow`` must be 0 everywhere (capacity overflow is a plan-sizing
-    bug the harness must catch, never tolerate).
+    bug the harness must catch, never tolerate — including Compact
+    overflow and the repaired-residual kernel join).
 
 The local grid covers LOCAL_SEEDS plans x 3 executors; the distributed
 batch re-generates DIST_SEEDS of the same plans inside the subprocess.
@@ -26,14 +33,14 @@ import pytest
 
 from conftest import run_with_devices
 from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
-from _plan_gen import make_plan, make_tables, plan_agg_ops
+from _plan_gen import (exact_output, make_plan, make_tables, plan_agg_ops,
+                       plan_has_join)
 
 from repro.analytics import plan as L
 from repro.analytics.planner import ExecutionContext, execute_plan
 
 LOCAL_SEEDS = range(48)
 DIST_SEEDS = range(16)
-EXACT_OPS = ("count", "max", "min", "median")
 
 
 def _check_parity(got, ref, ops, tag):
@@ -42,7 +49,7 @@ def _check_parity(got, ref, ops, tag):
         a, b = np.asarray(got[k]), np.asarray(ref[k])
         if k == "_overflow":
             assert int(a) == 0 and int(b) == 0, (tag, k, int(a))
-        elif k == "_count" or ops.get(k) in EXACT_OPS:
+        elif exact_output(k, ops):
             np.testing.assert_array_equal(a, b, err_msg=f"{tag}/{k}")
         else:
             np.testing.assert_allclose(a, b, atol=1e-2, rtol=1e-4,
@@ -60,6 +67,13 @@ def _run_local_seed(seed: int) -> None:
         got = execute_plan(plan, tables,
                            ExecutionContext(executor=executor))
         _check_parity(got, ref, ops, f"seed={seed}/{executor}")
+    if plan_has_join(plan):
+        # deliberate kernel-join capacity overflow: the residual sorted
+        # re-probe must repair every miss and report zero overflow
+        ctx = ExecutionContext(executor="cost", join="kernel",
+                               n_partitions=2, capacity_factor=0.25)
+        got = execute_plan(plan, tables, ctx)
+        _check_parity(got, ref, ops, f"seed={seed}/kernel-join-residual")
 
 
 @pytest.mark.parametrize("chunk", range(8))
@@ -80,29 +94,33 @@ DIST_FUZZ = """
 import sys
 sys.path.insert(0, {testdir!r})
 import numpy as np, jax
-from _plan_gen import make_plan, make_tables, plan_agg_ops
+from _plan_gen import (context_capacity_factor, exact_output, make_plan,
+                       make_tables, plan_agg_ops, plan_has_join)
 from repro.analytics.planner import ExecutionContext, execute_plan
 from repro.core.config import PlacementPolicy
 
-EXACT_OPS = ("count", "max", "min", "median")
 mesh = jax.make_mesh((4,), ("data",))
 tables = make_tables()
 for seed in {seeds!r}:
     plan = make_plan(seed)
     ops = plan_agg_ops(plan)
     ref = execute_plan(plan, tables, ExecutionContext(executor="xla"))
-    has_join = "_dk" in str(plan)
+    cf = context_capacity_factor(seed)
     contexts = [("ft", ExecutionContext(executor="xla", mesh=mesh,
                                         policy=PlacementPolicy.FIRST_TOUCH,
-                                        capacity_factor=4.0)),
+                                        capacity_factor=cf)),
                 ("il", ExecutionContext(executor="xla", mesh=mesh,
                                         policy=PlacementPolicy.INTERLEAVE,
-                                        capacity_factor=4.0))]
-    if has_join:
+                                        capacity_factor=cf)),
+                ("il-nopd", ExecutionContext(
+                    executor="xla", mesh=mesh,
+                    policy=PlacementPolicy.INTERLEAVE,
+                    capacity_factor=cf, agg_pushdown=False))]
+    if plan_has_join(plan):
         contexts.append(
             ("il-part", ExecutionContext(executor="xla", mesh=mesh,
                                          policy=PlacementPolicy.INTERLEAVE,
-                                         capacity_factor=4.0,
+                                         capacity_factor=cf,
                                          dist_join="partitioned")))
     for tag, ctx in contexts:
         got = execute_plan(plan, tables, ctx)
@@ -111,7 +129,7 @@ for seed in {seeds!r}:
             a, b = np.asarray(got[k]), np.asarray(ref[k])
             if k == "_overflow":
                 assert int(a) == 0, (seed, tag, k, int(a))
-            elif k == "_count" or ops.get(k) in EXACT_OPS:
+            elif exact_output(k, ops):
                 assert np.array_equal(a, b, equal_nan=True), (seed, tag, k)
             else:
                 np.testing.assert_allclose(a, b, atol=1e-2, rtol=1e-4,
