@@ -17,6 +17,13 @@ throughput floor (>25% QPS regression fails CI).
 
 Runs in a 4-fake-device subprocess (like fig5) so the mesh policies are
 real shard_map executions.
+
+``run_faults`` (registered as the ``fig_service_faults`` module) is the
+degraded-mode companion: an open-loop multi-tenant skewed-rate workload
+with a mid-run pool kill, reporting per-class SLO attainment and the
+``fig_service_degraded_qps_ratio`` row gated by run.py's absolute floor
+(degraded QPS >= 50% of healthy). It runs in-process so the default CI
+sweep (--skip-slow) exercises it.
 """
 from __future__ import annotations
 
@@ -103,6 +110,91 @@ for batching, tag in ((False, "serial"), (True, "batched")):
 res["q1mix_speedup"] = res["q1mix_serial"]["us"] / res["q1mix_batched"]["us"]
 print(json.dumps(res))
 """
+
+
+def run_faults() -> List[Row]:
+    """Degraded-mode serving: an open-loop multi-tenant skewed-rate
+    workload (three priority classes, per-class deadlines) served by the
+    ALWAYS-ON loop, healthy vs with pool 1 killed ~40% of the way
+    through. Emits per-class SLO attainment for the degraded run and the
+    ``fig_service_degraded_qps_ratio`` row that run.py gates against an
+    absolute floor (degraded >= 50% of healthy QPS) whenever the module
+    runs — no baseline recording needed. In-process (no mesh subprocess):
+    it must run in the default CI sweep, which skips subprocess figures."""
+    import time
+
+    from repro.analytics.planner import ExecutionContext
+    from repro.analytics.service import (AnalyticsService, RetryPolicy,
+                                         ServiceConfig, ServiceFaultInjector)
+    from repro.analytics.tpch import generate, run_query, submit_query
+
+    data = generate(scale=0.004, seed=0)
+    ctx = ExecutionContext(executor="cost")
+    mix = ("q1", "q3", "q6")
+    for q in mix:
+        run_query(q, data, context=ctx)          # measure serving, not jit
+
+    # open-loop arrival schedule: three tenants with SKEWED rates — an
+    # interactive class outpacing a mid class outpacing a batch flood —
+    # each with its own deadline budget; identical schedule both runs
+    tenants = [              # (client_id, priority, rate_qps, deadline_s)
+        (0, 2, 45.0, 0.6), (1, 1, 25.0, 1.0), (2, 0, 15.0, 2.0)]
+    horizon_s = 1.2
+    sched = sorted(
+        (k / rate, cid, prio, dl)
+        for cid, prio, rate, dl in tenants
+        for k in range(int(rate * horizon_s)))
+    n_total = len(sched)
+
+    def one_run(faults):
+        svc = AnalyticsService(ServiceConfig(
+            n_pools=2, workers_per_pool=2, batching=False, queue_depth=512,
+            faults=faults,
+            retry=RetryPolicy(max_attempts=3, base_backoff_s=0.002,
+                              max_backoff_s=0.02)))
+        svc.start()
+        t0 = time.perf_counter()
+        for off, cid, prio, dl in sched:
+            lag = off - (time.perf_counter() - t0)
+            if lag > 0:
+                time.sleep(lag)
+            submit_query(svc, mix[(cid + int(off * 997)) % len(mix)], data,
+                         context=ctx, client_id=cid, priority=prio,
+                         deadline_s=dl)
+        svc.drain(timeout=120.0)
+        elapsed = time.perf_counter() - t0
+        st = svc.stats()
+        svc.close()
+        return st, elapsed
+
+    healthy, t_h = one_run(None)
+    kill_at = int(n_total * 0.4)                 # mid-workload pool loss
+    degraded, t_d = one_run(
+        ServiceFaultInjector(seed=0, kill_pool_at=(kill_at, 1)))
+    qps_h = healthy.completed / t_h
+    qps_d = degraded.completed / t_d
+    ratio = qps_d / qps_h if qps_h > 0 else 0.0
+
+    rows: List[Row] = [
+        ("fig_service_faults_healthy_qps", qps_h,
+         f"queries_per_sec;completed={healthy.completed}/{n_total};"
+         f"p99_ms={healthy.latency_p99_ms:.2f}"),
+        ("fig_service_faults_degraded_qps", qps_d,
+         f"queries_per_sec;pool1_killed_at_dispatch={kill_at};"
+         f"completed={degraded.completed}/{n_total};"
+         f"requeued={degraded.requeued};retries={degraded.retries};"
+         f"p99_ms={degraded.latency_p99_ms:.2f}"),
+        ("fig_service_degraded_qps_ratio", ratio,
+         "degraded_over_healthy_qps;floor=0.50;guarded_whenever_run"),
+    ]
+    for prio in sorted(degraded.per_class):
+        cs = degraded.per_class[prio]
+        rows.append((f"fig_service_faults_slo_class{prio}",
+                     cs.slo_attainment,
+                     f"slo_attainment;admitted={cs.admitted};"
+                     f"completed={cs.completed};expired={cs.expired};"
+                     f"shed={cs.shed};retries={cs.retries}"))
+    return rows
 
 
 def run() -> List[Row]:

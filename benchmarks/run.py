@@ -10,6 +10,10 @@ Prints ``name,us_per_call,derived`` CSV (assignment format). Modules:
   fig8/9 TPC-H default vs tuned configuration
   fig_service  concurrent serving: QPS x p99 for ThreadPlacement x
          PlacementPolicy over a mixed Q1/Q3/Q6 open-loop workload
+  fig_service_faults  degraded-mode serving: multi-tenant skewed-rate
+         open-loop workload with a mid-run pool kill; per-class SLO and
+         the degraded/healthy QPS ratio (absolute floor >= 0.50, gated
+         whenever the module runs)
   roofline  the dry-run (arch x shape x mesh) table
 """
 import argparse
@@ -50,6 +54,8 @@ def main() -> None:
         ("fig7_dist", SimpleNamespace(run=fig7_index_join.run_dist)),
         ("fig8_fig9", fig8_fig9_tpch),
         ("fig_service", fig_service_throughput),
+        ("fig_service_faults",
+         SimpleNamespace(run=fig_service_throughput.run_faults)),
         ("roofline", roofline_table),
     ]
     if args.skip_slow:
@@ -82,7 +88,13 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(collected, f, indent=2, sort_keys=True)
             f.write("\n")
+    # absolute floors are checked WHENEVER their row was collected — no
+    # baseline recording needed, so even a bootstrap CI run (no previous
+    # --json) gates degraded-mode serving capacity
+    floor_failed = check_floors(collected)
     if args.check and check_regression(collected, args.check):
+        sys.exit(2)
+    if floor_failed:
         sys.exit(2)
     sys.exit(1 if failures else 0)
 
@@ -94,6 +106,24 @@ CHECK_THRESHOLD = 1.25           # fail on >25% latency regression
 # Q1-mix QPS floor. A >25% QPS drop (collected < 0.75 * baseline) fails.
 CHECKED_THROUGHPUT_ROWS = ("fig_service_q1mix_batched_qps",)
 QPS_CHECK_THRESHOLD = 1.0 / 0.75
+# Rows gated against an ABSOLUTE floor (no baseline needed): checked on
+# every run that collects them. The degraded-QPS ratio asserts the
+# service keeps >= 50% of healthy throughput after losing a pool.
+CHECKED_FLOOR_ROWS = {"fig_service_degraded_qps_ratio": 0.50}
+
+
+def check_floors(collected: dict) -> bool:
+    """True (-> non-zero exit) if any collected row sits below its floor."""
+    failed = False
+    for row, floor in CHECKED_FLOOR_ROWS.items():
+        if row not in collected:
+            continue
+        ok = collected[row] >= floor
+        print(f"check_{row},{collected[row]:.3f},"
+              f"floor={floor:.2f} {'ok' if ok else 'BELOW_FLOOR'}")
+        if not ok:
+            failed = True
+    return failed
 
 
 def check_regression(collected: dict, prev_path: str) -> bool:

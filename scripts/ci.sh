@@ -15,6 +15,13 @@
 # broadcast-vs-partitioned join rows are NOT gated by this script; run
 # `python benchmarks/run.py --json ... --check ...` without --skip-slow
 # for the full grid including those gates.
+#
+# The degraded-mode serving gate (fig_service_faults) runs IN-PROCESS and
+# is therefore part of this sweep: run.py checks its
+# fig_service_degraded_qps_ratio row against an ABSOLUTE floor (degraded
+# QPS >= 50% of healthy after losing a worker pool mid-run) on every run
+# that collects it — including the bootstrap run that has no baseline
+# JSON yet. A pool loss that halves serving capacity fails CI here.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

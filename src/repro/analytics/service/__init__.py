@@ -7,28 +7,43 @@ the serving layer where those effects compound under concurrency:
 
     submit() -> AdmissionQueue -> QueryBatcher -> MorselScheduler -> pools
 
-  queue.py      bounded admission with deadlines and backpressure stats
+  queue.py      bounded admission with priority classes, weighted-fair
+                dequeue, deadlines, and overload shedding
   batcher.py    multi-query batching by plan-cache key (structurally
-                identical queries execute as one dispatch)
+                identical queries execute as one dispatch) + the
+                adaptive per-round batching window
   scheduler.py  morsel-driven scheduling onto socket-pinned worker pools;
                 ThreadPlacement (OS_DEFAULT/DENSE/SPARSE) controls
                 pool-to-shard affinity, work stealing is the AutoNUMA /
-                kernel-load-balancing analog (steals counted)
-  service.py    the AnalyticsService facade: submit()/drain(),
-                per-query latency + queue-wait histograms, ServiceStats
+                kernel-load-balancing analog (steals counted); pool
+                heartbeats, straggler quarantine, and morsel requeue
+  faults.py     deterministic fault injection (build failures, wait
+                poison, pool kills, stragglers) behind zero-cost hooks
+  retry.py      bounded-attempt exponential backoff with deterministic
+                jitter, deadline-aware across attempts
+  service.py    the AnalyticsService facade: submit()/drain(), the
+                always-on background serve loop (start()/stop()),
+                retry/recovery, per-class SLO stats, ServiceStats
 """
-from repro.analytics.service.batcher import BatchStats, QueryBatcher
+from repro.analytics.service.batcher import (AdaptiveBatchWindow, BatchStats,
+                                             QueryBatcher)
+from repro.analytics.service.faults import (InjectedServiceFault,
+                                            ServiceFaultInjector)
 from repro.analytics.service.queue import (AdmissionQueue, QueryRequest,
                                            QueueStats)
+from repro.analytics.service.retry import RetryPolicy
 from repro.analytics.service.scheduler import (MorselScheduler,
                                                SchedulerStats,
-                                               ThreadPlacement, WorkerPool)
-from repro.analytics.service.service import (AnalyticsService, QueryResult,
-                                             ServiceConfig, ServiceStats)
+                                               ThreadPlacement,
+                                               WorkerLeakError, WorkerPool)
+from repro.analytics.service.service import (AnalyticsService, ClassStats,
+                                             QueryResult, ServiceConfig,
+                                             ServiceStats)
 
 __all__ = [
-    "AdmissionQueue", "AnalyticsService", "BatchStats", "MorselScheduler",
+    "AdaptiveBatchWindow", "AdmissionQueue", "AnalyticsService",
+    "BatchStats", "ClassStats", "InjectedServiceFault", "MorselScheduler",
     "QueryBatcher", "QueryRequest", "QueryResult", "QueueStats",
-    "SchedulerStats", "ServiceConfig", "ServiceStats", "ThreadPlacement",
-    "WorkerPool",
+    "RetryPolicy", "SchedulerStats", "ServiceConfig", "ServiceFaultInjector",
+    "ServiceStats", "ThreadPlacement", "WorkerLeakError", "WorkerPool",
 ]

@@ -44,6 +44,32 @@ class QueryBatch:
     shares: List[List[QueryRequest]] = field(default_factory=list)
 
 
+class AdaptiveBatchWindow:
+    """Per-round batch-size controller for the always-on serve loop.
+
+    Large rounds amortize grouping/dispatch overhead (QPS under backlog);
+    small rounds keep queue-wait — and therefore p99 — low when traffic
+    is light. The window doubles while the post-round backlog exceeds it
+    (the queue is outrunning the service) and halves on an idle round,
+    clamped to [min_batch, max_batch]. Multiplicative in both directions:
+    it tracks load swings in O(log) rounds instead of creeping linearly."""
+
+    def __init__(self, min_batch: int = 1, max_batch: int = 64):
+        if not 1 <= min_batch <= max_batch:
+            raise ValueError("need 1 <= min_batch <= max_batch")
+        self.min_batch = min_batch
+        self.max_batch = max_batch
+        self.window = min_batch
+
+    def observe(self, backlog: int) -> int:
+        """Feed the post-round queue depth; returns the next window."""
+        if backlog > self.window:
+            self.window = min(self.max_batch, self.window * 2)
+        elif backlog == 0:
+            self.window = max(self.min_batch, self.window // 2)
+        return self.window
+
+
 class QueryBatcher:
     """Stateless grouping; stats accumulate across calls (mutated and
     snapshotted under a lock so a monitoring thread can never observe a

@@ -24,6 +24,16 @@ The execution analog of the paper's thread-placement axis (Figs 3/4):
   * **Work stealing** is the AutoNUMA / kernel-load-balancing analog: an
     idle pool steals from the longest backlog; every steal is counted
     per pool and surfaced in SchedulerStats.
+  * **Fault tolerance** ports runtime/ft.py's idiom to serving: workers
+    stamp per-pool heartbeats and EWMA morsel-service times; a pool that
+    dies (``kill_pool``, the drill analog of a lost host) or straggles
+    past ``straggler_threshold`` x the fleet-median EWMA is QUARANTINED —
+    its queued morsels are requeued onto surviving pools (counted in
+    ``requeued``) and new dispatches avoid it, so the service keeps
+    serving on a shrunk pool set. Results stay deterministic because
+    whole-plan dispatch is idempotent and morsel partials merge in morsel
+    order regardless of which pool ran them. All fault hooks sit behind
+    one ``if self.faults is not None`` check — zero cost when disabled.
 """
 from __future__ import annotations
 
@@ -36,6 +46,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.analytics import plan as L
 from repro.analytics import planner
@@ -98,6 +109,8 @@ class QueryTask:
         self._lock = threading.Lock()
         self._done = threading.Event()
         self._error: Optional[BaseException] = None
+        self._poison: Optional[BaseException] = None
+        self.fault_ordinal: Optional[int] = None
         self.result: Optional[Dict[str, jax.Array]] = None
         self.done_t: float = 0.0            # completion stamp (monotonic)
         if morsel_fn is None:
@@ -106,6 +119,13 @@ class QueryTask:
             self.morsels = [_Morsel(self, i, lo, hi - lo)
                             for i, (lo, hi) in enumerate(morsels)]
         self._pending = len(self.morsels)
+
+    def poison(self, error: BaseException) -> None:
+        """Fault-injection hook: the next morsel to run raises ``error``,
+        so every ``wait()`` on this task raises (a deterministic stand-in
+        for a dispatch that dies inside the executor)."""
+        with self._lock:
+            self._poison = error
 
     @property
     def split(self) -> bool:
@@ -120,6 +140,9 @@ class QueryTask:
 
     def _run_morsel(self, m: _Morsel) -> None:
         try:
+            with self._lock:
+                if self._poison is not None:
+                    raise self._poison
             if self.morsel_fn is None:
                 if self.compiled.ctx.mesh is not None:
                     with _MESH_DISPATCH_LOCK:
@@ -178,6 +201,27 @@ class WorkerPool:
     executed: int = 0             # morsels run by this pool's workers
     steals: int = 0               # morsels this pool stole from another
     queue: deque = field(default_factory=deque, repr=False)
+    # fault-tolerance state (mutated under the scheduler's condition)
+    dead: bool = False            # killed: workers exited, no new work
+    quarantined: bool = False     # straggler/hang: avoided by dispatch
+    heartbeat_t: float = 0.0      # last worker take/finish (monotonic)
+    inflight: int = 0             # morsels currently executing
+    ewma_s: float = 0.0           # EWMA morsel service time (ft.py idiom)
+    samples: int = 0
+
+    @property
+    def live(self) -> bool:
+        return not (self.dead or self.quarantined)
+
+
+class WorkerLeakError(RuntimeError):
+    """close() could not join every worker thread — a wedged pool would
+    otherwise leak threads invisibly across tests/sessions."""
+
+    def __init__(self, unjoined: List[str]):
+        super().__init__(f"unjoined worker threads after close(): "
+                         f"{', '.join(unjoined)}")
+        self.unjoined = list(unjoined)
 
 
 @dataclass
@@ -186,6 +230,10 @@ class SchedulerStats:
     tasks: int = 0
     executed_per_pool: Tuple[int, ...] = ()
     steals_per_pool: Tuple[int, ...] = ()
+    requeued: int = 0             # morsels moved off dead/quarantined pools
+    dead_pools: Tuple[int, ...] = ()
+    quarantined_pools: Tuple[int, ...] = ()   # includes dead pools
+    pool_ewma_s: Tuple[float, ...] = ()
 
     @property
     def steals(self) -> int:
@@ -204,23 +252,31 @@ class MorselScheduler:
     def __init__(self, n_pools: int = 2, workers_per_pool: int = 2,
                  placement: ThreadPlacement = ThreadPlacement.OS_DEFAULT,
                  morsel_rows: Optional[int] = None, steal: bool = True,
-                 n_shards: Optional[int] = None, started: bool = True):
+                 n_shards: Optional[int] = None, started: bool = True,
+                 faults=None, straggler_threshold: float = 4.0,
+                 straggler_warmup: int = 3, hang_after_s: float = 30.0):
         if n_pools < 1 or workers_per_pool < 1:
             raise ValueError("need at least one pool and one worker")
         self.placement = placement
         self.morsel_rows = morsel_rows
         self.steal = steal
+        self.faults = faults                # ServiceFaultInjector | None
+        self.straggler_threshold = straggler_threshold
+        self.straggler_warmup = straggler_warmup
+        self.hang_after_s = hang_after_s
         shards = jax.device_count() if n_shards is None else n_shards
         per = max(1, shards // n_pools)
+        now = time.monotonic()
         self.pools = [WorkerPool(i, min(i * per, shards),
                                  min((i + 1) * per, shards) if i < n_pools - 1
-                                 else shards)
+                                 else shards, heartbeat_t=now)
                       for i in range(n_pools)]
         self._cv = threading.Condition()
         self._rr = 0                        # OS_DEFAULT round-robin cursor
         self._sparse_base = 0               # SPARSE per-task stripe offset
         self._tasks = 0
         self._dispatched = 0
+        self._requeued = 0
         self._closed = False
         self._threads: List[threading.Thread] = []
         self._workers_per_pool = workers_per_pool
@@ -231,7 +287,9 @@ class MorselScheduler:
     def start(self) -> None:
         if self._threads:
             return
+        now = time.monotonic()
         for pool in self.pools:
+            pool.heartbeat_t = now
             for w in range(self._workers_per_pool):
                 t = threading.Thread(
                     target=self._worker, args=(pool,),
@@ -239,13 +297,21 @@ class MorselScheduler:
                 t.start()
                 self._threads.append(t)
 
-    def close(self) -> None:
+    def close(self, timeout: float = 5.0) -> List[str]:
+        """Stop workers, drain, join. Returns the names of worker threads
+        that did NOT join within ``timeout`` — a wedged pool must be a
+        visible report, never a silent daemon-thread leak (the facade
+        raises WorkerLeakError on a non-empty report)."""
         with self._cv:
             self._closed = True
             self._cv.notify_all()
+        unjoined: List[str] = []
         for t in self._threads:
-            t.join(timeout=5.0)
+            t.join(timeout=timeout)
+            if t.is_alive():
+                unjoined.append(t.name)
         self._threads = []
+        return unjoined
 
     def __enter__(self) -> "MorselScheduler":
         return self
@@ -269,39 +335,143 @@ class MorselScheduler:
         executable is only compiled on that fallback path — a split task
         must not push a never-invoked entry into the bounded plan cache."""
         ctx = ctx or ExecutionContext()
+        # fault hook: one dispatch ordinal per build attempt (retries
+        # re-tick); an injected build failure raises HERE, before any
+        # compile work, exactly like a plan naming a missing table
+        ordinal = (self.faults.begin_dispatch()
+                   if self.faults is not None else None)
         if self.morsel_rows is not None and ctx.mesh is None:
             split = _morsel_decompose(plan, tables, ctx)
             if split is not None:
                 morsel_fn, finalize, n_rows = split
-                return QueryTask(None, tables, morsel_fn, finalize,
+                task = QueryTask(None, tables, morsel_fn, finalize,
                                  morsel_slices(n_rows, self.morsel_rows))
-        return QueryTask(planner.compile_plan(plan, tables, ctx), tables)
+                task.fault_ordinal = ordinal
+                return task
+        task = QueryTask(planner.compile_plan(plan, tables, ctx), tables)
+        task.fault_ordinal = ordinal
+        return task
 
     # -- dispatch -----------------------------------------------------------
+    def _live_pools(self) -> List[WorkerPool]:
+        """Call under the condition: pools eligible for new work."""
+        return [p for p in self.pools if p.live]
+
     def submit(self, task: QueryTask) -> QueryTask:
         with self._cv:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
+            live = self._live_pools()
+            if not live:
+                raise RuntimeError("no live worker pools — every pool is "
+                                   "dead or quarantined")
             self._tasks += 1
-            dense_pool = min(self.pools, key=lambda p: len(p.queue)).pool_id
-            # SPARSE stripes a task's morsels across every pool, starting
-            # from a per-task rotating base — otherwise single-morsel
-            # (whole-plan) tasks would all land on pool 0 (seq is always 0)
-            # and the other pools could only work via steals
+            dense_pool = min(live, key=lambda p: len(p.queue)).pool_id
+            # SPARSE stripes a task's morsels across every live pool,
+            # starting from a per-task rotating base — otherwise
+            # single-morsel (whole-plan) tasks would all land on pool 0
+            # (seq is always 0) and the other pools could only work via
+            # steals
             sparse_base = self._sparse_base
             self._sparse_base += 1
             for m in task.morsels:
                 if self.placement == ThreadPlacement.DENSE:
                     m.home_pool = dense_pool
                 elif self.placement == ThreadPlacement.SPARSE:
-                    m.home_pool = (sparse_base + m.seq) % len(self.pools)
+                    m.home_pool = live[(sparse_base + m.seq)
+                                       % len(live)].pool_id
                 else:                       # OS_DEFAULT: arrival order
-                    m.home_pool = self._rr % len(self.pools)
+                    m.home_pool = live[self._rr % len(live)].pool_id
                     self._rr += 1
                 self.pools[m.home_pool].queue.append(m)
                 self._dispatched += 1
             self._cv.notify_all()
+        # fault hook AFTER enqueue: a pool kill scheduled at this ordinal
+        # fires mid-round — the task's morsels may sit on the killed
+        # pool's queue until check_pools() requeues them
+        if self.faults is not None and task.fault_ordinal is not None:
+            self.faults.on_submit(task.fault_ordinal, task, self)
         return task
+
+    # -- fault tolerance ----------------------------------------------------
+    def kill_pool(self, pool_id: int) -> None:
+        """Drill analog of losing a socket/host: the pool's workers exit
+        (in-flight morsels finish — threads cannot be preempted — but no
+        new morsel is taken) and its backlog waits for check_pools() to
+        requeue it onto survivors."""
+        with self._cv:
+            self.pools[pool_id].dead = True
+            self._cv.notify_all()
+
+    def quarantine_pool(self, pool_id: int) -> None:
+        """Mark a pool unschedulable and requeue its backlog (manual
+        override of the straggler/hang detectors)."""
+        with self._cv:
+            pool = self.pools[pool_id]
+            if sum(p.live for p in self.pools) > 1 or not pool.live:
+                pool.quarantined = True
+            self._requeue_locked()
+            self._cv.notify_all()
+
+    def _requeue_locked(self) -> None:
+        """Move every morsel queued on a non-live pool onto live pools,
+        round-robin, preserving order (call under the condition)."""
+        moved: List[_Morsel] = []
+        for p in self.pools:
+            if not p.live and p.queue:
+                moved.extend(p.queue)
+                p.queue.clear()
+        if not moved:
+            return
+        live = self._live_pools()
+        if not live:                 # nothing to requeue onto; put back
+            self.pools[moved[0].home_pool].queue.extend(moved)
+            return
+        for i, m in enumerate(moved):
+            target = live[i % len(live)]
+            m.home_pool = target.pool_id
+            target.queue.append(m)
+        self._requeued += len(moved)
+
+    def check_pools(self, now: Optional[float] = None) -> List[int]:
+        """Heartbeat + EWMA sweep (the serving port of ft.py's
+        StragglerDetector): quarantine pools that are dead, hung (backlog
+        but no heartbeat within ``hang_after_s``), or straggling (EWMA
+        morsel time > ``straggler_threshold`` x the live-pool median),
+        then requeue their backlogs onto survivors. Never quarantines the
+        last live pool. Returns newly quarantined pool ids."""
+        now = time.monotonic() if now is None else now
+        newly: List[int] = []
+        with self._cv:
+            for p in self.pools:
+                if not p.live:
+                    continue
+                if sum(q.live for q in self.pools) <= 1:
+                    break
+                if p.dead:
+                    continue
+                if p.queue and now - p.heartbeat_t > self.hang_after_s:
+                    p.quarantined = True
+                    newly.append(p.pool_id)
+            ready = [p for p in self.pools
+                     if p.live and p.samples >= self.straggler_warmup]
+            if len(ready) >= 2:
+                for p in ready:
+                    if sum(q.live for q in self.pools) <= 1:
+                        break
+                    # median of the PEERS, not the whole fleet: with few
+                    # pools a fleet median that includes the straggler is
+                    # dragged up by it (2 pools: median == mean, and the
+                    # threshold could mathematically never trip)
+                    med = float(np.median([q.ewma_s for q in ready
+                                           if q is not p]))
+                    if med > 0 and p.ewma_s > self.straggler_threshold * med:
+                        p.quarantined = True
+                        newly.append(p.pool_id)
+            self._requeue_locked()
+            if newly:
+                self._cv.notify_all()
+        return newly
 
     def run(self, plan: L.LogicalPlan, tables,
             ctx: Optional[ExecutionContext] = None) -> Dict[str, jax.Array]:
@@ -311,12 +481,17 @@ class MorselScheduler:
     # -- workers ------------------------------------------------------------
     def _take(self, pool: WorkerPool) -> Optional[_Morsel]:
         """Called under the lock: own head first, else steal the tail of
-        the longest other backlog (classic work stealing)."""
+        the longest LIVE backlog (classic work stealing). A dead pool
+        takes nothing (its workers are exiting); a quarantined pool only
+        drains its own queue — a straggler must not slow other pools'
+        work by stealing it."""
+        if pool.dead:
+            return None
         if pool.queue:
             return pool.queue.popleft()
-        if not self.steal:
+        if not self.steal or pool.quarantined:
             return None
-        victim = max((p for p in self.pools if p is not pool),
+        victim = max((p for p in self.pools if p is not pool and p.live),
                      key=lambda p: len(p.queue), default=None)
         if victim is not None and victim.queue:
             pool.steals += 1
@@ -327,20 +502,39 @@ class MorselScheduler:
         while True:
             with self._cv:
                 m = self._take(pool)
-                while m is None and not self._closed:
+                while m is None and not self._closed and not pool.dead:
                     self._cv.wait(timeout=0.1)
                     m = self._take(pool)
-                if m is None:               # closed and drained
+                if m is None:               # closed and drained, or killed
                     return
                 pool.executed += 1
+                pool.inflight += 1
+                pool.heartbeat_t = time.monotonic()
+            delay = (self.faults.morsel_delay(pool.pool_id)
+                     if self.faults is not None else 0.0)
+            if delay > 0.0:
+                time.sleep(delay)
+            t0 = time.monotonic()
             m.task._run_morsel(m)
+            dt = time.monotonic() - t0 + delay  # EWMA must see the straggle
+            with self._cv:
+                pool.inflight -= 1
+                pool.heartbeat_t = time.monotonic()
+                pool.samples += 1
+                pool.ewma_s = (dt if pool.samples == 1
+                               else 0.3 * dt + 0.7 * pool.ewma_s)
 
     def stats(self) -> SchedulerStats:
         with self._cv:
             return SchedulerStats(
                 morsels_dispatched=self._dispatched, tasks=self._tasks,
                 executed_per_pool=tuple(p.executed for p in self.pools),
-                steals_per_pool=tuple(p.steals for p in self.pools))
+                steals_per_pool=tuple(p.steals for p in self.pools),
+                requeued=self._requeued,
+                dead_pools=tuple(p.pool_id for p in self.pools if p.dead),
+                quarantined_pools=tuple(p.pool_id for p in self.pools
+                                        if not p.live),
+                pool_ewma_s=tuple(p.ewma_s for p in self.pools))
 
 
 # ---------------------------------------------------------------------------

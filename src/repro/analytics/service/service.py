@@ -1,41 +1,58 @@
-"""AnalyticsService: the concurrent query-serving facade.
+"""AnalyticsService: the fault-tolerant concurrent query-serving facade.
 
     service = AnalyticsService(ServiceConfig(...))
-    rid = service.submit(plan, tables)          # None => backpressured
-    results = service.drain()                   # {req_id: QueryResult}
+    service.start()                             # background drain loop
+    rid = service.submit(plan, tables, priority=2)   # None => backpressured
+    res = service.result(rid, timeout=5.0)      # or service.drain()
     service.stats()                             # ServiceStats snapshot
+    service.stop(); service.close()
 
-``submit`` is non-blocking admission into the bounded queue; ``drain``
-pulls FIFO batches, groups them by plan-cache key (batcher), dispatches
-one task per distinct (plan, context, signature, tables) through the
-morsel scheduler's socket-pinned pools, and fans shared results out.
-Whole-plan dispatch (the default) is bit-identical to serial
-``planner.execute_plan`` — it runs the same compiled executable on the
-same inputs; setting ``morsel_rows`` turns on intra-query morsel
-parallelism for decomposable plans (deterministic merge order, float
-summation order differs from the one-pass serial plan).
+``submit`` is non-blocking admission into the bounded priority queue.
+Serving runs in one of two modes:
 
-Latency accounting: per-request queue wait (submit -> dispatch) and
-total latency (submit -> result ready) feed p50/p95/p99 histograms in
-``ServiceStats`` — the open-loop QPS x tail-latency surface the
-fig_service_throughput benchmark measures.
+  * **submit-then-drain** (the original mode): ``drain()`` pulls batches
+    until the entry backlog is served;
+  * **always-on** (``start()``): a background drain thread serves rounds
+    continuously — admission happens DURING service — with an adaptive
+    batching window (grow ``max_batch`` under backlog for QPS, shrink
+    when idle for p99; see batcher.AdaptiveBatchWindow).
+
+Each round groups requests by plan-cache key (batcher), dispatches one
+task per distinct (plan, context, signature, tables) through the morsel
+scheduler's socket-pinned pools, and fans shared results out. Failed or
+hung dispatches are retried under ``ServiceConfig.retry`` (exponential
+backoff, deterministic jitter, per-request deadline respected across
+attempts); the scheduler's heartbeat/EWMA sweep quarantines dead or
+straggling pools between wait ticks and requeues their backlog, so the
+service keeps serving on a shrunk pool set. Results stay bit-identical
+to serial execution because whole-plan dispatch is idempotent and morsel
+partials merge in morsel order regardless of which pool ran them.
+
+Every admitted request gets EXACTLY ONE terminal ``QueryResult``: a
+value, ``expired`` (deadline passed — at dequeue, between rounds, or
+mid-flight), ``shed`` (evicted lowest-priority-first under overload), or
+an exhausted-retries error. Per-class SLO attainment (deadline-met
+fraction, retries, shed counts) is reported in ``ServiceStats.per_class``.
 """
 from __future__ import annotations
 
 import threading
 import time
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
 from repro.analytics.plan import LogicalPlan
 from repro.analytics.planner import ExecutionContext
-from repro.analytics.service.batcher import QueryBatcher
+from repro.analytics.service.batcher import AdaptiveBatchWindow, QueryBatcher
+from repro.analytics.service.faults import ServiceFaultInjector
 from repro.analytics.service.queue import AdmissionQueue, QueryRequest
+from repro.analytics.service.retry import RetryPolicy
 from repro.analytics.service.scheduler import (MorselScheduler,
-                                               ThreadPlacement)
+                                               ThreadPlacement,
+                                               WorkerLeakError)
 
 
 @dataclass(frozen=True)
@@ -43,11 +60,27 @@ class ServiceConfig:
     n_pools: int = 2
     workers_per_pool: int = 2
     queue_depth: int = 256
-    max_batch: int = 64            # requests pulled per drain round
+    max_batch: int = 64            # requests pulled per drain round (cap)
+    min_batch: int = 1             # adaptive-window floor (serve loop)
     morsel_rows: Optional[int] = None   # None = whole-plan (bit-identical)
     placement: ThreadPlacement = ThreadPlacement.OS_DEFAULT
     batching: bool = True
     steal: bool = True
+    # -- graceful degradation ------------------------------------------------
+    # depth at which offers start evicting lower-priority queued requests
+    # (None = plain backpressure only, the pre-fault-tolerance behavior)
+    shed_watermark: Optional[int] = None
+    client_weights: Optional[Mapping[int, int]] = None
+    # -- fault tolerance -----------------------------------------------------
+    retry: Optional[RetryPolicy] = RetryPolicy()
+    faults: Optional[ServiceFaultInjector] = None
+    hang_timeout_s: Optional[float] = 60.0  # per-attempt wait budget
+    wait_tick_s: float = 0.05      # heartbeat-check cadence while waiting
+    straggler_threshold: float = 4.0
+    straggler_warmup: int = 3
+    hang_after_s: float = 30.0     # stale-heartbeat quarantine threshold
+    idle_wait_s: float = 0.02      # serve-loop sleep when the queue is dry
+    close_timeout_s: float = 5.0   # per-worker join budget in close()
     # latency/queue-wait histograms keep the most recent N samples: a
     # long-lived service must stay memory-bounded, and the percentiles
     # should reflect CURRENT tail behavior, not be diluted by hours of
@@ -58,12 +91,15 @@ class ServiceConfig:
 @dataclass
 class QueryResult:
     req_id: int
-    value: Optional[Dict[str, Any]]     # None => expired or failed
+    value: Optional[Dict[str, Any]]     # None => expired/shed/failed
     queue_wait_s: float = 0.0
     latency_s: float = 0.0
     batch_size: int = 1                 # requests served by this dispatch
-    expired: bool = False
-    error: Optional[str] = None         # execution failure, per dispatch
+    expired: bool = False               # deadline passed before a value
+    shed: bool = False                  # evicted under overload
+    attempts: int = 1                   # dispatch attempts consumed
+    priority: int = 1
+    error: Optional[str] = None         # terminal failure, per dispatch
 
 
 def _pct(sorted_vals: List[float], q: float) -> float:
@@ -73,19 +109,50 @@ def _pct(sorted_vals: List[float], q: float) -> float:
 
 
 @dataclass
+class ClassStats:
+    """Per-priority-class outcome counters + SLO attainment."""
+
+    priority: int
+    admitted: int = 0
+    rejected: int = 0
+    completed: int = 0
+    failed: int = 0
+    expired: int = 0
+    shed: int = 0
+    retries: int = 0
+    deadline_total: int = 0        # terminal requests that HAD a deadline
+    deadline_met: int = 0          # ... that got a value within it
+
+    @property
+    def slo_attainment(self) -> float:
+        """Deadline-met fraction over requests that carried a deadline
+        (1.0 when none did — nothing promised, nothing missed)."""
+        if self.deadline_total == 0:
+            return 1.0
+        return self.deadline_met / self.deadline_total
+
+
+@dataclass
 class ServiceStats:
     submitted: int = 0
     admitted: int = 0
     rejected: int = 0
     expired: int = 0
+    shed: int = 0                  # overload-shed (lowest-priority-first)
     failed: int = 0
     completed: int = 0
+    retries: int = 0               # extra dispatch attempts
+    requeued: int = 0              # morsels moved off dead/straggler pools
     batches: int = 0
     dispatches: int = 0
     dedup_hits: int = 0
     morsels: int = 0
     steals: int = 0
     steals_per_pool: Tuple[int, ...] = ()
+    dead_pools: Tuple[int, ...] = ()
+    quarantined_pools: Tuple[int, ...] = ()
+    batch_window: int = 0          # adaptive window (serve-loop mode)
+    per_class: Dict[int, ClassStats] = field(default_factory=dict)
     qps: float = 0.0
     latency_p50_ms: float = 0.0
     latency_p95_ms: float = 0.0
@@ -97,26 +164,39 @@ class ServiceStats:
     def describe(self) -> str:
         return (f"completed={self.completed}/{self.submitted} "
                 f"(rejected={self.rejected}, expired={self.expired}, "
-                f"failed={self.failed}) "
+                f"shed={self.shed}, failed={self.failed}) "
                 f"dispatches={self.dispatches} dedup={self.dedup_hits} "
+                f"retries={self.retries} requeued={self.requeued} "
                 f"steals={self.steals} qps={self.qps:.1f} "
                 f"p50={self.latency_p50_ms:.2f}ms "
                 f"p99={self.latency_p99_ms:.2f}ms")
 
 
+def _new_class_counts() -> Dict[str, int]:
+    return {"completed": 0, "failed": 0, "expired_late": 0, "retries": 0,
+            "deadline_total": 0, "deadline_met": 0}
+
+
 class AnalyticsService:
-    """Queue -> batcher -> scheduler -> pools, with latency histograms."""
+    """Queue -> batcher -> scheduler -> pools, with retries + histograms."""
 
     def __init__(self, config: Optional[ServiceConfig] = None):
         self.config = config or ServiceConfig()
-        self.queue = AdmissionQueue(self.config.queue_depth)
+        self.queue = AdmissionQueue(
+            self.config.queue_depth,
+            shed_watermark=self.config.shed_watermark,
+            client_weights=self.config.client_weights)
         self.batcher = QueryBatcher()
         self.scheduler = MorselScheduler(
             n_pools=self.config.n_pools,
             workers_per_pool=self.config.workers_per_pool,
             placement=self.config.placement,
             morsel_rows=self.config.morsel_rows,
-            steal=self.config.steal)
+            steal=self.config.steal,
+            faults=self.config.faults,
+            straggler_threshold=self.config.straggler_threshold,
+            straggler_warmup=self.config.straggler_warmup,
+            hang_after_s=self.config.hang_after_s)
         self._lock = threading.Lock()
         self._next_id = 0
         window = self.config.histogram_window
@@ -124,21 +204,36 @@ class AnalyticsService:
         self._waits: "deque[float]" = deque(maxlen=window)
         self._completed = 0
         self._failed = 0
+        self._expired_late = 0     # expired after dequeue (not queue-counted)
+        self._retries = 0
         self._dispatches = 0       # tasks successfully submitted
         self._dedup_hits = 0       # requests served by a peer's dispatch
-        self._busy_s = 0.0         # union of active-drain time (no idle)
+        self._classes: Dict[int, Dict[str, int]] = {}
+        self._busy_s = 0.0         # union of active-serving time (no idle)
         self._active_drains = 0
         self._busy_start = 0.0
+        # terminal results + pending-request tracking (always maintained;
+        # the serve loop writes here, drain()/result() read)
+        self._results: Dict[int, QueryResult] = {}
+        self._pending: set = set()
+        self._results_cv = threading.Condition(self._lock)
+        self._window = self.config.max_batch
+        # serve-loop lifecycle
+        self._serve_thread: Optional[threading.Thread] = None
+        self._stop_flag = False
+        self._drain_on_stop = True
+        self._wake = threading.Condition()
 
     # -- client side --------------------------------------------------------
     def submit(self, plan: LogicalPlan,
                tables: Mapping[str, Mapping[str, Any]], *,
                context: Optional[ExecutionContext] = None,
                deadline_s: Optional[float] = None,
-               client_id: int = 0) -> Optional[int]:
+               client_id: int = 0, priority: int = 1) -> Optional[int]:
         """Admit one query. Returns the request id, or None when the queue
         is full (backpressure — the caller decides whether to retry).
-        ``deadline_s`` is RELATIVE seconds from now."""
+        ``deadline_s`` is RELATIVE seconds from now; ``priority`` is the
+        service class (higher = dequeued first, shed last)."""
         with self._lock:
             rid = self._next_id
             self._next_id += 1
@@ -147,39 +242,158 @@ class AnalyticsService:
             context=context or ExecutionContext(),
             deadline_s=(None if deadline_s is None
                         else time.monotonic() + deadline_s),
-            client_id=client_id)
-        return rid if self.queue.offer(req) else None
+            client_id=client_id, priority=priority)
+        if not self.queue.offer(req):
+            return None
+        with self._lock:
+            self._pending.add(rid)
+        # the offer may have evicted a lower-priority victim: give it its
+        # terminal result immediately (the serve loop would also collect
+        # it, but submit-then-drain mode must not leave it pending)
+        self._collect_overload_shed(None)
+        with self._wake:
+            self._wake.notify_all()
+        return rid
 
-    # -- serving loop -------------------------------------------------------
-    def drain(self) -> Dict[int, QueryResult]:
+    def result(self, req_id: int,
+               timeout: Optional[float] = None) -> Optional[QueryResult]:
+        """Pop the terminal result for one request, waiting up to
+        ``timeout`` seconds (None = forever). Returns None on timeout."""
+        end = None if timeout is None else time.monotonic() + timeout
+        with self._results_cv:
+            while req_id not in self._results:
+                remaining = None if end is None else end - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    return None
+                self._results_cv.wait(0.05 if remaining is None
+                                      else min(0.05, remaining))
+            return self._results.pop(req_id)
+
+    def take_results(self) -> Dict[int, QueryResult]:
+        """Pop every terminal result recorded so far."""
+        with self._lock:
+            out, self._results = self._results, {}
+            return out
+
+    # -- always-on serving --------------------------------------------------
+    def start(self) -> "AnalyticsService":
+        """Start the background drain loop: admission during service,
+        adaptive batching window, continuous pool health checks."""
+        with self._lock:
+            if self._serve_thread is not None:
+                return self
+            self._stop_flag = False
+            t = threading.Thread(target=self._serve_loop,
+                                 name="svc-drain-loop", daemon=True)
+            self._serve_thread = t
+        t.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the background loop. ``drain=True`` (default) serves the
+        remaining backlog first so no admitted request is left pending."""
+        with self._lock:
+            t = self._serve_thread
+        if t is None:
+            return
+        with self._wake:
+            self._stop_flag = True
+            self._drain_on_stop = drain
+            self._wake.notify_all()
+        t.join()
+        with self._lock:
+            self._serve_thread = None
+            self._stop_flag = False
+
+    @property
+    def serving(self) -> bool:
+        with self._lock:
+            return self._serve_thread is not None
+
+    def _serve_loop(self) -> None:
+        window = AdaptiveBatchWindow(self.config.min_batch,
+                                     self.config.max_batch)
+        while True:
+            self._collect_overload_shed(None)
+            # deadline staleness: shed requests that expired while earlier
+            # rounds were served, instead of dequeuing them late
+            for req in self.queue.shed_expired():
+                self._record(req, expired=True, out=None)
+            reqs, shed = self.queue.take_batch(window.window)
+            for req in shed:
+                self._record(req, expired=True, out=None)
+            if reqs:
+                self._busy_enter()
+                try:
+                    self._serve_round(reqs, None)
+                finally:
+                    self._busy_exit()
+                with self._lock:
+                    self._window = window.observe(len(self.queue))
+                self.scheduler.check_pools()
+                continue
+            self.scheduler.check_pools()
+            with self._lock:
+                self._window = window.observe(0)
+            with self._wake:
+                if self._stop_flag:
+                    if self._drain_on_stop and len(self.queue) > 0:
+                        continue
+                    return
+                if len(self.queue) == 0:
+                    self._wake.wait(self.config.idle_wait_s)
+
+    # -- submit-then-drain serving ------------------------------------------
+    def drain(self, timeout: Optional[float] = None) -> Dict[int, QueryResult]:
         """Serve everything queued AT ENTRY; returns per-request results.
 
-        Pull-based: each round takes up to ``max_batch`` requests, batches
-        them, dispatches every (batch, tables-identity) group as one task,
-        and waits for the round before pulling the next — queue-wait for
-        later requests therefore includes earlier rounds' service time,
-        exactly the open-loop backlog the p99 histogram should see. The
-        backlog is SNAPSHOTTED at entry: requests admitted while this call
-        is serving wait for the next drain, so a submitter keeping pace
-        with the service can never pin drain() (and its result dict) in an
-        unbounded loop."""
+        With the background loop running this instead WAITS until every
+        admitted request has a terminal result (up to ``timeout``) and
+        returns all results accumulated so far.
+
+        Pull-based mode: each round takes up to ``max_batch`` requests,
+        batches them, dispatches every (batch, tables-identity) group as
+        one task, and waits for the round before pulling the next —
+        queue-wait for later requests therefore includes earlier rounds'
+        service time, exactly the open-loop backlog the p99 histogram
+        should see. The backlog is SNAPSHOTTED at entry: requests
+        admitted while this call is serving wait for the next drain, so a
+        submitter keeping pace with the service can never pin drain() in
+        an unbounded loop. Deadlines are re-checked after every round, so
+        a request that expires while an earlier round is being served is
+        shed (counted in ``expired``) instead of dispatched late."""
+        if self.serving:
+            end = None if timeout is None else time.monotonic() + timeout
+            with self._results_cv:
+                while self._pending:
+                    if end is not None and time.monotonic() >= end:
+                        break
+                    self._results_cv.wait(0.05)
+            return self.take_results()
         out: Dict[int, QueryResult] = {}
-        t_drain = time.monotonic()
-        with self._lock:
-            if self._active_drains == 0:
-                self._busy_start = t_drain
-            self._active_drains += 1
+        self._busy_enter()
         try:
             self._drain_snapshot(out)
         finally:
-            with self._lock:
-                self._active_drains -= 1
-                if self._active_drains == 0:
-                    # busy time is the UNION of active-drain intervals:
-                    # overlapping drains must not double-count (qps would
-                    # be understated)
-                    self._busy_s += time.monotonic() - self._busy_start
+            self._busy_exit()
+        out.update(self.take_results())
         return out
+
+    def _busy_enter(self) -> None:
+        t = time.monotonic()
+        with self._lock:
+            if self._active_drains == 0:
+                self._busy_start = t
+            self._active_drains += 1
+
+    def _busy_exit(self) -> None:
+        with self._lock:
+            self._active_drains -= 1
+            if self._active_drains == 0:
+                # busy time is the UNION of active-serving intervals:
+                # overlapping drains must not double-count (qps would
+                # be understated)
+                self._busy_s += time.monotonic() - self._busy_start
 
     def _drain_snapshot(self, out: Dict[int, QueryResult]) -> None:
         remaining = len(self.queue)
@@ -187,80 +401,235 @@ class AnalyticsService:
             round_reqs, shed = self.queue.take_batch(
                 min(self.config.max_batch, remaining))
             remaining -= len(round_reqs) + len(shed)
-            now = time.monotonic()
             for req in shed:
-                out[req.req_id] = QueryResult(
-                    req_id=req.req_id, value=None, expired=True,
-                    queue_wait_s=now - req.submit_t,
-                    latency_s=now - req.submit_t)
+                self._record(req, expired=True, out=out)
             if not round_reqs:
                 if shed:
                     continue        # whole round expired; keep draining
                 break
-            if self.config.batching:
-                batches = self.batcher.group(round_reqs)
-                shares = [s for b in batches for s in b.shares]
+            self._serve_round(round_reqs, out)
+            # deadline staleness fix: requests that expired while THIS
+            # round was being served are shed now, not dispatched late by
+            # a later round
+            for req in self.queue.shed_expired():
+                remaining -= 1
+                self._record(req, expired=True, out=out)
+            for req in self.queue.pop_overload_shed():
+                remaining -= 1
+                self._record(req, shed=True, out=out)
+
+    # -- one serving round --------------------------------------------------
+    def _serve_round(self, round_reqs: List[QueryRequest],
+                     out: Optional[Dict[int, QueryResult]]) -> None:
+        # dispatch-time deadline re-check: take_batch's check can go stale
+        # while the batch waits its turn behind other rounds
+        now = time.monotonic()
+        live = []
+        for req in round_reqs:
+            if req.expired(now):
+                self._record(req, expired=True, late_expired=True, out=out)
             else:
-                shares = [[r] for r in round_reqs]
-            tasks = []
-            for share in shares:
-                rep = share[0]
-                try:
-                    # build/submit can raise eagerly (e.g. a plan naming a
-                    # table its mapping lacks, caught at morsel decompose):
-                    # that failure belongs to THIS share only, never to the
-                    # round's other requests
-                    task = self.scheduler.build_task(rep.plan, rep.tables,
-                                                     rep.context)
-                    self.scheduler.submit(task)
-                except Exception as e:  # noqa: BLE001 — reported per share
-                    now = time.monotonic()
-                    err = f"{type(e).__name__}: {e}"
-                    with self._lock:
-                        self._failed += len(share)
+                live.append(req)
+        if not live:
+            return
+        if self.config.batching:
+            batches = self.batcher.group(live)
+            shares = [s for b in batches for s in b.shares]
+        else:
+            shares = [[r] for r in live]
+        inflight = []
+        for share in shares:
+            # build/submit can raise eagerly (e.g. a plan naming a table
+            # its mapping lacks, caught at morsel decompose, or an
+            # injected build fault): that failure belongs to THIS share
+            # only, never to the round's other requests — and is retried
+            # under the policy before going terminal
+            task, attempt, err = self._dispatch_share(share)
+            if task is None:
+                self._fan_out(share, None, err, attempt, out)
+            else:
+                with self._lock:
+                    # dedup counted once per share, at its FIRST
+                    # successful submit — a share that never dispatched
+                    # deduped nothing
+                    self._dedup_hits += len(share) - 1
+                inflight.append((task, share, attempt))
+        for task, share, attempt in inflight:
+            # fault isolation: one failing dispatch must not discard the
+            # round's other results or poison co-submitted clients
+            self._await_share(task, share, attempt, out)
+
+    def _share_deadline(self, share: List[QueryRequest]) -> Optional[float]:
+        """The share keeps trying while ANY member can still benefit."""
+        if any(r.deadline_s is None for r in share):
+            return None
+        return max(r.deadline_s for r in share)
+
+    def _can_retry(self, attempt: int, deadline: Optional[float],
+                   rep: QueryRequest) -> bool:
+        policy = self.config.retry
+        return (policy is not None
+                and policy.should_retry(attempt, time.monotonic(),
+                                        deadline, key=rep.req_id))
+
+    def _count_retry(self, rep: QueryRequest) -> None:
+        with self._lock:
+            self._retries += 1
+            self._class_counts(rep.priority)["retries"] += 1
+
+    def _try_dispatch(self, rep: QueryRequest):
+        """One build+submit attempt -> (task, None) | (None, error str)."""
+        try:
+            task = self.scheduler.build_task(rep.plan, rep.tables,
+                                             rep.context)
+            self.scheduler.submit(task)
+        except Exception as e:  # noqa: BLE001 — reported per share
+            return None, f"{type(e).__name__}: {e}"
+        with self._lock:
+            self._dispatches += 1
+        return task, None
+
+    def _dispatch_share(self, share: List[QueryRequest]):
+        """Build+submit with retry/backoff -> (task|None, attempts, err)."""
+        rep = share[0]
+        deadline = self._share_deadline(share)
+        attempt = 0
+        while True:
+            attempt += 1
+            task, err = self._try_dispatch(rep)
+            if task is not None:
+                return task, attempt, None
+            if not self._can_retry(attempt, deadline, rep):
+                return None, attempt, err
+            self._count_retry(rep)
+            time.sleep(self.config.retry.backoff_s(attempt, key=rep.req_id))
+
+    def _await_share(self, task, share: List[QueryRequest], attempt: int,
+                     out: Optional[Dict[int, QueryResult]]) -> None:
+        """Wait for a dispatched share; retry failed/hung dispatches under
+        the policy (per-request deadline respected across attempts)."""
+        rep = share[0]
+        deadline = self._share_deadline(share)
+        while True:
+            error = None
+            if task is not None:
+                value, error, deadline_hit = self._await_task(task, deadline)
+                if error is None:
+                    self._fan_out(share, task, None, attempt, out,
+                                  value=value)
+                    return
+                if deadline_hit:
+                    # every member's deadline passed mid-flight (the share
+                    # deadline is the max): expired, not failed
                     for req in share:
-                        out[req.req_id] = QueryResult(
-                            req_id=req.req_id, value=None, error=err,
-                            queue_wait_s=req.dispatch_t - req.submit_t,
-                            latency_s=now - req.submit_t,
-                            batch_size=len(share))
-                    continue
-                tasks.append((task, share))
-            with self._lock:
-                # counted only for shares whose submit SUCCEEDED — a share
-                # that failed to build dispatched nothing and deduped nothing
-                self._dispatches += len(tasks)
-                self._dedup_hits += sum(len(s) - 1 for _, s in tasks)
-            for task, share in tasks:
-                # fault isolation: one failing dispatch must not discard
-                # the round's other results or poison co-submitted clients
-                error = None
-                try:
-                    value = task.wait()
-                except Exception as e:  # noqa: BLE001 — reported per request
-                    value, error = None, f"{type(e).__name__}: {e}"
-                # latency uses the task's own completion stamp, not this
-                # loop's join order (a fast query must not inherit a slow
-                # peer's wait-loop position)
-                done = task.done_t or time.monotonic()
-                for req in share:
-                    res = QueryResult(
-                        req_id=req.req_id,
-                        # shallow-copy per client: deduplicated peers must
-                        # not see each other's in-place edits (the arrays
-                        # inside are immutable and stay shared)
-                        value=dict(value) if value is not None else None,
-                        queue_wait_s=req.dispatch_t - req.submit_t,
-                        latency_s=done - req.submit_t,
-                        batch_size=len(share), error=error)
-                    out[req.req_id] = res
-                    with self._lock:
-                        if error is None:
-                            self._completed += 1
-                            self._latencies.append(res.latency_s)
-                            self._waits.append(res.queue_wait_s)
-                        else:
-                            self._failed += 1
+                        self._record(req, expired=True, late_expired=True,
+                                     attempts=attempt,
+                                     batch_size=len(share), out=out)
+                    return
+            if not self._can_retry(attempt, deadline, rep):
+                self._fan_out(share, task, error, attempt, out)
+                return
+            self._count_retry(rep)
+            time.sleep(self.config.retry.backoff_s(attempt, key=rep.req_id))
+            attempt += 1
+            # re-dispatch: whole-plan tasks are idempotent (same compiled
+            # executable, same inputs) and morsel partials merge in morsel
+            # order — a retried dispatch returns the same result the
+            # failed one would have
+            task, error = self._try_dispatch(rep)
+
+    def _await_task(self, task, deadline: Optional[float]):
+        """Tick-wait on a task, sweeping pool health between ticks.
+
+        Returns (value, None, False) on success; (None, err, False) on a
+        retryable failure (exception or hang-budget timeout); (None, err,
+        True) when the share's deadline passed while waiting."""
+        start = time.monotonic()
+        hang = self.config.hang_timeout_s
+        while True:
+            try:
+                return task.wait(timeout=self.config.wait_tick_s), None, False
+            except TimeoutError:
+                # the tick path is where dead/straggler pools get noticed:
+                # quarantine + requeue lets the SAME task finish on
+                # surviving pools without burning a retry attempt
+                self.scheduler.check_pools()
+                now = time.monotonic()
+                if deadline is not None and now > deadline:
+                    return None, "deadline exceeded in flight", True
+                if hang is not None and now - start > hang:
+                    return (None, f"TimeoutError: dispatch exceeded "
+                            f"hang budget {hang}s", False)
+            except Exception as e:  # noqa: BLE001 — retried, then reported
+                return None, f"{type(e).__name__}: {e}", False
+
+    # -- terminal-result recording ------------------------------------------
+    def _fan_out(self, share: List[QueryRequest], task, error: Optional[str],
+                 attempts: int, out: Optional[Dict[int, QueryResult]],
+                 value=None) -> None:
+        # latency uses the task's own completion stamp, not this loop's
+        # join order (a fast query must not inherit a slow peer's
+        # wait-loop position)
+        done = (task.done_t if task is not None and task.done_t
+                else time.monotonic())
+        for req in share:
+            self._record(req, value=value, error=error, attempts=attempts,
+                         batch_size=len(share), done=done, out=out)
+
+    def _class_counts(self, priority: int) -> Dict[str, int]:
+        return self._classes.setdefault(priority, _new_class_counts())
+
+    def _collect_overload_shed(
+            self, out: Optional[Dict[int, QueryResult]]) -> None:
+        for req in self.queue.pop_overload_shed():
+            self._record(req, shed=True, out=out)
+
+    def _record(self, req: QueryRequest, *, value=None,
+                error: Optional[str] = None, expired: bool = False,
+                shed: bool = False, late_expired: bool = False,
+                attempts: int = 1, batch_size: int = 1,
+                done: Optional[float] = None,
+                out: Optional[Dict[int, QueryResult]] = None) -> None:
+        """The single terminal-result sink: stats, SLO, result store."""
+        done = time.monotonic() if done is None else done
+        wait = ((req.dispatch_t if req.dispatch_t else done) - req.submit_t)
+        res = QueryResult(
+            req_id=req.req_id,
+            # shallow-copy per client: deduplicated peers must not see
+            # each other's in-place edits (the arrays inside are
+            # immutable and stay shared)
+            value=dict(value) if value is not None else None,
+            queue_wait_s=max(0.0, wait),
+            latency_s=max(0.0, done - req.submit_t),
+            batch_size=batch_size, expired=expired, shed=shed,
+            attempts=attempts, priority=req.priority, error=error)
+        with self._lock:
+            cls = self._class_counts(req.priority)
+            if error is not None:
+                self._failed += 1
+                cls["failed"] += 1
+            elif expired:
+                if late_expired:
+                    # queue-side sheds were already counted by the queue;
+                    # post-dequeue expiries are ours to count
+                    self._expired_late += 1
+                    cls["expired_late"] += 1
+            elif not shed:
+                self._completed += 1
+                cls["completed"] += 1
+                self._latencies.append(res.latency_s)
+                self._waits.append(res.queue_wait_s)
+            if req.deadline_s is not None:
+                cls["deadline_total"] += 1
+                if error is None and not expired and not shed \
+                        and done <= req.deadline_s:
+                    cls["deadline_met"] += 1
+            self._pending.discard(req.req_id)
+            if out is None:
+                self._results[req.req_id] = res
+            self._results_cv.notify_all()
+        if out is not None:
+            out[req.req_id] = res
 
     # -- stats --------------------------------------------------------------
     def stats(self) -> ServiceStats:
@@ -272,18 +641,39 @@ class AnalyticsService:
             waits = list(self._waits)
             completed = self._completed
             failed = self._failed
+            expired_late = self._expired_late
+            retries = self._retries
             dispatches = self._dispatches
             dedup_hits = self._dedup_hits
+            window = self._window
+            classes = {p: dict(c) for p, c in self._classes.items()}
             busy = self._busy_s
-            if self._active_drains > 0:   # include the in-progress drain
+            if self._active_drains > 0:   # include the in-progress round
                 busy += time.monotonic() - self._busy_start
+        per_class: Dict[int, ClassStats] = {}
+        for p, c in qs.by_class.items():
+            per_class[p] = ClassStats(
+                priority=p, admitted=c["admitted"], rejected=c["rejected"],
+                expired=c["expired"], shed=c["shed"])
+        for p, c in classes.items():
+            cs = per_class.setdefault(p, ClassStats(priority=p))
+            cs.completed = c["completed"]
+            cs.failed = c["failed"]
+            cs.expired += c["expired_late"]
+            cs.retries = c["retries"]
+            cs.deadline_total = c["deadline_total"]
+            cs.deadline_met = c["deadline_met"]
         return ServiceStats(
             submitted=qs.submitted, admitted=qs.admitted,
-            rejected=qs.rejected_full, expired=qs.expired,
-            failed=failed, completed=completed, batches=bs.batches,
+            rejected=qs.rejected_full, expired=qs.expired + expired_late,
+            shed=qs.shed_overload, failed=failed, completed=completed,
+            retries=retries, requeued=ss.requeued, batches=bs.batches,
             dispatches=dispatches, dedup_hits=dedup_hits,
             morsels=ss.morsels_dispatched, steals=ss.steals,
             steals_per_pool=ss.steals_per_pool,
+            dead_pools=ss.dead_pools,
+            quarantined_pools=ss.quarantined_pools,
+            batch_window=window, per_class=per_class,
             qps=(completed / busy) if busy > 0 else 0.0,
             latency_p50_ms=_pct(lat, 50) * 1e3,
             latency_p95_ms=_pct(lat, 95) * 1e3,
@@ -294,7 +684,12 @@ class AnalyticsService:
 
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:
-        self.scheduler.close()
+        """Stop serving and join every worker; a wedged pool raises
+        WorkerLeakError instead of leaking daemon threads invisibly."""
+        self.stop()
+        unjoined = self.scheduler.close(timeout=self.config.close_timeout_s)
+        if unjoined:
+            raise WorkerLeakError(unjoined)
 
     def __enter__(self) -> "AnalyticsService":
         return self

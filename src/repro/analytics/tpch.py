@@ -407,7 +407,7 @@ def get_plan(name: str, executor: str) -> Callable:
 def submit_query(service, name: str, data, *, executor: str = "xla",
                  context: Optional[planner.ExecutionContext] = None,
                  deadline_s: Optional[float] = None,
-                 client_id: int = 0) -> Optional[int]:
+                 client_id: int = 0, priority: int = 1) -> Optional[int]:
     """Admit one of the five TPC-H logical plans into an AnalyticsService.
 
     The concurrent-serving counterpart of ``run_query``: same query names,
@@ -419,7 +419,8 @@ def submit_query(service, name: str, data, *, executor: str = "xla",
     tables = data.as_jax() if isinstance(data, TPCHData) else data
     ctx = context or planner.ExecutionContext(executor=executor)
     return service.submit(LOGICAL_QUERIES[name], tables, context=ctx,
-                          deadline_s=deadline_s, client_id=client_id)
+                          deadline_s=deadline_s, client_id=client_id,
+                          priority=priority)
 
 
 def run_query(name: str, data, *, executor: str = "xla",

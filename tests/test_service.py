@@ -398,3 +398,258 @@ def test_plan_cache_thread_safe_under_concurrency(data):
     lookups = (info.hits - before.hits) + (info.misses - before.misses)
     assert lookups == 8 * calls_per_thread
     assert info.currsize <= 4
+
+
+# ---------------------------------------------------------------------------
+# priority classes, weighted fairness, overload shedding
+# ---------------------------------------------------------------------------
+def test_priority_and_weighted_fair_dequeue():
+    """Strict priority across classes; weighted-fair round-robin across
+    clients within a class (a weight-2 client gets two slots per turn)."""
+    from repro.analytics.service import AdmissionQueue
+    q = AdmissionQueue(max_depth=64, client_weights={1: 2})
+    rid = 0
+    for prio, cid, n in [(0, 0, 3), (2, 0, 2), (1, 0, 4), (1, 1, 4)]:
+        for _ in range(n):
+            assert q.offer(QueryRequest(rid, None, {}, None,
+                                        client_id=cid, priority=prio))
+            rid += 1
+    live, shed = q.take_batch(13)
+    assert not shed
+    order = [(r.priority, r.client_id) for r in live]
+    # class 2 first, then class 1 interleaved 1:2 by weight, class 0 last
+    assert order[:2] == [(2, 0), (2, 0)]
+    assert order[-3:] == [(0, 0)] * 3
+    mid = order[2:10]                            # the class-1 segment
+    assert mid.count((1, 0)) == 4 and mid.count((1, 1)) == 4
+    # weight 2 => client 1 takes two consecutive slots per turn
+    assert mid[:3] in ([(1, 0), (1, 1), (1, 1)], [(1, 1), (1, 1), (1, 0)])
+    st = q.stats()
+    assert st.admitted == st.dequeued + st.expired + st.shed_overload \
+        + st.depth
+
+
+def test_overload_shedding_lowest_priority_first():
+    from repro.analytics.service import AdmissionQueue
+    q = AdmissionQueue(max_depth=8, shed_watermark=4)
+    for rid in range(4):
+        assert q.offer(QueryRequest(rid, None, {}, None, priority=0))
+    # a high-priority arrival past the watermark evicts a class-0 victim
+    assert q.offer(QueryRequest(100, None, {}, None, priority=2))
+    victims = q.pop_overload_shed()
+    assert [v.req_id for v in victims] == [3]    # newest of the flooder
+    # an arrival that is itself lowest-class gets backpressure, not a slot
+    assert not q.offer(QueryRequest(101, None, {}, None, priority=0))
+    st = q.stats()
+    assert st.shed_overload == 1 and st.rejected_full == 1
+    assert st.admitted == st.dequeued + st.expired + st.shed_overload \
+        + st.depth
+
+
+def test_service_overload_sheds_and_reports(data):
+    """Past the watermark, low-priority queued work is evicted for
+    high-priority arrivals — and still gets a terminal (shed) result."""
+    ctx = ExecutionContext(executor="cost")
+    run_query("q1", data, context=ctx)
+    run_query("q6", data, context=ctx)
+    cfg = ServiceConfig(n_pools=1, workers_per_pool=1, queue_depth=8,
+                        shed_watermark=4)
+    with AnalyticsService(cfg) as svc:
+        low = [submit_query(svc, "q6", data, context=ctx, priority=0,
+                            client_id=0) for _ in range(4)]
+        high = [submit_query(svc, "q1", data, context=ctx, priority=2,
+                             client_id=1) for _ in range(2)]
+        results = svc.drain()
+        st = svc.stats()
+    assert all(r is not None for r in low + high)
+    shed = [r for r in low if results[r].shed]
+    assert len(shed) == 2 and st.shed == 2
+    assert all(results[r].value is not None for r in high)
+    assert st.completed == 4
+    assert st.per_class[0].shed == 2 and st.per_class[2].completed == 2
+    assert st.admitted == st.completed + st.failed + st.expired + st.shed
+
+
+def test_admission_queue_concurrent_conservation():
+    """Hammer offer/take_batch/shed_expired from concurrent threads: every
+    admitted request must come out exactly once (dequeued, expired, or
+    overload-shed) and the stats must conserve exactly — no drops, no
+    double-counts, no torn snapshots."""
+    from repro.analytics.service import AdmissionQueue
+    q = AdmissionQueue(max_depth=32, shed_watermark=32)
+    n_producers, per_producer = 4, 300
+    offered_ok = [0] * n_producers
+    taken, stop = [], threading.Event()
+    take_lock = threading.Lock()
+
+    def produce(pid):
+        now = time.monotonic()
+        for i in range(per_producer):
+            # ~1/5 requests arrive already expired; priorities cycle
+            dl = (now - 1.0) if i % 5 == 0 else None
+            req = QueryRequest(pid * 100000 + i, None, {}, None,
+                               deadline_s=dl, client_id=pid,
+                               priority=i % 3)
+            while not q.offer(req):           # bounded: spin on pushback
+                time.sleep(0.0002)
+            offered_ok[pid] += 1
+
+    def consume():
+        while not (stop.is_set() and len(q) == 0):
+            live, expired = q.take_batch(7)
+            swept = q.shed_expired()
+            victims = q.pop_overload_shed()
+            with take_lock:
+                taken.extend(live + expired + swept + victims)
+            if not (live or expired or swept or victims):
+                time.sleep(0.0002)
+
+    producers = [threading.Thread(target=produce, args=(p,))
+                 for p in range(n_producers)]
+    consumers = [threading.Thread(target=consume) for _ in range(3)]
+    for t in producers + consumers:
+        t.start()
+    for t in producers:
+        t.join()
+    stop.set()
+    for t in consumers:
+        t.join()
+    st = q.stats()
+    assert sum(offered_ok) == st.admitted == n_producers * per_producer
+    # exact conservation: admitted == taken out (by any path) + remaining
+    assert st.admitted == len(taken) + st.depth and st.depth == 0
+    assert len({r.req_id for r in taken}) == len(taken)  # exactly once
+    assert st.admitted == st.dequeued + st.expired + st.shed_overload \
+        + st.depth
+    per_cls = st.by_class
+    for p, c in per_cls.items():
+        assert c["admitted"] == c["dequeued"] + c["expired"] + c["shed"], p
+
+
+# ---------------------------------------------------------------------------
+# drain deadline staleness + worker-leak reporting
+# ---------------------------------------------------------------------------
+def test_drain_sheds_requests_that_expire_mid_drain(data):
+    """A request whose deadline passes while an EARLIER round is being
+    served must be shed (counted expired), never dispatched late."""
+    from repro.analytics.service import ServiceFaultInjector
+    ctx = ExecutionContext(executor="cost")
+    run_query("q6", data, context=ctx)
+    run_query("q1", data, context=ctx)
+    faults = ServiceFaultInjector(straggle_pool=(0, 0.4))  # slow round 1
+    cfg = ServiceConfig(n_pools=1, workers_per_pool=1, max_batch=1,
+                        faults=faults, retry=None)
+    with AnalyticsService(cfg) as svc:
+        r1 = submit_query(svc, "q6", data, context=ctx)
+        r2 = submit_query(svc, "q1", data, context=ctx, deadline_s=0.1)
+        results = svc.drain()
+        st = svc.stats()
+    assert results[r1].value is not None
+    assert results[r2].expired and results[r2].value is None
+    assert st.expired == 1
+    assert st.dispatches == 1                    # r2 never reached a pool
+
+
+def test_close_reports_unjoined_workers(data):
+    """close() must name workers it could not join instead of silently
+    leaking them; AnalyticsService.close() raises WorkerLeakError."""
+    from repro.analytics.service import ServiceFaultInjector, WorkerLeakError
+    ctx = ExecutionContext(executor="cost")
+    run_query("q6", data, context=ctx)
+    faults = ServiceFaultInjector(straggle_pool=(0, 1.5))
+    cfg = ServiceConfig(n_pools=1, workers_per_pool=1, faults=faults,
+                        retry=None, close_timeout_s=0.1)
+    svc = AnalyticsService(cfg)
+    rid = submit_query(svc, "q6", data, context=ctx)
+    t = threading.Thread(target=svc.drain, daemon=True)
+    t.start()
+    time.sleep(0.3)                  # worker is now mid-straggle
+    with pytest.raises(WorkerLeakError) as ei:
+        svc.close()
+    assert "pool0" in str(ei.value) and ei.value.unjoined
+    t.join(timeout=30)
+    assert rid is not None
+
+
+# ---------------------------------------------------------------------------
+# always-on serving: background drain loop + adaptive batching window
+# ---------------------------------------------------------------------------
+def test_adaptive_batch_window_grows_and_shrinks():
+    from repro.analytics.service import AdaptiveBatchWindow
+    w = AdaptiveBatchWindow(1, 16)
+    assert w.window == 1
+    assert w.observe(8) == 2 and w.observe(8) == 4
+    assert w.observe(100) == 8 and w.observe(100) == 16
+    assert w.observe(100) == 16                  # clamped at max
+    assert w.observe(3) == 16                    # backlog <= window: hold
+    assert w.observe(0) == 8 and w.observe(0) == 4
+    for _ in range(8):
+        w.observe(0)
+    assert w.window == 1                         # clamped at min
+    with pytest.raises(ValueError):
+        AdaptiveBatchWindow(0, 4)
+
+
+def test_always_on_serve_loop(data):
+    """start() serves admissions in the background: results arrive via
+    result()/drain() without an explicit drain round per burst, and the
+    served values stay bit-identical to serial."""
+    ctx = ExecutionContext(executor="cost")
+    refs = {n: run_query(n, data, context=ctx) for n in LOGICAL_QUERIES}
+    cfg = ServiceConfig(n_pools=2, workers_per_pool=2, min_batch=1,
+                        max_batch=8)
+    with AnalyticsService(cfg) as svc:
+        svc.start()
+        assert svc.serving
+        first = submit_query(svc, "q6", data, context=ctx)
+        res = svc.result(first, timeout=60.0)
+        assert res is not None and res.error is None
+        _assert_bit_identical(res.value, refs["q6"], "loop/first")
+        # a burst while the loop is live: drain() waits for quiescence
+        rids = {n: submit_query(svc, n, data, context=ctx)
+                for n in LOGICAL_QUERIES}
+        results = svc.drain(timeout=120.0)
+        svc.stop()
+        assert not svc.serving
+        st = svc.stats()
+    for name, rid in rids.items():
+        _assert_bit_identical(results[rid].value, refs[name], f"loop/{name}")
+    assert st.completed == len(LOGICAL_QUERIES) + 1
+    assert st.admitted == st.completed + st.failed + st.expired + st.shed
+
+
+def test_stop_drains_backlog(data):
+    """stop() (default drain=True) serves everything already admitted
+    before the loop exits — no request is left without a result."""
+    ctx = ExecutionContext(executor="cost")
+    run_query("q6", data, context=ctx)
+    with AnalyticsService(ServiceConfig(n_pools=1,
+                                        workers_per_pool=1)) as svc:
+        svc.start()
+        rids = [submit_query(svc, "q6", data, context=ctx)
+                for _ in range(6)]
+        svc.stop()
+        results = svc.take_results()
+        st = svc.stats()
+    assert sorted(results) == sorted(rids)
+    assert st.completed == len(rids)
+
+
+def test_per_class_slo_attainment(data):
+    ctx = ExecutionContext(executor="cost")
+    run_query("q6", data, context=ctx)
+    with AnalyticsService(ServiceConfig(n_pools=1,
+                                        workers_per_pool=1)) as svc:
+        met = [submit_query(svc, "q6", data, context=ctx, priority=2,
+                            deadline_s=120.0) for _ in range(3)]
+        missed = submit_query(svc, "q6", data, context=ctx, priority=0,
+                              deadline_s=-1.0)   # expired on arrival
+        results = svc.drain()
+        st = svc.stats()
+    assert all(results[r].value is not None for r in met)
+    assert results[missed].expired
+    assert st.per_class[2].deadline_total == 3
+    assert st.per_class[2].slo_attainment == 1.0
+    assert st.per_class[0].deadline_total == 1
+    assert st.per_class[0].slo_attainment == 0.0
+    assert st.per_class[0].expired == 1
