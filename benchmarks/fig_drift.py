@@ -1,0 +1,88 @@
+"""Estimator-drift summary: how far the planner's static row estimates
+sit from observed execution (ISSUE 7 telemetry, beyond-paper).
+
+Runs two representative plans under telemetry whose runtime behavior the
+static cost model cannot see from shapes alone:
+
+  * ``selective_join`` — a highly selective filter ahead of a join: the
+    planner prices the join and the downstream aggregate for the full
+    scan cardinality, but only ~1% of rows survive;
+  * ``sparse_groups`` — a grouped aggregate whose declared group domain
+    is mostly unoccupied (keys drawn from a small subset).
+
+Rows:
+  fig_drift_<plan>           tracked end-to-end latency (us) — the cost
+                             of running WITH telemetry enabled
+  fig_drift_report_rows      drifting (node, stat) entries in the global
+                             drift report — gated against an ABSOLUTE
+                             floor of 1.0 in run.py: the benchmark must
+                             demonstrate the detector actually fires
+  fig_drift_max_dev_<kind>   max |observed/estimated| deviation ratio
+                             per Decision kind (>= 1.0; 1.0 = estimates
+                             exact) — the ``drift_summary()`` rows the
+                             --json recording carries for the trajectory
+
+The distributed drift axes (Exchange moved rows, Compact occupancy) need
+a mesh and are gated by scripts/drift_gate.py instead; this module stays
+in-process so the drift report is produced on every CI sweep.
+"""
+import time
+
+import numpy as np
+
+
+def _tables(rng, n, d):
+    import jax.numpy as jnp
+    return {
+        "fact": {"fk": jnp.asarray(rng.randint(0, d, n).astype(np.int32)),
+                 "k": jnp.asarray(rng.randint(0, 40, n).astype(np.int32)),
+                 "v": jnp.asarray(rng.rand(n).astype(np.float32))},
+        "dim": {"pk": jnp.asarray(np.arange(d, dtype=np.int32)),
+                "dv": jnp.asarray(rng.rand(d).astype(np.float32))},
+    }
+
+
+def run():
+    import jax
+    from repro.analytics import plan as L
+    from repro.analytics import planner, telemetry
+
+    rng = np.random.RandomState(0)
+    n, d, g = 1 << 14, 256, 512
+    tables = _tables(rng, n, d)
+    plans = [
+        ("selective_join", L.LogicalPlan(
+            L.scan("fact").filter(L.col("v") < 0.01)
+            .join(L.scan("dim"), "fk", "pk", {"dv": "dv"})
+            .aggregate("fk", d, c=("count", "v"), m=("max", "dv")),
+            ("c", "m"))),
+        # keys only occupy 40 of the declared 512 groups
+        ("sparse_groups", L.LogicalPlan(
+            L.scan("fact").aggregate("k", g, s=("sum", "v"),
+                                     q=("median", "v")), ("s", "q"))),
+    ]
+    prev = planner.current_cost_profile()
+    planner.set_cost_profile(None)
+    telemetry.registry().clear()
+    rows = []
+    try:
+        with telemetry.recording():
+            ctx = planner.ExecutionContext(executor="cost")
+            for name, p in plans:
+                cp = planner.compile_plan(p, tables, ctx)
+                jax.block_until_ready(list(cp(tables).values()))  # warm
+                t0 = time.perf_counter()
+                jax.block_until_ready(list(cp(tables).values()))
+                rows.append((f"fig_drift_{name}",
+                             (time.perf_counter() - t0) * 1e6,
+                             "telemetry-tracked local run"))
+        report = telemetry.registry().drift_report()
+        summary = telemetry.registry().drift_summary()
+    finally:
+        planner.set_cost_profile(prev)
+    rows.append(("fig_drift_report_rows", float(len(report)),
+                 "drifting (node.stat) entries — floor >= 1"))
+    for kind in sorted(summary):
+        rows.append((f"fig_drift_max_dev_{kind}", float(summary[kind]),
+                     "max obs/est deviation ratio (1.0 = exact)"))
+    return rows

@@ -14,6 +14,10 @@ Prints ``name,us_per_call,derived`` CSV (assignment format). Modules:
          open-loop workload with a mid-run pool kill; per-class SLO and
          the degraded/healthy QPS ratio (absolute floor >= 0.50, gated
          whenever the module runs)
+  fig_drift  estimator-drift summary: representative plans run under
+         telemetry; reports drifting (node, stat) entries (absolute
+         floor >= 1 — the detector must fire) and the max
+         observed/estimated deviation ratio per Decision kind
   roofline  the dry-run (arch x shape x mesh) table
 """
 import argparse
@@ -42,8 +46,8 @@ def main() -> None:
                             fig3_fig4_thread_placement,
                             fig5_placement_policies,
                             fig6_workload_allocators, fig7_index_join,
-                            fig8_fig9_tpch, fig_service_throughput,
-                            roofline_table)
+                            fig8_fig9_tpch, fig_drift,
+                            fig_service_throughput, roofline_table)
     from types import SimpleNamespace
     modules = [
         ("fig2", fig2_allocator_microbench),
@@ -56,6 +60,7 @@ def main() -> None:
         ("fig_service", fig_service_throughput),
         ("fig_service_faults",
          SimpleNamespace(run=fig_service_throughput.run_faults)),
+        ("fig_drift", fig_drift),
         ("roofline", roofline_table),
     ]
     if args.skip_slow:
@@ -108,8 +113,11 @@ CHECKED_THROUGHPUT_ROWS = ("fig_service_q1mix_batched_qps",)
 QPS_CHECK_THRESHOLD = 1.0 / 0.75
 # Rows gated against an ABSOLUTE floor (no baseline needed): checked on
 # every run that collects them. The degraded-QPS ratio asserts the
-# service keeps >= 50% of healthy throughput after losing a pool.
-CHECKED_FLOOR_ROWS = {"fig_service_degraded_qps_ratio": 0.50}
+# service keeps >= 50% of healthy throughput after losing a pool; the
+# drift-report row asserts the telemetry detector actually fires on the
+# representative mis-estimated plans (a drift report is PRODUCED).
+CHECKED_FLOOR_ROWS = {"fig_service_degraded_qps_ratio": 0.50,
+                      "fig_drift_report_rows": 1.0}
 
 
 def check_floors(collected: dict) -> bool:

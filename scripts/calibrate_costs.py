@@ -29,6 +29,17 @@ the MEASURED crossover build size B* gives
 which is written into the profile so planner.choose_dist_join flips
 strategies where this hardware actually flips.
 
+With ``--refresh PROFILE.json`` it instead runs the TELEMETRY loop: load
+the profile, execute a representative recorded workload (a selective-
+probe partitioned join on a fake-device mesh — the shape whose runtime
+selectivity static costing cannot see), and rewrite the profile's
+drifting entries from the observed stats via
+``telemetry.refresh_profile`` (``dist_route_factor`` from observed vs
+estimated moved rows, ``compact_margin`` from observed Compact
+occupancy; ``dense_group_limit`` is never auto-refreshed). Entries
+within the drift band are left untouched — refresh complements the
+microbenchmark fits, it does not replace them.
+
 With ``--sweep-groups`` it additionally sweeps the GROUP DOMAIN and fits
 the two remaining hand-set constants:
 
@@ -45,6 +56,7 @@ the two remaining hand-set constants:
     PYTHONPATH=src python scripts/calibrate_costs.py --out cost_profile.json
     PYTHONPATH=src python scripts/calibrate_costs.py --dist --out cost_profile.json
     PYTHONPATH=src python scripts/calibrate_costs.py --sweep-groups --out cost_profile.json
+    PYTHONPATH=src python scripts/calibrate_costs.py --refresh cost_profile.json
     >>> planner.load_cost_profile("cost_profile.json")
 """
 from __future__ import annotations
@@ -171,6 +183,71 @@ def sweep_groups(rows: int, groups_sweep, cols: int, mode,
     }
 
 
+def refresh_from_telemetry(path: str, devices: int) -> None:
+    """Rewrite ``path``'s drifting cost entries from observed telemetry.
+
+    Must run before jax is imported anywhere in the process: it forces
+    ``devices`` fake host devices so the recorded workload exercises the
+    real distributed Exchange/Compact lowerings."""
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={devices}").strip()
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro.analytics import plan as L
+    from repro.analytics import planner, telemetry
+
+    from repro.core.config import PlacementPolicy
+
+    profile = planner.load_cost_profile(path)
+    rng = np.random.RandomState(0)
+    n_rows = ((1 << 12) // devices) * devices
+    dim_rows = 512
+    tables = {
+        "fact": {"fk": jnp.asarray(
+                     rng.randint(0, dim_rows, n_rows).astype(np.int32)),
+                 "fv": jnp.asarray(rng.rand(n_rows).astype(np.float32))},
+        "dim": {"pk": jnp.asarray(np.arange(dim_rows, dtype=np.int32)),
+                "dv": jnp.asarray(rng.rand(dim_rows).astype(np.float32))},
+    }
+    # selective probe ahead of a forced-partitioned join: the routed
+    # traffic the profile's dist_route_factor prices, observed exactly
+    p = L.LogicalPlan(
+        L.scan("fact").filter(L.col("fv") < 0.1)
+        .join(L.scan("dim"), "fk", "pk", {"dv": "dv"})
+        .aggregate("fk", dim_rows, c=("count", "fv"), x=("max", "dv")),
+        ("c", "x"))
+    mesh = Mesh(np.array(jax.devices()[:devices]), ("data",))
+    ctx = planner.ExecutionContext(executor="cost", mesh=mesh,
+                                   policy=PlacementPolicy.INTERLEAVE,
+                                   dist_join="partitioned")
+    telemetry.registry().clear()
+    with telemetry.recording():
+        planner.compile_plan(p, tables, ctx)(tables)
+    refreshed = telemetry.refresh_profile(profile)
+    planner.set_cost_profile(None)
+    if refreshed is profile:
+        print(f"refresh: no cost entry drifted outside the "
+              f"{telemetry.DRIFT_BAND}x band; {path} left unchanged")
+        return
+    with open(path) as f:
+        raw = json.load(f)
+    updates = {}
+    for entry in ("dist_route_factor", "compact_margin"):
+        new = getattr(refreshed, entry)
+        if new is not None and new != getattr(profile, entry):
+            updates[entry] = new
+    raw.update(updates)
+    raw["refreshed_from"] = "telemetry"
+    with open(path, "w") as f:
+        json.dump(raw, f, indent=2)
+        f.write("\n")
+    print(f"refresh: rewrote {sorted(updates)} in {path}: "
+          + ", ".join(f"{k}={v}" for k, v in sorted(updates.items())))
+
+
 def time_fn(fn, *, warmup: int = 2, iters: int = 5) -> float:
     """Median seconds per call, results blocked."""
     import jax
@@ -209,6 +286,12 @@ def main() -> None:
                     default=[1.0, 1.25, 1.5, 2.0, 3.0],
                     help="candidate partition capacity factors "
                          "(--sweep-groups fits the smallest overflow-free)")
+    ap.add_argument("--refresh", metavar="PROFILE.json", default=None,
+                    help="telemetry-refresh mode: run a recorded "
+                         "representative workload on a fake-device mesh and "
+                         "rewrite the profile's drifting entries "
+                         "(dist_route_factor / compact_margin) from the "
+                         "observed stats; all other sweeps are skipped")
     ap.add_argument("--dist-devices", type=int, default=8)
     ap.add_argument("--dist-probe", type=int, default=1 << 17,
                     help="probe rows for the distributed-join sweep")
@@ -217,6 +300,11 @@ def main() -> None:
                     help="build-side sizes to sweep for the crossover")
     ap.add_argument("--out", default="cost_profile.json")
     args = ap.parse_args()
+
+    if args.refresh:
+        # must precede ANY jax import (it forces fake host devices)
+        refresh_from_telemetry(args.refresh, min(args.dist_devices, 4))
+        return
 
     import functools
 

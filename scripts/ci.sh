@@ -26,7 +26,9 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 BASELINE="${1:-bench_baseline.json}"
-export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# "." puts the repo root on the path so `from benchmarks import ...`
+# resolves when run.py is invoked as a script (sys.path[0] is benchmarks/)
+export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 
 # named gate: the physical-plan golden snapshots (explain_physical must
 # stay string-stable; a drift here means the lowering/rewrites changed —
@@ -34,6 +36,13 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q tests/test_explain_golden.py
 
 python -m pytest -x -q
+
+# named gate: the telemetry feedback loop — a deliberately mis-priced
+# cost profile must (1) produce a drift report after ONE recorded
+# execution, (2) flip its broadcast-join Decision to partitioned on the
+# next plan-cache hit with bit-identical results, and (3) be corrected by
+# refresh_profile. The script configures its own 4 fake host devices.
+python scripts/drift_gate.py
 
 if [ -f "$BASELINE" ]; then
     python benchmarks/run.py --skip-slow --json BENCH_ci.json --check "$BASELINE"

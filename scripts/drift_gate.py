@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""CI gate for the telemetry -> cost-model feedback loop (ROADMAP item 3).
+
+Runs the ISSUE-7 acceptance scenario end to end on a 4-fake-device mesh
+and exits non-zero if any link of the loop is broken:
+
+  1. a deliberately MIS-PRICED CostProfile (dist_route_factor 2x too
+     high) makes the static cost model pick a broadcast join for a
+     selective-probe query where partitioned is right;
+  2. ONE telemetry-recorded execution produces a non-empty drift report
+     (the probe filter keeps ~10% of rows — invisible to static costing);
+  3. the next plan-cache HIT re-lowers with the observed alive rows and
+     flips the Decision to partitioned, with results bit-identical to a
+     fault-free run (only the lowering changed, never the answer);
+  4. ``refresh_profile()`` pulls the mis-priced constant back: lowering
+     fresh with the refreshed profile picks partitioned STATICALLY —
+     the profile was corrected within one execution.
+
+The script configures its own fake host devices, so it must run as a
+standalone process (scripts/ci.sh invokes it after the test suite):
+
+    PYTHONPATH=src python scripts/drift_gate.py
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4"
+                           ).strip()
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.join(_ROOT, "src") not in sys.path:
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+import numpy as np  # noqa: E402
+
+
+def main() -> int:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    import repro.analytics.physical as PH
+    from repro.analytics import plan as L
+    from repro.analytics import planner, telemetry
+    from repro.core.config import PlacementPolicy
+
+    rng = np.random.RandomState(7)
+    n_rows, dim_rows = 768, 576
+    tables = {
+        "fact": {"fk": jnp.asarray(
+                     rng.randint(0, dim_rows, n_rows).astype(np.int32)),
+                 "fv": jnp.asarray(rng.rand(n_rows).astype(np.float32))},
+        "dim": {"pk": jnp.asarray(np.arange(dim_rows, dtype=np.int32)),
+                "dv": jnp.asarray(rng.rand(dim_rows).astype(np.float32))},
+    }
+    j = (L.scan("fact").filter(L.col("fv") < 0.1)
+         .join(L.scan("dim"), "fk", "pk", {"dv": "dv"}))
+    p = L.LogicalPlan(j.aggregate("fk", dim_rows, c=("count", "fv"),
+                                  m=("median", "dv"), x=("max", "fv")),
+                      ("c", "m", "x"))
+    mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
+    ctx = planner.ExecutionContext(executor="cost", mesh=mesh,
+                                   policy=PlacementPolicy.INTERLEAVE)
+
+    planner.set_cost_profile(None)
+    ref = planner.compile_plan(p, tables, ctx)(tables)
+
+    mispriced = planner.CostProfile(dist_route_factor=3.0)
+    planner.set_cost_profile(mispriced)
+    telemetry.registry().clear()
+    with telemetry.recording() as reg:
+        cp1 = planner.compile_plan(p, tables, ctx)
+        if "dist=broadcast" not in PH.describe(cp1.physical):
+            print("drift_gate: FAIL — mis-priced profile did not pick "
+                  "broadcast:\n" + PH.describe(cp1.physical))
+            return 1
+        cp1(tables)
+        report = reg.drift_report()
+        if not report:
+            print("drift_gate: FAIL — one recorded execution produced an "
+                  "EMPTY drift report")
+            return 1
+        print(f"drift_gate: drift report produced "
+              f"({len(report)} drifting entries; worst: "
+              f"{report[0]['node']} {report[0]['stat']} "
+              f"obs={report[0]['observed']} est={report[0]['estimated']})")
+        cp2 = planner.compile_plan(p, tables, ctx)   # cache HIT -> replan
+        if "dist=partitioned" not in PH.describe(cp2.physical):
+            print("drift_gate: FAIL — cache-hit replan did not flip to "
+                  "partitioned:\n" + PH.describe(cp2.physical))
+            return 1
+        out = cp2(tables)
+    for k in ("c", "m", "x"):
+        if not np.array_equal(np.asarray(ref[k]), np.asarray(out[k]),
+                              equal_nan=True):
+            print(f"drift_gate: FAIL — replanned result {k!r} differs "
+                  "from the fault-free run")
+            return 1
+    print(f"drift_gate: replan flipped broadcast -> partitioned on cache "
+          f"hit (replans={reg.summary()['replans']}), results "
+          "bit-identical to the fault-free run")
+
+    refreshed = telemetry.refresh_profile(mispriced)
+    planner.set_cost_profile(refreshed)
+    try:
+        fresh = planner.lower(p, ctx,
+                              {t: len(next(iter(c.values())))
+                               for t, c in tables.items()},
+                              profile=refreshed, n_shards=4)
+        if refreshed.dist_route_factor >= mispriced.dist_route_factor \
+                or "dist=partitioned" not in PH.describe(fresh):
+            print(f"drift_gate: FAIL — refresh_profile did not correct the "
+                  f"mis-priced constant (factor "
+                  f"{mispriced.dist_route_factor} -> "
+                  f"{refreshed.dist_route_factor})")
+            return 1
+    finally:
+        planner.set_cost_profile(None)
+    print(f"drift_gate: profile corrected within one execution "
+          f"(dist_route_factor {mispriced.dist_route_factor} -> "
+          f"{refreshed.dist_route_factor}, source={refreshed.source!r})")
+    print("drift_gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -28,8 +28,14 @@ from repro.analytics.engine import dist_count, dist_hash_join, dist_median
 from repro.analytics.join import hash_join, index_join
 from repro.analytics.planner import (CompiledPlan, ExecutionContext,
                                      compile_plan, execute_plan, explain,
-                                     explain_physical, load_cost_profile,
-                                     lower, plan_cache_info)
+                                     explain_analyze, explain_physical,
+                                     load_cost_profile, lower,
+                                     plan_cache_info)
+from repro.analytics.telemetry import (StatsRegistry, disable_telemetry,
+                                       enable_telemetry, refresh_profile,
+                                       telemetry_enabled)
+from repro.analytics.telemetry import recording as telemetry_recording
+from repro.analytics.telemetry import registry as telemetry_registry
 from repro.analytics.tpch import LOGICAL_QUERIES
 from repro.analytics.tpch import generate as tpch_generate
 from repro.analytics.tpch import run_query as tpch_run_query

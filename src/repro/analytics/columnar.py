@@ -330,12 +330,14 @@ def _segment_selection(keys: jax.Array, vals: jax.Array, n_groups: int):
     n_groups clip into the last group (the stacked_columns convention —
     the selection math needs the key order and the count clipping to
     agree, so the clip is enforced here, not left to callers). Returns
-    (sorted_vals, counts f32, starts i32 shifted past the excluded run)."""
+    (sorted_vals, counts f32, starts i32 shifted past the excluded run,
+    sorted_keys i-dtype in the same order as sorted_vals)."""
     keys = jnp.where(keys < 0, -1, jnp.minimum(keys, n_groups - 1))
     order_v = jnp.argsort(vals, stable=True)
     k1, v1 = keys[order_v], vals[order_v]
     order_k = jnp.argsort(k1, stable=True)
     sv = v1[order_k]
+    sk = k1[order_k]
     counts = jax.ops.segment_sum(
         jnp.ones_like(keys, jnp.float32),
         jnp.clip(keys, 0, n_groups - 1), num_segments=n_groups)
@@ -347,7 +349,7 @@ def _segment_selection(keys: jax.Array, vals: jax.Array, n_groups: int):
     starts = jnp.cumsum(counts) - counts
     # excluded records sort first (key < 0): shift starts past them
     starts = starts + pad[0]
-    return sv, counts, starts
+    return sv, counts, starts, sk
 
 
 def segment_median(keys: jax.Array, vals: jax.Array, n_groups: int
@@ -361,7 +363,7 @@ def segment_median(keys: jax.Array, vals: jax.Array, n_groups: int
     ``segment_quantile``, the arbitrary-rank generalization). The median
     is the mean of the run's two middle elements (NaN for empty groups).
     Returns (medians, counts), both (n_groups,)."""
-    sv, counts, starts = _segment_selection(keys, vals, n_groups)
+    sv, counts, starts, _sk = _segment_selection(keys, vals, n_groups)
     c, s = counts.astype(jnp.int32), starts.astype(jnp.int32)
     lo = jnp.clip(s + jnp.maximum((c - 1) // 2, 0), 0, sv.shape[0] - 1)
     hi = jnp.clip(s + jnp.maximum(c // 2, 0), 0, sv.shape[0] - 1)
@@ -383,7 +385,7 @@ def segment_quantile(keys: jax.Array, vals: jax.Array, n_groups: int,
     both (n_groups,)."""
     if not 0.0 < float(rank) < 1.0:
         raise ValueError(f"quantile rank must be in (0, 1), got {rank}")
-    sv, counts, starts = _segment_selection(keys, vals, n_groups)
+    sv, counts, starts, _sk = _segment_selection(keys, vals, n_groups)
     c, s = counts.astype(jnp.int32), starts.astype(jnp.int32)
     pos = jnp.float32(rank) * jnp.maximum(c - 1, 0).astype(jnp.float32)
     base = jnp.floor(pos).astype(jnp.int32)
@@ -395,15 +397,39 @@ def segment_quantile(keys: jax.Array, vals: jax.Array, n_groups: int,
     return jnp.where(c > 0, q, jnp.nan), counts
 
 
+def segment_distinct(keys: jax.Array, vals: jax.Array, n_groups: int
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Exact per-group distinct-value count via the shared selection sort.
+
+    Within a group's value-sorted run, a value is counted when it differs
+    from its predecessor (the run's first element always counts): the
+    distinct count is the per-group sum of those boundaries. Holistic
+    like median — partials from disjoint shards cannot be merged (the
+    same value may appear on two shards) — but when one shard holds ALL
+    of a group's records (routed or placed lowerings) the local count is
+    exact. Keys < 0 are excluded; empty groups yield 0, not NaN (a count,
+    not an order statistic). Returns (distinct f32, counts f32)."""
+    sv, counts, _starts, sk = _segment_selection(keys, vals, n_groups)
+    prev_k = jnp.concatenate([sk[:1] - 1, sk[:-1]])
+    prev_v = jnp.concatenate([sv[:1], sv[:-1]])
+    new = (sk >= 0) & ((sk != prev_k) | (sv != prev_v))
+    distinct = jax.ops.segment_sum(
+        jnp.where(new, 1.0, 0.0), jnp.clip(sk, 0, n_groups - 1),
+        num_segments=n_groups)
+    return distinct, counts
+
+
 def segment_order_stat(table: Table, keys: jax.Array, n_groups: int,
                        op: str, col: str) -> jax.Array:
-    """Masked per-group max/min/median/quantile via exact XLA lowerings
-    (order statistics are not distributive sums and never ride the fused
-    sweep)."""
+    """Masked per-group max/min/median/quantile/distinct via exact XLA
+    lowerings (none of these are distributive sums, so they never ride
+    the fused sweep)."""
     v = table.col(col).astype(jnp.float32)
     w = table.weights()
     if op == "median":
         return segment_median(jnp.where(w > 0, keys, -1), v, n_groups)[0]
+    if op == "distinct":
+        return segment_distinct(jnp.where(w > 0, keys, -1), v, n_groups)[0]
     rank = parse_quantile(op)
     if rank is not None:
         return segment_quantile(jnp.where(w > 0, keys, -1), v, n_groups,

@@ -45,7 +45,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.analytics.columnar import (segment_median, segment_quantile,
+from repro.analytics.columnar import (segment_distinct, segment_median,
+                                      segment_quantile,
                                       stacked_group_sums)
 from repro.analytics.hashing import partition_of
 from repro.analytics.physical import ceil128
@@ -442,9 +443,13 @@ def _rebalance_to_interleave(table: jax.Array, n: int, axis: str) -> jax.Array:
 
 def _select(k, v, n_groups, rank):
     """One sort-based selection: the median when ``rank`` is None, the
-    interpolated ``rank`` quantile otherwise (both exclude keys < 0)."""
+    exact distinct count when ``rank`` is the string "distinct", the
+    interpolated ``rank`` quantile otherwise (all exclude keys < 0).
+    ``rank`` is what plan.holistic_selector returns for the agg op."""
     if rank is None:
         return segment_median(k, v, n_groups)
+    if rank == "distinct":
+        return segment_distinct(k, v, n_groups)
     return segment_quantile(k, v, n_groups, rank)
 
 
@@ -500,6 +505,37 @@ def interleave_group_median(keys: jax.Array, cols, w: jax.Array,
         meds[name] = jax.lax.all_gather(med, axis, tiled=True)[pos]
         counts = jax.lax.all_gather(cnt, axis, tiled=True)[pos]
     return meds, counts, jax.lax.psum(ovf, axis)
+
+
+def placed_group_median(keys: jax.Array, cols, w: jax.Array,
+                        n_groups: int, axis: str, ranks=None):
+    """Route-once holistic lowering: the child is ALREADY placed by the
+    group key (e.g. a partitioned join routed every group's alive records
+    to one owner shard), so each order statistic selects locally on
+    whichever shard holds the group — no fresh Exchange. Exact because
+    placement means exactly ONE shard holds ALL of a group's alive rows:
+    its local selection over the full value set equals the global one,
+    and every other shard sees an empty group (zero count) and is masked
+    out of the merge. The merge is a psum of owner-only values — cheaper
+    than re-routing O(N) records by a wide margin (O(G) wire rows).
+    ``cols``/``ranks`` as in replicated_group_median. Returns
+    ({name: (n_groups,) order stats}, counts), replicated."""
+    ranks = ranks or {}
+    k_eff = jnp.where(w > 0, keys, -1).astype(jnp.int32)
+    meds, counts = {}, None
+    for name, v in cols.items():
+        sel = ranks.get(name)
+        stat, cnt = _select(k_eff, v, n_groups, sel)
+        cnt_all = jax.lax.psum(cnt, axis)
+        if sel == "distinct":
+            # a distinct count is 0 (not NaN) on non-owner shards: the
+            # psum alone reconstructs the owner's exact count
+            meds[name] = jax.lax.psum(stat, axis)
+        else:
+            stat_all = jax.lax.psum(jnp.where(cnt > 0, stat, 0.0), axis)
+            meds[name] = jnp.where(cnt_all > 0, stat_all, jnp.nan)
+        counts = cnt_all
+    return meds, counts
 
 
 # ---------------------------------------------------------------------------

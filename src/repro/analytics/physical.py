@@ -177,7 +177,9 @@ class PAggregate:
     decision resolved: ``layout`` the local stacked-sums lowering,
     ``merge`` the distributed combine (see module docstring),
     ``med_strategy`` the holistic order-statistic plan ("replicate" |
-    "route" | None when no median/quantile aggs)."""
+    "route" | "placed" when the child is already co-located by the group
+    key, so selection runs on the owner shard with no fresh Exchange |
+    None when no median/quantile/distinct aggs)."""
     child: "PNode"
     key: Optional[str]
     n_groups: int
@@ -379,14 +381,18 @@ def routes_once(child: PNode, key: Optional[str]) -> bool:
 # ---------------------------------------------------------------------------
 # rendering (the explain() physical tree)
 # ---------------------------------------------------------------------------
-def describe(plan: Union[PhysicalPlan, PNode], indent: int = 0) -> str:
+def describe(plan: Union[PhysicalPlan, PNode], indent: int = 0,
+             annotate=None) -> str:
     """Deterministic physical-tree rendering: one line per node with its
     resolved strategy, buffer rows, and — for Exchange/Compact — the
     movement numbers. String-stable for fixed table shapes (golden-
-    snapshot tested), so plans can be diffed across PRs."""
+    snapshot tested), so plans can be diffed across PRs. ``annotate``,
+    when given, is a callable node -> str whose non-empty result is
+    appended to that node's line (telemetry.explain_analyze uses it to
+    print observed-vs-estimated rows per Decision)."""
     if isinstance(plan, PhysicalPlan):
         head = f"PhysicalPlan shards={plan.n_shards}"
-        return head + "\n" + describe(plan.root, 1)
+        return head + "\n" + describe(plan.root, 1, annotate)
     pad = "  " * indent
     kids = children(plan)
     if isinstance(plan, PScan):
@@ -431,7 +437,11 @@ def describe(plan: Union[PhysicalPlan, PNode], indent: int = 0) -> str:
         line = f"PAttach {dict(plan.cols)} via {plan.key}"
     else:
         raise TypeError(f"not a physical node: {plan!r}")
+    if annotate is not None:
+        extra = annotate(plan)
+        if extra:
+            line += " " + extra
     out = pad + line
     for c in kids:
-        out += "\n" + describe(c, indent + 1)
+        out += "\n" + describe(c, indent + 1, annotate)
     return out

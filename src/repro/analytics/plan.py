@@ -246,10 +246,14 @@ def scan(table: str) -> Scan:
 # ---------------------------------------------------------------------------
 # IR validation
 # ---------------------------------------------------------------------------
-AGG_OPS = ("sum", "avg", "count", "max", "min", "median")
+AGG_OPS = ("sum", "avg", "count", "max", "min", "median", "distinct")
 # "quantile:R" (R a literal rank in (0, 1), e.g. "quantile:0.9") is also a
 # valid agg op: the arbitrary-rank generalization of median, riding the
 # same sort-based selection machinery (columnar.segment_quantile).
+# "distinct" is the exact per-group distinct-value count; it shares the
+# selection sort (columnar.segment_distinct counts run boundaries in the
+# value-sorted order) and is holistic — distinct counts cannot be merged
+# from partials, so it lowers like median/quantile, not like a sum.
 _BIN_OPS = ("add", "sub", "mul", "div", "le", "lt", "ge", "gt", "eq", "ne",
             "and", "or")
 _UN_OPS = ("abs", "neg", "not")
@@ -275,9 +279,27 @@ def parse_quantile(op: str) -> Optional[float]:
 
 
 def is_holistic(op: str) -> bool:
-    """True for order-statistic ops whose result cannot be merged from
-    partials (paper Section 2): median and arbitrary-rank quantiles."""
-    return op == "median" or parse_quantile(op) is not None
+    """True for sort-backed ops whose result cannot be merged from
+    partials (paper Section 2): median, arbitrary-rank quantiles, and
+    exact distinct counts."""
+    return (op in ("median", "distinct")
+            or parse_quantile(op) is not None)
+
+
+def holistic_selector(op: str):
+    """The selection parameter a holistic op feeds to the shared
+    sort-selection machinery: None for median (the middle rank),
+    a float rank in (0, 1) for quantiles, and the string "distinct"
+    for the distinct-count (run-boundary sum over the same sorted
+    order). Only valid for ops where ``is_holistic`` is True."""
+    if op == "median":
+        return None
+    if op == "distinct":
+        return "distinct"
+    rank = parse_quantile(op)
+    if rank is None:
+        raise ValueError(f"not a holistic agg op: {op!r}")
+    return rank
 
 
 def _validate_expr(e: Expr) -> None:

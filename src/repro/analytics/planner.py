@@ -75,6 +75,7 @@ import functools
 import json
 import math
 import threading
+import time
 import weakref
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -87,20 +88,23 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.analytics import physical as PH
 from repro.analytics import plan as L
+from repro.analytics import telemetry
 from repro.analytics.columnar import (DENSE_GROUP_LIMIT, Table,
                                       finalize_stacked, group_aggregate,
                                       pkfk_join, pkfk_join_kernel,
-                                      segment_median, segment_order_stat,
-                                      segment_quantile, stacked_columns,
-                                      stacked_group_sums)
+                                      segment_distinct, segment_median,
+                                      segment_order_stat, segment_quantile,
+                                      stacked_columns, stacked_group_sums)
 from repro.analytics.engine import (compact_routed_rows, gather_rows,
                                     interleave_group_median,
                                     interleave_group_sums,
                                     merge_partial_table,
+                                    placed_group_median,
                                     pushdown_group_sums,
                                     replicated_group_median, route_owner,
                                     route_table_rows, routing_capacity)
-from repro.analytics.plan import is_holistic, parse_quantile
+from repro.analytics.plan import (holistic_selector, is_holistic,
+                                  parse_quantile)
 from repro.core.config import PlacementPolicy
 from repro.kernels.common import kernel_mode
 
@@ -210,7 +214,11 @@ class CostProfile:
     (measured by the --sweep-groups calibration; defaults to the VMEM
     model constant) and ``partition_capacity_factor``, when fitted,
     overrides the context's capacity factor for the range-partitioned
-    aggregate layout only (routing capacities stay on the context)."""
+    aggregate layout only (routing capacities stay on the context).
+    ``compact_margin``, when set (telemetry.refresh_profile fits it from
+    observed Compact occupancy), replaces the hand-set COMPACT_MARGIN for
+    contexts that leave ``compact`` at its default None — an explicit
+    context override always wins."""
 
     fused_fixed: float = FUSED_FIXED
     fused_per_col: float = FUSED_PER_COL
@@ -218,6 +226,7 @@ class CostProfile:
     dist_route_factor: float = DIST_ROUTE_FACTOR
     dense_group_limit: int = DENSE_GROUP_LIMIT
     partition_capacity_factor: Optional[float] = None
+    compact_margin: Optional[float] = None
     source: str = "builtin"
 
 
@@ -249,7 +258,9 @@ def load_cost_profile(path: str) -> CostProfile:
     with open(path) as f:
         raw = json.load(f)
     pcf = raw.get("partition_capacity_factor")
+    cm = raw.get("compact_margin")
     return set_cost_profile(CostProfile(
+        compact_margin=(None if cm is None else float(cm)),
         fused_fixed=float(raw["fused_fixed"]),
         fused_per_col=float(raw["fused_per_col"]),
         sort_pass_factor=float(raw.get("sort_pass_factor", SORT_PASS_FACTOR)),
@@ -581,7 +592,8 @@ def eval_expr(e: L.Expr, table: Table):
 # ---------------------------------------------------------------------------
 def lower(plan: L.LogicalPlan, ctx: ExecutionContext,
           rows: Dict[str, int], profile: Optional[CostProfile] = None,
-          n_shards: Optional[int] = None) -> PH.PhysicalPlan:
+          n_shards: Optional[int] = None,
+          observed=None) -> PH.PhysicalPlan:
     """Cost-driven lowering pass: resolve every strategy decision into an
     explicit physical tree, then let the movement rewrites (push-down,
     route-once, compaction — see module docstring) improve it.
@@ -589,14 +601,19 @@ def lower(plan: L.LogicalPlan, ctx: ExecutionContext,
     ``rows`` maps table name -> true row count (the shape signature the
     plan-cache key already carries). ``n_shards`` overrides the mesh width
     — lowering is pure shape arithmetic, so tests and explain can lower
-    distributed plans without materializing fake devices."""
+    distributed plans without materializing fake devices. ``observed`` is
+    the adaptive re-planning hook: an ``observed(probe_key, build_key) ->
+    (probe_alive, build_alive) | None`` lookup (telemetry's recorded
+    GLOBAL alive rows) consulted ONLY by the distributed-join cost choice
+    — estimates and buffer shapes are untouched, so a re-lowering with
+    unchanged decisions is structurally identical to the original."""
     profile = profile or current_cost_profile()
     if n_shards is None:
         n_shards = ctx.mesh.shape[ctx.axis] if ctx.mesh is not None else 1
         distributed = ctx.mesh is not None
     else:
         distributed = True
-    lo = _Lowering(ctx, rows, profile, n_shards, distributed)
+    lo = _Lowering(ctx, rows, profile, n_shards, distributed, observed)
     root = lo.node(plan.root)
     return PH.PhysicalPlan(root, plan.outputs,
                            n_shards if distributed else 1)
@@ -605,13 +622,19 @@ def lower(plan: L.LogicalPlan, ctx: ExecutionContext,
 class _Lowering:
     """One lower() pass: shape propagation + strategy choice per node."""
 
-    def __init__(self, ctx, rows, profile, n, distributed):
+    def __init__(self, ctx, rows, profile, n, distributed, observed=None):
         self.ctx = ctx
         self.rows = rows
         self.profile = profile
         self.n = n
         self.distributed = distributed
-        self.margin = ctx.compact_margin()   # None = compaction disabled
+        self.observed = observed             # adaptive re-plan lookup
+        margin = ctx.compact_margin()        # None = compaction disabled
+        if ctx.compact is None and profile.compact_margin is not None:
+            # context left the margin at its default: the profile's
+            # telemetry-fitted margin replaces the hand-set constant
+            margin = profile.compact_margin
+        self.margin = margin
 
     def groups(self, card: L.Cardinality) -> int:
         if isinstance(card, L.TableRows):
@@ -656,7 +679,15 @@ class _Lowering:
             return PH.PJoin(probe, build, node.probe_key, node.build_key,
                             node.take, strategy, None,
                             rows=probe.rows, est=probe.est)
-        choice = choose_dist_join(probe.rows * self.n, build.rows * self.n,
+        n_probe, n_build = probe.rows * self.n, build.rows * self.n
+        if self.observed is not None:
+            obs = self.observed(node.probe_key, node.build_key)
+            if obs is not None:
+                # re-plan: price the join from the alive rows execution
+                # actually saw (filter selectivity, padding occupancy)
+                # instead of the static physical buffer sizes
+                n_probe, n_build = obs
+        choice = choose_dist_join(n_probe, n_build,
                                   self.n, self.ctx, self.profile)
         if choice == "broadcast":
             b = PH.Exchange(build, "broadcast", rows=build.rows * self.n,
@@ -701,8 +732,17 @@ class _Lowering:
             return PH.PAggregate(child, node.key, G, node.aggs, layout,
                                  None, None, rows=G, est=G)
         policy = self.ctx.policy or PlacementPolicy.FIRST_TOUCH
-        med = (("route" if policy == PlacementPolicy.INTERLEAVE
-                else "replicate") if has_med else None)
+        if not has_med:
+            med = None
+        elif self.ctx.route_once and PH.routes_once(child, node.key):
+            # rows already co-located by the group key (route-once): the
+            # order statistic selects on the owner shard directly and the
+            # merge is an owner-masked psum — O(G) wire rows instead of
+            # re-routing O(N) records through a fresh Exchange
+            med = "placed"
+        else:
+            med = ("route" if policy == PlacementPolicy.INTERLEAVE
+                   else "replicate")
         dist_aggs = tuple((nm, oc) for nm, oc in node.aggs
                           if not is_holistic(oc[0]))
         if not dist_aggs:
@@ -797,7 +837,8 @@ class _LocalExecutor:
     deduplicated Exchanges — execute exactly once."""
 
     def __init__(self, tables, ctx: ExecutionContext, indexes,
-                 profile: Optional[CostProfile] = None):
+                 profile: Optional[CostProfile] = None,
+                 record: bool = False):
         self.tables = tables
         self.ctx = ctx
         self.indexes = indexes           # {"table.column": (order, sk)}
@@ -808,6 +849,12 @@ class _LocalExecutor:
                        or ctx.capacity_factor)
         self.overflow = jnp.zeros((), jnp.int32)
         self._memo: Dict[PH.PNode, object] = {}
+        # telemetry: traced per-node counters, keyed by walk_unique id.
+        # record=False adds ZERO traced ops — every recording site is
+        # behind `if self.record`.
+        self.record = record
+        self.stats: Dict[int, Dict[str, jax.Array]] = {}
+        self._ids: Dict[PH.PNode, int] = {}
 
     def run(self, node: PH.PNode):
         hit = self._memo.get(node)
@@ -815,6 +862,14 @@ class _LocalExecutor:
             hit = self._eval(node)
             self._memo[node] = hit
         return hit
+
+    def _note(self, node: PH.PNode, **vals) -> None:
+        """Stash one node's observed counters (traced int32 scalars).
+        Memoized subtrees note once — exactly like they execute once."""
+        i = self._ids.get(node)
+        if i is not None:
+            self.stats[i] = {k: jnp.asarray(v).astype(jnp.int32)
+                             for k, v in vals.items()}
 
     def _eval(self, node: PH.PNode):
         method = getattr(self, "_" + type(node).__name__.lower())
@@ -848,9 +903,16 @@ class _LocalExecutor:
                 n_partitions=self.ctx.n_partitions,
                 capacity_factor=self.ctx.capacity_factor)
             self.overflow = self.overflow + ovf
-            return joined
-        return pkfk_join(probe, build, node.probe_key, node.build_key,
-                         dict(node.take))
+        else:
+            joined = pkfk_join(probe, build, node.probe_key,
+                               node.build_key, dict(node.take))
+        self._record_join(node, probe, build, joined)
+        return joined
+
+    def _record_join(self, node: PH.PJoin, probe: Table, build: Table,
+                     joined: Table) -> None:
+        if self.record:
+            self._note(node, out_alive=(joined.weights() > 0).sum())
 
     def _pattach(self, node: PH.PAttach) -> Table:
         t = self.run(node.child)
@@ -879,6 +941,8 @@ class _LocalExecutor:
             return self._scalar_aggregate(node, t)
         out = self._grouped(node, t)
         self.overflow = self.overflow + out["_overflow"]
+        if self.record:
+            self._note(node, groups_occupied=(out["_count"] > 0).sum())
         return out
 
     def _grouped(self, node: PH.PAggregate, t: Table) -> Dict[str, jax.Array]:
@@ -913,6 +977,9 @@ class _LocalExecutor:
             elif op == "median":
                 k = jnp.where(w > 0, 0, -1)
                 out[name] = segment_median(k, v, 1)[0]
+            elif op == "distinct":
+                k = jnp.where(w > 0, 0, -1)
+                out[name] = segment_distinct(k, v, 1)[0]
             elif parse_quantile(op) is not None:
                 k = jnp.where(w > 0, 0, -1)
                 out[name] = segment_quantile(k, v, 1, parse_quantile(op))[0]
@@ -924,6 +991,11 @@ class _LocalExecutor:
 
     # -- plan root ----------------------------------------------------------
     def execute(self, phys: PH.PhysicalPlan) -> Dict[str, jax.Array]:
+        if self.record:
+            # node id = walk_unique enumerate order: deterministic for a
+            # fixed tree, shared with the StatsRegistry's accounting
+            self._ids = {n: i
+                         for i, n in enumerate(PH.walk_unique(phys.root))}
         res = self.run(phys.root)
         if isinstance(res, Table):
             raise TypeError("plan root must be an Aggregate or TopK node")
@@ -931,6 +1003,12 @@ class _LocalExecutor:
         out["_overflow"] = self.overflow
         if phys.outputs is not None:
             out = {k: out[k] for k in phys.outputs}
+        if self.record:
+            # reserved key, attached AFTER output filtering: the stats
+            # ride the jit out alongside the results (replicated — every
+            # distributed counter is psum'd or computed from replicated
+            # tables) and are stripped at dispatch by CompiledPlan
+            out["_stats"] = self.stats
         return out
 
 
@@ -952,9 +1030,14 @@ class _DistributedExecutor(_LocalExecutor):
     owner-merge are one engine primitive, pushdown_group_sums)."""
 
     def __init__(self, tables, ctx: ExecutionContext, n_shards,
-                 profile: Optional[CostProfile] = None):
-        super().__init__(tables, ctx, {}, profile)
+                 profile: Optional[CostProfile] = None,
+                 record: bool = False):
+        super().__init__(tables, ctx, {}, profile, record)
         self.n = n_shards
+
+    def _alive(self, w) -> jax.Array:
+        """GLOBAL alive-row count of a row-sharded weight vector."""
+        return jax.lax.psum((w > 0).sum(), self.ctx.axis)
 
     def _pscan(self, node: PH.PScan) -> Table:
         cols = {c: a for c, a in self.tables[node.table].items()
@@ -966,6 +1049,12 @@ class _DistributedExecutor(_LocalExecutor):
             raise TypeError("gather Exchange executes fused in PAggregate")
         child = self.run(node.child)
         if node.kind == "broadcast":
+            if self.record:
+                alive = self._alive(child.weights())
+                # every alive row lands on the n-1 shards that did not
+                # already hold it (the all-gather's wire traffic)
+                self._note(node, alive_in=alive,
+                           moved=alive * (self.n - 1))
             cols = gather_rows(child.columns, self.ctx.axis)
             mask = (None if child.mask is None
                     else gather_rows(child.mask, self.ctx.axis))
@@ -979,17 +1068,42 @@ class _DistributedExecutor(_LocalExecutor):
         owner = route_owner(keys, w0 > 0, self.n, node.method)
         cols, w, ovf = route_table_rows(child.columns, w0, owner, self.n,
                                         node.capacity, self.ctx.axis)
-        self.overflow = self.overflow + jax.lax.psum(
-            ovf, self.ctx.axis).astype(jnp.int32)
+        ovf_total = jax.lax.psum(ovf, self.ctx.axis).astype(jnp.int32)
+        self.overflow = self.overflow + ovf_total
+        if self.record:
+            # "moved" counts ALIVE rows whose owner is another shard —
+            # dead (padding) rows also travel in their round-robin slots,
+            # but the estimate prices payload, so the observation does too
+            me = jax.lax.axis_index(self.ctx.axis)
+            moved = jax.lax.psum(
+                ((w0 > 0) & (owner != me)).sum(), self.ctx.axis)
+            self._note(node, alive_in=self._alive(w0), moved=moved,
+                       alive_out=self._alive(w), overflow=ovf_total)
         return Table(cols, w)
 
     def _compact(self, node: PH.Compact) -> Table:
         t = self.run(node.child)
         cols, w, ovf = compact_routed_rows(t.columns, t.weights(),
                                            node.capacity)
-        self.overflow = self.overflow + jax.lax.psum(
-            ovf, self.ctx.axis).astype(jnp.int32)
+        ovf_total = jax.lax.psum(ovf, self.ctx.axis).astype(jnp.int32)
+        self.overflow = self.overflow + ovf_total
+        if self.record:
+            self._note(node, alive_in=self._alive(t.weights()),
+                       alive_out=self._alive(w), overflow=ovf_total)
         return Table(cols, w)
+
+    def _record_join(self, node: PH.PJoin, probe: Table, build: Table,
+                     joined: Table) -> None:
+        if not self.record:
+            return
+        build_alive = (self._alive(build.weights())
+                       if node.dist != "broadcast"
+                       # broadcast already gathered the build side: the
+                       # local count IS the (replicated) global count
+                       else (build.weights() > 0).sum())
+        self._note(node, probe_alive=self._alive(probe.weights()),
+                   build_alive=build_alive,
+                   out_alive=self._alive(joined.weights()))
 
     def _ppartialaggregate(self, node: PH.PPartialAggregate):
         """Local (n_groups, C) stacked partial sums — the below-the-
@@ -1026,6 +1140,9 @@ class _DistributedExecutor(_LocalExecutor):
             out["_count"] = med_counts
             out["_overflow"] = med_ovf
             self.overflow = self.overflow + med_ovf
+            if self.record:
+                self._note(node,
+                           groups_occupied=(out["_count"] > 0).sum())
             return out
         sums, overflow = self._merged_sums(node, t, G, dist_aggs)
         out = finalize_stacked(dict(dist_aggs), _stacked_src(dist_aggs),
@@ -1033,6 +1150,8 @@ class _DistributedExecutor(_LocalExecutor):
         out.update(med_out)
         out["_overflow"] = overflow.astype(jnp.int32) + med_ovf
         self.overflow = self.overflow + out["_overflow"]
+        if self.record:
+            self._note(node, groups_occupied=(out["_count"] > 0).sum())
         return out
 
     def _merged_sums(self, node: PH.PAggregate, t: Table, G: int,
@@ -1112,13 +1231,19 @@ class _DistributedExecutor(_LocalExecutor):
         w = t.weights()
         cols = {name: t.col(colname).astype(jnp.float32)
                 for name, (_op, colname) in med_aggs}
-        ranks = {name: parse_quantile(op)
+        ranks = {name: holistic_selector(op)
                  for name, (op, _c) in med_aggs}          # None = median
         if node.med_strategy == "route":
             meds, counts, ovf = interleave_group_median(
                 keys, cols, w, G, axis, n,
                 capacity_factor=self.ctx.capacity_factor, ranks=ranks)
             return meds, counts, ovf.astype(jnp.int32)
+        if node.med_strategy == "placed":
+            # route-once: the child is already placed by the group key,
+            # select on the owner shard and psum the masked results
+            meds, counts = placed_group_median(keys, cols, w, G, axis,
+                                               ranks=ranks)
+            return meds, counts, jnp.zeros((), jnp.int32)
         meds, counts = replicated_group_median(keys, cols, w, G, axis,
                                                ranks=ranks)
         return meds, counts, jnp.zeros((), jnp.int32)
@@ -1132,7 +1257,7 @@ class _DistributedExecutor(_LocalExecutor):
         cnt = jax.lax.psum(w.sum(), axis)[None]
         out: Dict[str, jax.Array] = {}
         med_cols: Dict[str, jax.Array] = {}
-        med_ranks: Dict[str, Optional[float]] = {}
+        med_ranks: Dict[str, object] = {}    # holistic_selector values
         for name, (op, col) in node.aggs:
             if op == "count":
                 out[name] = cnt
@@ -1149,7 +1274,7 @@ class _DistributedExecutor(_LocalExecutor):
                     jnp.where(w > 0, v, jnp.inf).min(), axis)[None]
             elif is_holistic(op):
                 med_cols[name] = v       # batched below: gather rows once
-                med_ranks[name] = parse_quantile(op)
+                med_ranks[name] = holistic_selector(op)
             else:
                 raise ValueError(f"unknown agg op {op!r}")
         if med_cols:
@@ -1201,13 +1326,13 @@ def _true_rows(tables) -> Dict[str, int]:
 
 
 def _run_local(phys: PH.PhysicalPlan, ctx: ExecutionContext, profile,
-               tables, indexes):
-    ex = _LocalExecutor(tables, ctx, indexes, profile)
+               record, tables, indexes):
+    ex = _LocalExecutor(tables, ctx, indexes, profile, record)
     return ex.execute(phys)
 
 
 def _run_distributed(phys: PH.PhysicalPlan, ctx: ExecutionContext, profile,
-                     tables, indexes):
+                     record, tables, indexes):
     del indexes          # full-table indexes don't survive the row padding
     mesh, axis = ctx.mesh, ctx.axis
     n = mesh.shape[axis]
@@ -1223,7 +1348,7 @@ def _run_distributed(phys: PH.PhysicalPlan, ctx: ExecutionContext, profile,
         padded[t] = pcols
 
     def local_fn(local_tables):
-        ex = _DistributedExecutor(local_tables, ctx, n, profile)
+        ex = _DistributedExecutor(local_tables, ctx, n, profile, record)
         return ex.execute(phys)
 
     specs = jax.tree_util.tree_map(lambda _: P(axis), padded)
@@ -1232,10 +1357,10 @@ def _run_distributed(phys: PH.PhysicalPlan, ctx: ExecutionContext, profile,
 
 
 def _run_plan(phys: PH.PhysicalPlan, ctx: ExecutionContext, profile,
-              tables, indexes):
+              record, tables, indexes):
     if ctx.mesh is None:
-        return _run_local(phys, ctx, profile, tables, indexes)
-    return _run_distributed(phys, ctx, profile, tables, indexes)
+        return _run_local(phys, ctx, profile, record, tables, indexes)
+    return _run_distributed(phys, ctx, profile, record, tables, indexes)
 
 
 class CompiledPlan:
@@ -1247,25 +1372,49 @@ class CompiledPlan:
     hit), so concurrent dispatch never re-plans, re-jits, or races an
     eviction. This is the entry point the serving scheduler pins into its
     worker pools. ``physical`` is the explicit physical plan the
-    executable walks — the plan-cache value, inspectable per handle."""
+    executable walks — the plan-cache value, inspectable per handle.
 
-    __slots__ = ("plan", "ctx", "fn", "index_specs", "physical")
+    When compiled under telemetry (``record``), each call strips the
+    reserved ``"_stats"`` output, materializes it (one device_get — the
+    price of observing), and folds it into the StatsRegistry under
+    ``cache_key`` together with the dispatch wall time. Every dispatch
+    path — serial execute_plan, the serving scheduler's whole-plan morsel
+    tasks — goes through this one __call__, so the registry sees them
+    all."""
+
+    __slots__ = ("plan", "ctx", "fn", "index_specs", "physical",
+                 "cache_key", "record")
 
     def __init__(self, plan: L.LogicalPlan, ctx: ExecutionContext, fn,
                  index_specs: Tuple[Tuple[str, str], ...],
-                 physical: PH.PhysicalPlan):
+                 physical: PH.PhysicalPlan, cache_key: Tuple = (),
+                 record: bool = False):
         self.plan = plan
         self.ctx = ctx
         self.fn = fn
         self.index_specs = index_specs
         self.physical = physical
+        self.cache_key = cache_key
+        self.record = record
 
     def __call__(self, tables) -> Dict[str, jax.Array]:
         indexes = {}
         if self.ctx.mesh is None:
             for t, c in self.index_specs:
                 indexes[f"{t}.{c}"] = _INDEX_POOL.get(t, c, tables[t][c])
-        return self.fn(tables, indexes)
+        if not self.record:
+            return self.fn(tables, indexes)
+        t0 = time.perf_counter()
+        out = dict(self.fn(tables, indexes))
+        stats = out.pop("_stats", None)
+        if stats is not None:
+            concrete = {int(i): {k: int(v) for k, v in
+                                 jax.device_get(vals).items()}
+                        for i, vals in stats.items()}
+            telemetry.registry().record(self.cache_key, self.physical,
+                                        concrete,
+                                        time.perf_counter() - t0)
+        return out
 
 
 def compile_plan(plan: L.LogicalPlan, tables,
@@ -1281,16 +1430,46 @@ def compile_plan(plan: L.LogicalPlan, tables,
     interpretation."""
     ctx = ctx or ExecutionContext()
     profile = current_cost_profile()
-    key = (plan, ctx.cache_key(), _signature(tables), profile)
+    record = telemetry.telemetry_enabled()
+    # the telemetry flag keys the cache: a recording jit carries extra
+    # traced outputs, so it can never be served to an untracked caller
+    key = (plan, ctx.cache_key(), _signature(tables), profile, record)
     entry = _PLAN_CACHE.get(key)
     if entry is None:
         L.validate(plan)     # fail fast (and once) instead of mid-trace
         phys = lower(plan, ctx, _true_rows(tables), profile)
-        fn = jax.jit(functools.partial(_run_plan, phys, ctx, profile))
+        fn = jax.jit(functools.partial(_run_plan, phys, ctx, profile,
+                                       record))
         entry = (phys, fn)
         _PLAN_CACHE.put(key, entry)
+    elif record:
+        entry = _maybe_replan(key, entry, plan, ctx, profile, tables)
     phys, fn = entry
-    return CompiledPlan(plan, ctx, fn, required_indexes(plan.root), phys)
+    return CompiledPlan(plan, ctx, fn, required_indexes(plan.root), phys,
+                        key, record)
+
+
+def _maybe_replan(key, entry, plan, ctx, profile, tables):
+    """Adaptive re-planning on a plan-cache HIT: when the registry marked
+    this plan as drifting, re-lower with the OBSERVED per-join alive rows
+    and swap the cache entry if any Decision flipped. Results stay
+    bit-identical — the observed hook only steers the broadcast-vs-
+    partitioned cost choice, never the relational answer — and a
+    re-lowering whose decisions all stand produces a structurally
+    identical tree, so the existing jit keeps serving."""
+    reg = telemetry.registry()
+    if not reg.should_replan(key):
+        return entry
+    reg.note_replan_checked(key)
+    phys = lower(plan, ctx, _true_rows(tables), profile,
+                 observed=reg.observed_joins(key))
+    if phys == entry[0]:
+        return entry
+    fn = jax.jit(functools.partial(_run_plan, phys, ctx, profile, True))
+    entry = (phys, fn)
+    _PLAN_CACHE.put(key, entry)
+    reg.note_replanned(key, phys)
+    return entry
 
 
 def execute_plan(plan: L.LogicalPlan, tables,
@@ -1409,3 +1588,9 @@ def explain_physical(plan: L.LogicalPlan, tables,
     ctx = ctx or ExecutionContext()
     return PH.describe(lower(plan, ctx, _true_rows(tables),
                              n_shards=n_shards))
+
+
+# explain_analyze — the executable twin of explain_physical (runs the
+# plan under telemetry and annotates the tree with observed rows) —
+# lives in repro.analytics.telemetry; re-exported here for symmetry.
+explain_analyze = telemetry.explain_analyze

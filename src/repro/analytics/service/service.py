@@ -44,6 +44,7 @@ from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
+from repro.analytics import telemetry
 from repro.analytics.plan import LogicalPlan
 from repro.analytics.planner import ExecutionContext
 from repro.analytics.service.batcher import AdaptiveBatchWindow, QueryBatcher
@@ -160,6 +161,14 @@ class ServiceStats:
     queue_wait_p50_ms: float = 0.0
     queue_wait_p95_ms: float = 0.0
     queue_wait_p99_ms: float = 0.0
+    # execution-telemetry snapshot (the process-global StatsRegistry at
+    # stats() time — all zero unless telemetry is enabled): plans with
+    # recorded stats, recorded executions, plans currently outside the
+    # drift band, and adaptive replans the planner performed on cache hits
+    plans_tracked: int = 0
+    telemetry_executions: int = 0
+    drifting_plans: int = 0
+    replans: int = 0
 
     def describe(self) -> str:
         return (f"completed={self.completed}/{self.submitted} "
@@ -636,6 +645,7 @@ class AnalyticsService:
         qs = self.queue.stats()
         bs = self.batcher.stats()
         ss = self.scheduler.stats()
+        tsum = telemetry.registry().summary()
         with self._lock:
             lat = list(self._latencies)
             waits = list(self._waits)
@@ -680,7 +690,11 @@ class AnalyticsService:
             latency_p99_ms=_pct(lat, 99) * 1e3,
             queue_wait_p50_ms=_pct(waits, 50) * 1e3,
             queue_wait_p95_ms=_pct(waits, 95) * 1e3,
-            queue_wait_p99_ms=_pct(waits, 99) * 1e3)
+            queue_wait_p99_ms=_pct(waits, 99) * 1e3,
+            plans_tracked=tsum["plans_tracked"],
+            telemetry_executions=tsum["executions"],
+            drifting_plans=tsum["drifting_plans"],
+            replans=tsum["replans"])
 
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:

@@ -35,7 +35,7 @@ D = 48                # dimension rows (dense PK)
 DK = 7                # dimension group-key domain
 
 AGG_OPS = ("sum", "avg", "count", "max", "min", "median", "quantile:0.25",
-           "quantile:0.9")
+           "quantile:0.9", "distinct")
 
 # tight-but-safe routing capacities for the 4-shard distributed grid: the
 # generated keys are uniform, so per-owner shares stay well under the
@@ -146,7 +146,7 @@ def plan_has_join(plan: L.LogicalPlan) -> bool:
     return any(isinstance(n, L.Join) for n in L.walk(plan.root))
 
 
-EXACT_OPS = ("count", "max", "min", "median")
+EXACT_OPS = ("count", "max", "min", "median", "distinct")
 
 
 def exact_output(key: str, ops) -> bool:

@@ -27,16 +27,26 @@ the local XLA reference:
 The local grid covers LOCAL_SEEDS plans x 3 executors; the distributed
 batch re-generates DIST_SEEDS of the same plans inside the subprocess.
 Together they satisfy the >= 50 generated-plans floor with margin.
+
+Since PR 7 both grids also make a telemetry-tracked pass per plan: the
+tracked run must return the exact same result set (the reserved
+``"_stats"`` key never leaks), and the recorded counters must satisfy
+stats conservation — hash routing conserves alive rows up to surfaced
+overflow, broadcast wire traffic is exactly alive*(n-1), total recorded
+overflow equals the plan's ``_overflow`` output, and the join/aggregate
+alive counts agree bit-exactly across placements and with the local
+reference (they are relational facts, independent of the lowering).
 """
 import numpy as np
 import pytest
 
 from conftest import run_with_devices
 from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
-from _plan_gen import (exact_output, make_plan, make_tables, plan_agg_ops,
-                       plan_has_join)
+from _plan_gen import (_root_aggregate, exact_output, make_plan, make_tables,
+                       plan_agg_ops, plan_has_join)
 
 from repro.analytics import plan as L
+from repro.analytics import planner, telemetry
 from repro.analytics.planner import ExecutionContext, execute_plan
 
 LOCAL_SEEDS = range(48)
@@ -74,6 +84,25 @@ def _run_local_seed(seed: int) -> None:
                                n_partitions=2, capacity_factor=0.25)
         got = execute_plan(plan, tables, ctx)
         _check_parity(got, ref, ops, f"seed={seed}/kernel-join-residual")
+    # telemetry pass: a tracked run returns the SAME result set (so the
+    # reserved "_stats" key never leaks to callers — _check_parity's
+    # set-equality enforces it) and registers exact per-node counters
+    with telemetry.recording() as reg:
+        cp = planner.compile_plan(plan, tables,
+                                  ExecutionContext(executor="cost"))
+        tracked = cp(tables)
+    _check_parity(tracked, ref, ops, f"seed={seed}/cost+telemetry")
+    ps = reg.get(cp.cache_key)
+    assert ps is not None and ps.executions == 1, seed
+    occupied = [ns.last["groups_occupied"] for ns in ps.nodes.values()
+                if "groups_occupied" in ns.last]
+    assert all(v >= 0 for ns in ps.nodes.values()
+               for v in ns.last.values()), seed
+    has_topk = any(isinstance(n, L.TopK) for n in L.walk(plan.root))
+    if not has_topk and _root_aggregate(plan).key is not None:
+        # the grouped aggregate's occupied-group count is exact
+        occ_ref = int(np.count_nonzero(np.asarray(ref["_count"]) > 0))
+        assert occ_ref in occupied, (seed, occ_ref, occupied)
 
 
 @pytest.mark.parametrize("chunk", range(8))
@@ -94,13 +123,69 @@ DIST_FUZZ = """
 import sys
 sys.path.insert(0, {testdir!r})
 import numpy as np, jax
-from _plan_gen import (context_capacity_factor, exact_output, make_plan,
-                       make_tables, plan_agg_ops, plan_has_join)
+from _plan_gen import (_root_aggregate, context_capacity_factor,
+                       exact_output, make_plan, make_tables, plan_agg_ops,
+                       plan_has_join)
+from repro.analytics import plan as L, planner, telemetry
+import repro.analytics.physical as PH
 from repro.analytics.planner import ExecutionContext, execute_plan
 from repro.core.config import PlacementPolicy
 
 mesh = jax.make_mesh((4,), ("data",))
 tables = make_tables()
+
+def check(got, ref, ops, seed, tag):
+    assert set(got) == set(ref), (seed, tag)
+    for k in ref:
+        a, b = np.asarray(got[k]), np.asarray(ref[k])
+        if k == "_overflow":
+            assert int(a) == 0, (seed, tag, k, int(a))
+        elif exact_output(k, ops):
+            assert np.array_equal(a, b, equal_nan=True), (seed, tag, k)
+        else:
+            np.testing.assert_allclose(a, b, atol=1e-2, rtol=1e-4,
+                                       err_msg="%s/%s/%s" % (seed, tag, k))
+
+def conservation(reg, cp, tout, seed, tag):
+    # stats-conservation invariants over one recorded execution: routing
+    # conserves alive rows up to (surfaced) overflow, a broadcast's wire
+    # traffic is exactly alive*(n-1), and every overflow counter the
+    # executor accumulated is visible in the registry
+    ps = reg.get(cp.cache_key)
+    assert ps is not None and ps.executions == 1, (seed, tag)
+    nodes = ps.node_list()
+    ovf, joins, aggs = 0, [], []
+    for i, ns in sorted(ps.nodes.items()):
+        node = nodes[i]
+        assert all(v >= 0 for v in ns.last.values()), (seed, tag, ns)
+        if isinstance(node, PH.Exchange):
+            o = ns.last.get("overflow", 0)
+            ovf += o
+            if node.kind == "hash":
+                assert ns.last["alive_out"] == ns.last["alive_in"] - o, \\
+                    (seed, tag, ns.last)
+                assert ns.last["moved"] <= ns.last["alive_in"], \\
+                    (seed, tag, ns.last)
+            else:
+                assert ns.last["moved"] == ns.last["alive_in"] * 3, \\
+                    (seed, tag, ns.last)
+        elif isinstance(node, PH.Compact):
+            o = ns.last.get("overflow", 0)
+            ovf += o
+            assert ns.last["alive_out"] == ns.last["alive_in"] - o, \\
+                (seed, tag, ns.last)
+        elif isinstance(node, PH.PJoin) and node.dist is not None:
+            assert ns.last["out_alive"] <= ns.last["probe_alive"], \\
+                (seed, tag, ns.last)
+            joins.append((ns.last["probe_alive"], ns.last["build_alive"],
+                          ns.last["out_alive"]))
+        elif isinstance(node, PH.PAggregate) and node.key is not None:
+            assert ns.last["groups_occupied"] <= node.n_groups, \\
+                (seed, tag, ns.last)
+            aggs.append(ns.last["groups_occupied"])
+    assert ovf == int(np.asarray(tout["_overflow"])) == 0, (seed, tag, ovf)
+    return sorted(joins), sorted(aggs)
+
 for seed in {seeds!r}:
     plan = make_plan(seed)
     ops = plan_agg_ops(plan)
@@ -122,18 +207,26 @@ for seed in {seeds!r}:
                                          policy=PlacementPolicy.INTERLEAVE,
                                          capacity_factor=cf,
                                          dist_join="partitioned")))
+    recorded = []
     for tag, ctx in contexts:
         got = execute_plan(plan, tables, ctx)
-        assert set(got) == set(ref), (seed, tag)
-        for k in ref:
-            a, b = np.asarray(got[k]), np.asarray(ref[k])
-            if k == "_overflow":
-                assert int(a) == 0, (seed, tag, k, int(a))
-            elif exact_output(k, ops):
-                assert np.array_equal(a, b, equal_nan=True), (seed, tag, k)
-            else:
-                np.testing.assert_allclose(a, b, atol=1e-2, rtol=1e-4,
-                                           err_msg=f"{{seed}}/{{tag}}/{{k}}")
+        check(got, ref, ops, seed, tag)
+        if tag in ("il", "il-part"):
+            # tracked re-run: same results (check() proves "_stats" never
+            # leaks), plus exact conservation of the recorded counters
+            with telemetry.recording() as reg:
+                cp = planner.compile_plan(plan, tables, ctx)
+                tout = cp(tables)
+            check(tout, ref, ops, seed, tag + "+rec")
+            recorded.append(conservation(reg, cp, tout, seed, tag))
+    # registry totals are exact across placements: alive rows at joins
+    # and occupied groups are relational facts, independent of lowering
+    for other in recorded[1:]:
+        assert other == recorded[0], (seed, recorded)
+    has_topk = any(isinstance(n, L.TopK) for n in L.walk(plan.root))
+    if recorded and not has_topk and _root_aggregate(plan).key is not None:
+        occ = int(np.count_nonzero(np.asarray(ref["_count"]) > 0))
+        assert occ in recorded[0][1], (seed, occ, recorded[0])
 print("DIST_FUZZ_OK")
 """
 
