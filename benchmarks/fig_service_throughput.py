@@ -186,6 +186,15 @@ def run_faults() -> List[Row]:
          f"p99_ms={degraded.latency_p99_ms:.2f}"),
         ("fig_service_degraded_qps_ratio", ratio,
          "degraded_over_healthy_qps;floor=0.50;guarded_whenever_run"),
+        # p99 latency DECOMPOSED by serving phase (the tracing PR's
+        # attribution): value = degraded execute p99; the detail column
+        # carries the full breakdown so a p99 regression is attributable
+        # to queue wait vs retry backoff vs execute without re-running
+        ("fig_service_faults_p99_breakdown",
+         degraded.phase_p99_ms.get("execute", 0.0),
+         "execute_p99_ms;" + ";".join(
+             f"{k}_p99_ms={v:.2f}"
+             for k, v in degraded.phase_p99_ms.items())),
     ]
     for prio in sorted(degraded.per_class):
         cs = degraded.per_class[prio]

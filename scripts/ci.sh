@@ -44,6 +44,14 @@ python -m pytest -x -q
 # refresh_profile. The script configures its own 4 fake host devices.
 python scripts/drift_gate.py
 
+# named gate: request-scoped tracing — a traced chaos round must export
+# a valid Chrome trace (>= 6 phases, pool/worker lanes), leave no span
+# open, keep every request's phase attribution <= its wall latency with
+# one non-empty flight-recorder dump per injected fault, and an untraced
+# round must allocate ZERO spans (the tracing flag stays out of the
+# plan-cache key). The script configures its own 4 fake host devices.
+python scripts/trace_gate.py
+
 if [ -f "$BASELINE" ]; then
     python benchmarks/run.py --skip-slow --json BENCH_ci.json --check "$BASELINE"
 else

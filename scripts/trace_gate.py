@@ -1,0 +1,208 @@
+#!/usr/bin/env python
+"""CI gate for request-scoped tracing (ISSUE 8 acceptance).
+
+Serves a traced multi-tenant chaos round (fig_service_faults style:
+scheduled build failure + wait poison + mid-round pool kill, morsel-split
+over two pools with stealing), plus one traced whole-plan compile+execute
+for the plan-level spans, and exits non-zero if any contract is broken:
+
+  1. the exported Chrome trace is valid JSON with >= 6 distinct phase
+     names and populated pool/worker lanes (pid lanes beyond "service");
+  2. no span is left open after the round (span conservation);
+  3. every completed request's phase attribution (queue_wait/batch_wait/
+     retry_backoff/execute/merge) sums to <= its wall latency, and
+     ServiceStats reports a populated per-class p99 decomposition;
+  4. every injected fault produced a NON-EMPTY flight-recorder dump;
+  5. zero-cost-when-disabled: an identical untraced round allocates NO
+     spans (``Tracer.created`` unchanged), and flipping the tracing flag
+     does not change the plan-cache key (no re-jit).
+
+The script configures its own fake host devices, so it must run as a
+standalone process (scripts/ci.sh invokes it after drift_gate):
+
+    PYTHONPATH=src python scripts/trace_gate.py
+"""
+import json
+import os
+import sys
+import tempfile
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4"
+                           ).strip()
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.join(_ROOT, "src") not in sys.path:
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+
+def main() -> int:
+    from repro.analytics import planner, tracing
+    from repro.analytics.service import (AnalyticsService, RetryPolicy,
+                                         ServiceConfig,
+                                         ServiceFaultInjector,
+                                         ThreadPlacement)
+    from repro.analytics.service.service import PHASES
+    from repro.analytics.tpch import LOGICAL_QUERIES, generate, submit_query
+
+    data = generate(scale=0.004, seed=1)
+    tables = data.as_jax()
+    ctx = planner.ExecutionContext(executor="xla")
+
+    def config(faults=None):
+        return ServiceConfig(
+            n_pools=2, workers_per_pool=2, morsel_rows=997,
+            placement=ThreadPlacement.SPARSE, faults=faults,
+            retry=RetryPolicy(max_attempts=4, base_backoff_s=0.002,
+                              max_backoff_s=0.02))
+
+    def serve_round(faults=None):
+        """Three waves of the five TPC-H plans across three tenants and
+        two priority classes; waves advance dispatch ordinals past the
+        fault schedule (identical requests dedup into ONE share)."""
+        results, rids = {}, []
+        with AnalyticsService(config(faults)) as svc:
+            for _ in range(3):
+                rids += [submit_query(svc, n, data, context=ctx,
+                                      client_id=i % 3, priority=1 + i % 2)
+                         for i, n in enumerate(LOGICAL_QUERIES)]
+                results.update(svc.drain())
+            st = svc.stats()
+        return rids, results, st
+
+    # -- 0. warm the plan cache untraced, then measure the traced round --
+    planner.clear_plan_cache()
+    serve_round()
+    tracing.tracer().clear()
+
+    faults = ServiceFaultInjector(seed=3, build_fail_at={6},
+                                  poison_wait_at={8}, kill_pool_at=(11, 1))
+    with tracing.tracing() as tr:
+        rids, results, st = serve_round(faults)
+        # whole-plan compile+execute for the plan-level spans (the
+        # morsel-split service path never dispatches a whole CompiledPlan);
+        # the cache is cleared so the compile is a genuine miss
+        q6 = LOGICAL_QUERIES["q6"]
+        planner.clear_plan_cache()
+        planner.compile_plan(q6, tables, ctx)(tables)
+        open_left = tr.open_spans()
+        dumps = tr.flight.dumps()
+        path = os.path.join(tempfile.mkdtemp(prefix="trace_gate_"),
+                            "round.trace.json")
+        tr.trace().save(path)
+        trace = tr.trace()
+
+    fired = (faults.builds_failed + faults.waits_poisoned
+             + faults.pools_killed)
+    if fired != 3:
+        print(f"trace_gate: FAIL — expected all 3 scheduled faults to "
+              f"fire, got {fired} (builds={faults.builds_failed} "
+              f"poisons={faults.waits_poisoned} "
+              f"kills={faults.pools_killed}); the wave structure no "
+              "longer advances dispatch ordinals past the schedule")
+        return 1
+
+    # -- 1. chrome trace: valid JSON, >= 6 phases, pool lanes populated --
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents", [])
+    if not events:
+        print("trace_gate: FAIL — exported Chrome trace has no events")
+        return 1
+    names = {e["name"] for e in events if e["ph"] in ("X", "i")}
+    if len(names) < 6:
+        print(f"trace_gate: FAIL — only {len(names)} distinct phase "
+              f"names in the Chrome trace: {sorted(names)}")
+        return 1
+    pool_lanes = {p for p, _ in trace.lanes() if p.startswith("pool")}
+    if not pool_lanes:
+        print("trace_gate: FAIL — no pool/worker lanes in the trace "
+              f"(lanes: {trace.lanes()})")
+        return 1
+    needed = {"queue.wait", "dispatch.build", "morsel.run",
+              "merge.partials", "result.deliver", "retry.backoff",
+              "plan.compile", "plan.execute"}
+    missing = needed - names
+    if missing:
+        print(f"trace_gate: FAIL — serving-path phases missing from the "
+              f"trace: {sorted(missing)}")
+        return 1
+    print(f"trace_gate: chrome trace OK ({len(events)} events, "
+          f"{len(names)} phases, pool lanes {sorted(pool_lanes)}) "
+          f"-> {path}")
+
+    # -- 2. span conservation ------------------------------------------------
+    if open_left:
+        print(f"trace_gate: FAIL — {len(open_left)} spans left OPEN "
+              f"after the round: "
+              f"{[(o.name, o.trace_id) for o in open_left]}")
+        return 1
+
+    # -- 3. latency attribution ----------------------------------------------
+    completed = [r for r in results.values() if r.value is not None]
+    if not completed:
+        print("trace_gate: FAIL — chaos round completed no requests")
+        return 1
+    for res in completed:
+        if res.phases is None or set(res.phases) != set(PHASES):
+            print(f"trace_gate: FAIL — request {res.req_id} missing "
+                  f"phase attribution: {res.phases}")
+            return 1
+        total = sum(res.phases.values())
+        if total > res.latency_s + 1e-6:
+            print(f"trace_gate: FAIL — request {res.req_id} phase sum "
+                  f"{total:.6f}s exceeds wall {res.latency_s:.6f}s: "
+                  f"{res.phases}")
+            return 1
+    classes = [p for p, cs in st.per_class.items() if cs.phase_p99_ms]
+    if not classes or st.phase_p99_ms.get("execute", 0.0) <= 0.0:
+        print(f"trace_gate: FAIL — p99 decomposition not populated "
+              f"(service={st.phase_p99_ms}, classes={classes})")
+        return 1
+    print(f"trace_gate: attribution OK ({len(completed)} completed; "
+          f"p99 ms " + " ".join(f"{k}={st.phase_p99_ms[k]:.2f}"
+                                for k in PHASES)
+          + f"; classes {sorted(classes)})")
+
+    # -- 4. flight recorder: one non-empty dump per injected fault ----------
+    fault_dumps = [d for d in dumps if d.reason.startswith("fault.")]
+    if len(fault_dumps) != fired:
+        print(f"trace_gate: FAIL — {fired} faults fired but "
+              f"{len(fault_dumps)} flight dumps recorded: "
+              f"{[d.reason for d in dumps]}")
+        return 1
+    empty = [d.reason for d in fault_dumps if not d.spans]
+    if empty:
+        print(f"trace_gate: FAIL — EMPTY flight dumps for {empty}")
+        return 1
+    print(f"trace_gate: flight recorder OK "
+          f"({[d.reason for d in fault_dumps]}, "
+          f"{[len(d.spans) for d in fault_dumps]} spans)")
+
+    # -- 5. zero-cost when disabled + cache-key stability --------------------
+    before = tracing.tracer().created
+    serve_round()
+    after = tracing.tracer().created
+    if after != before:
+        print(f"trace_gate: FAIL — untraced round allocated "
+              f"{after - before} spans; a hot-path hook is missing its "
+              "tracing_enabled() guard")
+        return 1
+    off_key = planner.compile_plan(q6, tables, ctx).cache_key
+    tracing.enable_tracing()
+    try:
+        h0 = planner.plan_cache_info().hits
+        on = planner.compile_plan(q6, tables, ctx)
+    finally:
+        tracing.disable_tracing()
+    if on.cache_key != off_key or planner.plan_cache_info().hits != h0 + 1:
+        print("trace_gate: FAIL — tracing flag leaked into the "
+              "plan-cache key (flipping it re-compiled the plan)")
+        return 1
+    print("trace_gate: zero-overhead OK (untraced round allocated 0 "
+          "spans; tracing flag not in the plan-cache key)")
+    print("trace_gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

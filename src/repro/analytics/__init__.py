@@ -36,6 +36,12 @@ from repro.analytics.telemetry import (StatsRegistry, disable_telemetry,
                                        telemetry_enabled)
 from repro.analytics.telemetry import recording as telemetry_recording
 from repro.analytics.telemetry import registry as telemetry_registry
+from repro.analytics.tracing import (FlightRecorder, Span, Trace, Tracer,
+                                     disable_tracing, enable_tracing,
+                                     tracer, tracing_enabled)
+# the context manager is aliased so the package attribute ``tracing``
+# stays the submodule (mirrors telemetry_recording)
+from repro.analytics.tracing import tracing as tracing_scope
 from repro.analytics.tpch import LOGICAL_QUERIES
 from repro.analytics.tpch import generate as tpch_generate
 from repro.analytics.tpch import run_query as tpch_run_query

@@ -118,13 +118,19 @@ class PProject:
 class Exchange:
     """First-class data movement. ``kind``: "broadcast" (all-gather a build
     side), "hash" (all-to-all route rows to owner(``key``)), "gather"
-    (converge all rows). For hash exchanges ``capacity`` is the
-    per-destination slot budget (output buffer = n_shards * capacity rows)
-    and ``method`` the owner function; ``key=None`` marks a partial-sums
-    exchange (rows are group ids, always modulo-owned). ``moved_rows`` is
-    the estimated per-shard wire volume reported by explain()."""
+    (converge all rows), "allreduce" (FIRST_TOUCH's psum of replicated
+    (n_groups, C) partial tables: reduce-scatter + all-gather), or
+    "reduce_scatter" (LOCAL_ALLOC's owner-sharded merge: the first half
+    only). For hash exchanges ``capacity`` is the per-destination slot
+    budget (output buffer = n_shards * capacity rows) and ``method`` the
+    owner function; ``key=None`` marks a partial-sums exchange (rows are
+    group ids, always modulo-owned). ``moved_rows`` is the estimated
+    per-shard wire volume reported by explain(). "gather", "allreduce"
+    and "reduce_scatter" execute FUSED inside the consuming PAggregate —
+    the node exists so every policy's wire volume is priced on one
+    axis."""
     child: "PNode"
-    kind: str                               # broadcast | hash | gather
+    kind: str       # broadcast | hash | gather | allreduce | reduce_scatter
     key: Optional[str] = None
     capacity: int = 0
     method: str = "modulo"                  # hash | modulo owner function

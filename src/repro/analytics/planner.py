@@ -89,6 +89,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.analytics import physical as PH
 from repro.analytics import plan as L
 from repro.analytics import telemetry
+from repro.analytics import tracing
 from repro.analytics.columnar import (DENSE_GROUP_LIMIT, Table,
                                       finalize_stacked, group_aggregate,
                                       pkfk_join, pkfk_join_kernel,
@@ -756,9 +757,22 @@ class _Lowering:
                 child.rows, G, C, self.ctx.executor, self.profile))
             partial = PH.PPartialAggregate(child, node.key, G, dist_aggs,
                                            layout, rows=G, est=G)
-            merge = ("psum" if policy == PlacementPolicy.FIRST_TOUCH
-                     else "reduce_scatter")
-            return PH.PAggregate(partial, node.key, G, node.aggs, layout,
+            # the merge collective is a first-class Exchange node, so
+            # explain() prices EVERY policy's wire volume on the same
+            # axis (pushdown already had one): FT's psum is a ring
+            # allreduce over the (G, C) partial tables (reduce-scatter +
+            # all-gather, ~2 G (n-1)/n partial rows on the wire), LA's
+            # reduce_scatter is the first half only. Both execute FUSED
+            # in PAggregate (merge_partial_table), like "gather".
+            if policy == PlacementPolicy.FIRST_TOUCH:
+                merge, kind = "psum", "allreduce"
+                moved = 2 * G * (self.n - 1) // self.n
+            else:
+                merge, kind = "reduce_scatter", "reduce_scatter"
+                moved = G * (self.n - 1) // self.n
+            ex = PH.Exchange(partial, kind, rows=G, est=G,
+                             moved_rows=moved)
+            return PH.PAggregate(ex, node.key, G, node.aggs, layout,
                                  merge, med, rows=G, est=G)
         if policy == PlacementPolicy.PREFERRED:
             ex = PH.Exchange(child, "gather", rows=child.rows * self.n,
@@ -1045,8 +1059,9 @@ class _DistributedExecutor(_LocalExecutor):
         return Table(cols, self.tables[node.table]["_valid"])
 
     def _exchange(self, node: PH.Exchange) -> Table:
-        if node.kind == "gather":
-            raise TypeError("gather Exchange executes fused in PAggregate")
+        if node.kind in ("gather", "allreduce", "reduce_scatter"):
+            raise TypeError(f"{node.kind} Exchange executes fused in "
+                            f"PAggregate")
         child = self.run(node.child)
         if node.kind == "broadcast":
             if self.record:
@@ -1160,7 +1175,9 @@ class _DistributedExecutor(_LocalExecutor):
         axis, n = self.ctx.axis, self.n
         merge = node.merge
         if merge in ("psum", "reduce_scatter"):
-            partial, ovf = self.run(node.child)
+            # child is the fused allreduce/reduce_scatter Exchange (the
+            # priced movement node); the partial table comes from BELOW it
+            partial, ovf = self.run(node.child.child)
             policy = (PlacementPolicy.FIRST_TOUCH if merge == "psum"
                       else PlacementPolicy.LOCAL_ALLOC)
             return (merge_partial_table(partial, policy, axis, n),
@@ -1398,6 +1415,20 @@ class CompiledPlan:
         self.record = record
 
     def __call__(self, tables) -> Dict[str, jax.Array]:
+        # the tracing flag is read HERE, per dispatch — it is deliberately
+        # NOT part of the plan-cache key: plan.execute is a host-side span
+        # around an unchanged executable, so flipping it must never re-jit
+        # (only telemetry's ``record`` adds traced operations)
+        if not tracing.tracing_enabled():
+            return self._execute(tables)
+        t0 = time.monotonic()
+        out = self._execute(tables)
+        tracing.tracer().add_complete(
+            "plan.execute", "plan", t0, time.monotonic(), pid="plan",
+            key=hash(self.cache_key), recorded=self.record)
+        return out
+
+    def _execute(self, tables) -> Dict[str, jax.Array]:
         indexes = {}
         if self.ctx.mesh is None:
             for t, c in self.index_specs:
@@ -1436,12 +1467,20 @@ def compile_plan(plan: L.LogicalPlan, tables,
     key = (plan, ctx.cache_key(), _signature(tables), profile, record)
     entry = _PLAN_CACHE.get(key)
     if entry is None:
+        traced = tracing.tracing_enabled()
+        t0 = time.monotonic() if traced else 0.0
         L.validate(plan)     # fail fast (and once) instead of mid-trace
         phys = lower(plan, ctx, _true_rows(tables), profile)
         fn = jax.jit(functools.partial(_run_plan, phys, ctx, profile,
                                        record))
         entry = (phys, fn)
         _PLAN_CACHE.put(key, entry)
+        if traced:
+            # compile vs execute split per plan-cache key: this span is
+            # the lowering + jit construction a cache hit amortizes away
+            tracing.tracer().add_complete(
+                "plan.compile", "plan", t0, time.monotonic(), pid="plan",
+                key=hash(key))
     elif record:
         entry = _maybe_replan(key, entry, plan, ctx, profile, tables)
     phys, fn = entry

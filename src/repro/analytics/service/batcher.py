@@ -12,10 +12,12 @@ facade merges into ServiceStats.
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Tuple
 
 from repro.analytics import planner
+from repro.analytics import tracing
 from repro.analytics.service.queue import QueryRequest
 
 
@@ -93,6 +95,7 @@ class QueryBatcher:
                 planner.table_signature(req.tables))
 
     def group(self, requests: List[QueryRequest]) -> List[QueryBatch]:
+        t0 = time.monotonic() if tracing.tracing_enabled() else 0.0
         groups: Dict[Tuple, QueryBatch] = {}
         for req in requests:
             key = self.batch_key(req)
@@ -108,4 +111,8 @@ class QueryBatcher:
                 self._stats.batches += 1
                 if len(batch.requests) > 1:
                     self._stats.batched_queries += len(batch.requests)
+        if requests and t0 and tracing.tracing_enabled():
+            tracing.tracer().add_complete(
+                "batch.group", "batcher", t0, time.monotonic(),
+                requests=len(requests), batches=len(groups))
         return list(groups.values())

@@ -22,6 +22,8 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.analytics import tracing
+
 
 class InjectedServiceFault(RuntimeError):
     """Raised by ServiceFaultInjector hooks (build fail / wait poison)."""
@@ -86,6 +88,11 @@ class ServiceFaultInjector:
                 self._poison_pending.add(o)
             if fail_build:
                 self.builds_failed += 1
+                if tracing.tracing_enabled():
+                    # flight recorder: every injected fault must leave a
+                    # postmortem artifact (the chaos grid asserts it)
+                    tracing.tracer().flight_dump(
+                        "fault.build_fail", ordinal=o)
                 raise InjectedServiceFault(
                     f"injected build failure at dispatch {o}")
             return o
@@ -102,11 +109,19 @@ class ServiceFaultInjector:
             if poison:
                 self.waits_poisoned += 1
         if poison:
+            if tracing.tracing_enabled():
+                tracing.tracer().flight_dump(
+                    "fault.wait_poison", ordinal=ordinal,
+                    trace_id=task.trace_id)
             task.poison(InjectedServiceFault(
                 f"injected wait poison at dispatch {ordinal}"))
         if kill:
             with self._lock:
                 self.pools_killed += 1
+            if tracing.tracing_enabled():
+                tracing.tracer().flight_dump(
+                    "fault.pool_kill", ordinal=ordinal,
+                    pool=self.kill_pool_at[1])
             scheduler.kill_pool(self.kill_pool_at[1])
 
     def morsel_delay(self, pool_id: int) -> float:

@@ -35,6 +35,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Mapping, Optional
 
+from repro.analytics import tracing
 from repro.analytics.plan import LogicalPlan
 from repro.analytics.planner import ExecutionContext
 
@@ -222,6 +223,13 @@ class AdmissionQueue:
                         req = q.popleft()
                         self._depth -= 1
                         self._stats.queue_wait_total_s += now - req.submit_t
+                        if tracing.tracing_enabled():
+                            # retrospective: the wait is only known at
+                            # dequeue, when both stamps exist
+                            tracing.tracer().add_complete(
+                                "queue.wait", "queue", req.submit_t, now,
+                                trace_id=req.req_id, cls=req.priority,
+                                expired=req.expired(now))
                         if req.expired(now):
                             self._stats.expired += 1
                             self._cls(req.priority)["expired"] += 1
@@ -269,6 +277,12 @@ class AdmissionQueue:
                                 self._cls(r.priority)["expired"] += 1
                                 self._stats.queue_wait_total_s += (
                                     now - r.submit_t)
+                                if tracing.tracing_enabled():
+                                    tracing.tracer().add_complete(
+                                        "queue.wait", "queue",
+                                        r.submit_t, now,
+                                        trace_id=r.req_id,
+                                        cls=r.priority, expired=True)
                         b.clients[cid] = live
                         b.depth -= n
                         self._depth -= n

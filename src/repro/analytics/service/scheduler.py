@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.analytics import plan as L
 from repro.analytics import planner
+from repro.analytics import tracing
 from repro.analytics.columnar import Table, finalize_stacked, stacked_columns
 from repro.analytics.engine import (merge_morsel_partials, morsel_group_sums,
                                     morsel_slice_columns, morsel_slices)
@@ -112,7 +113,10 @@ class QueryTask:
         self._poison: Optional[BaseException] = None
         self.fault_ordinal: Optional[int] = None
         self.result: Optional[Dict[str, jax.Array]] = None
+        self.submit_t: float = 0.0          # scheduler.submit stamp
+        self.merge_t: float = 0.0           # last morsel done, merge begins
         self.done_t: float = 0.0            # completion stamp (monotonic)
+        self.trace_id: int = -1             # owning request id (service)
         if morsel_fn is None:
             self.morsels = [_Morsel(self, 0, 0, 0)]
         else:
@@ -168,6 +172,9 @@ class QueryTask:
                 self._finish()
 
     def _finish(self) -> None:
+        # the merge phase begins when the LAST morsel lands — everything
+        # between merge_t and done_t is morsel-order merge + finalize
+        self.merge_t = time.monotonic()
         if self._error is None and self.morsel_fn is not None:
             try:
                 # merge in MORSEL order, not completion order: the served
@@ -181,6 +188,10 @@ class QueryTask:
         # per-query latency must not include time spent waiting on other
         # tasks in the drain loop
         self.done_t = time.monotonic()
+        if tracing.tracing_enabled() and self.morsel_fn is not None:
+            tracing.tracer().add_complete(
+                "merge.partials", "scheduler", self.merge_t, self.done_t,
+                trace_id=self.trace_id, n_morsels=len(self.morsels))
         self._done.set()
 
     def wait(self, timeout: Optional[float] = None) -> Dict[str, jax.Array]:
@@ -366,6 +377,7 @@ class MorselScheduler:
                 raise RuntimeError("no live worker pools — every pool is "
                                    "dead or quarantined")
             self._tasks += 1
+            task.submit_t = time.monotonic()
             dense_pool = min(live, key=lambda p: len(p.queue)).pool_id
             # SPARSE stripes a task's morsels across every live pool,
             # starting from a per-task rotating base — otherwise
@@ -471,6 +483,12 @@ class MorselScheduler:
             self._requeue_locked()
             if newly:
                 self._cv.notify_all()
+        if newly and tracing.tracing_enabled():
+            tr = tracing.tracer()
+            for pid in newly:
+                tr.instant("pool.quarantine", "scheduler",
+                           pid=f"pool{pid}")
+            tr.flight_dump("pool.quarantine", pools=list(newly))
         return newly
 
     def run(self, plan: L.LogicalPlan, tables,
@@ -495,7 +513,13 @@ class MorselScheduler:
                      key=lambda p: len(p.queue), default=None)
         if victim is not None and victim.queue:
             pool.steals += 1
-            return victim.queue.pop()
+            m = victim.queue.pop()
+            if tracing.tracing_enabled():
+                tracing.tracer().instant(
+                    "morsel.steal", "scheduler", trace_id=m.task.trace_id,
+                    pid=f"pool{pool.pool_id}", victim=victim.pool_id,
+                    seq=m.seq)
+            return m
         return None
 
     def _worker(self, pool: WorkerPool) -> None:
@@ -516,7 +540,13 @@ class MorselScheduler:
                 time.sleep(delay)
             t0 = time.monotonic()
             m.task._run_morsel(m)
-            dt = time.monotonic() - t0 + delay  # EWMA must see the straggle
+            t1 = time.monotonic()
+            if tracing.tracing_enabled():
+                tracing.tracer().add_complete(
+                    "morsel.run", "scheduler", t0, t1,
+                    trace_id=m.task.trace_id, pid=f"pool{pool.pool_id}",
+                    seq=m.seq, rows=m.length)
+            dt = t1 - t0 + delay                # EWMA must see the straggle
             with self._cv:
                 pool.inflight -= 1
                 pool.heartbeat_t = time.monotonic()

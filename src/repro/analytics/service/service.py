@@ -45,6 +45,7 @@ from typing import Any, Dict, List, Mapping, Optional, Tuple
 import numpy as np
 
 from repro.analytics import telemetry
+from repro.analytics import tracing
 from repro.analytics.plan import LogicalPlan
 from repro.analytics.planner import ExecutionContext
 from repro.analytics.service.batcher import AdaptiveBatchWindow, QueryBatcher
@@ -101,12 +102,31 @@ class QueryResult:
     attempts: int = 1                   # dispatch attempts consumed
     priority: int = 1
     error: Optional[str] = None         # terminal failure, per dispatch
+    # latency attribution for completed requests: seconds per phase
+    # (queue_wait / batch_wait / retry_backoff / execute / merge), built
+    # from DISJOINT sub-intervals of [submit_t, done_t] so the sum can
+    # never exceed latency_s; None for expired/shed/failed terminals
+    phases: Optional[Dict[str, float]] = None
 
 
 def _pct(sorted_vals: List[float], q: float) -> float:
     if not sorted_vals:
         return 0.0
     return float(np.percentile(np.asarray(sorted_vals), q))
+
+
+# latency-attribution phase names, in serving-path order
+PHASES = ("queue_wait", "batch_wait", "retry_backoff", "execute", "merge")
+
+
+def _phase_pcts(samples: List[Dict[str, float]],
+                q: float) -> Dict[str, float]:
+    """Per-phase percentile (ms) over a window of phase dicts."""
+    out: Dict[str, float] = {}
+    for name in PHASES:
+        vals = [p[name] for p in samples if name in p]
+        out[name] = _pct(vals, q) * 1e3 if vals else 0.0
+    return out
 
 
 @dataclass
@@ -123,6 +143,12 @@ class ClassStats:
     retries: int = 0
     deadline_total: int = 0        # terminal requests that HAD a deadline
     deadline_met: int = 0          # ... that got a value within it
+    # latency attribution (ms): phase -> percentile over this class's
+    # completed requests, decomposing the end-to-end percentile into
+    # queue_wait / batch_wait / retry_backoff / execute / merge
+    phase_p50_ms: Dict[str, float] = field(default_factory=dict)
+    phase_p95_ms: Dict[str, float] = field(default_factory=dict)
+    phase_p99_ms: Dict[str, float] = field(default_factory=dict)
 
     @property
     def slo_attainment(self) -> float:
@@ -161,6 +187,10 @@ class ServiceStats:
     queue_wait_p50_ms: float = 0.0
     queue_wait_p95_ms: float = 0.0
     queue_wait_p99_ms: float = 0.0
+    # fleet-wide latency attribution (ms): where the pXX actually goes
+    phase_p50_ms: Dict[str, float] = field(default_factory=dict)
+    phase_p95_ms: Dict[str, float] = field(default_factory=dict)
+    phase_p99_ms: Dict[str, float] = field(default_factory=dict)
     # execution-telemetry snapshot (the process-global StatsRegistry at
     # stats() time — all zero unless telemetry is enabled): plans with
     # recorded stats, recorded executions, plans currently outside the
@@ -211,6 +241,10 @@ class AnalyticsService:
         window = self.config.histogram_window
         self._latencies: "deque[float]" = deque(maxlen=window)
         self._waits: "deque[float]" = deque(maxlen=window)
+        # latency-attribution windows: phase dicts for completed requests,
+        # fleet-wide and per class (same bounded-window discipline)
+        self._phases: "deque[Dict[str, float]]" = deque(maxlen=window)
+        self._class_phases: Dict[int, deque] = {}
         self._completed = 0
         self._failed = 0
         self._expired_late = 0     # expired after dequeue (not queue-counted)
@@ -453,7 +487,8 @@ class AnalyticsService:
             # injected build fault): that failure belongs to THIS share
             # only, never to the round's other requests — and is retried
             # under the policy before going terminal
-            task, attempt, err = self._dispatch_share(share)
+            task, attempt, err, build_start, backoff = \
+                self._dispatch_share(share)
             if task is None:
                 self._fan_out(share, None, err, attempt, out)
             else:
@@ -462,11 +497,13 @@ class AnalyticsService:
                     # successful submit — a share that never dispatched
                     # deduped nothing
                     self._dedup_hits += len(share) - 1
-                inflight.append((task, share, attempt))
-        for task, share, attempt in inflight:
+                inflight.append((task, share, attempt, build_start,
+                                 backoff))
+        for task, share, attempt, build_start, backoff in inflight:
             # fault isolation: one failing dispatch must not discard the
             # round's other results or poison co-submitted clients
-            self._await_share(task, share, attempt, out)
+            self._await_share(task, share, attempt, out, build_start,
+                              backoff)
 
     def _share_deadline(self, share: List[QueryRequest]) -> Optional[float]:
         """The share keeps trying while ANY member can still benefit."""
@@ -488,33 +525,70 @@ class AnalyticsService:
 
     def _try_dispatch(self, rep: QueryRequest):
         """One build+submit attempt -> (task, None) | (None, error str)."""
+        traced = tracing.tracing_enabled()
+        t0 = time.monotonic() if traced else 0.0
         try:
             task = self.scheduler.build_task(rep.plan, rep.tables,
                                              rep.context)
+            # thread the request id through the scheduler BEFORE submit:
+            # morsel.run / steal / merge spans attribute to this request
+            task.trace_id = rep.req_id
             self.scheduler.submit(task)
         except Exception as e:  # noqa: BLE001 — reported per share
+            if traced:
+                tracing.tracer().add_complete(
+                    "dispatch.build", "service", t0, time.monotonic(),
+                    trace_id=rep.req_id, error=type(e).__name__)
             return None, f"{type(e).__name__}: {e}"
+        if traced:
+            tracing.tracer().add_complete(
+                "dispatch.build", "service", t0, time.monotonic(),
+                trace_id=rep.req_id, morsels=len(task.morsels))
         with self._lock:
             self._dispatches += 1
         return task, None
 
+    def _backoff(self, attempt: int, rep: QueryRequest) -> float:
+        """Sleep the retry backoff; returns the slept seconds (the
+        retry_backoff attribution phase) and records the span."""
+        delay = self.config.retry.backoff_s(attempt, key=rep.req_id)
+        if tracing.tracing_enabled():
+            t0 = time.monotonic()
+            time.sleep(delay)
+            tracing.tracer().add_complete(
+                "retry.backoff", "service", t0, time.monotonic(),
+                trace_id=rep.req_id, attempt=attempt)
+        else:
+            time.sleep(delay)
+        return delay
+
     def _dispatch_share(self, share: List[QueryRequest]):
-        """Build+submit with retry/backoff -> (task|None, attempts, err)."""
+        """Build+submit with retry/backoff.
+
+        Returns (task|None, attempts, err, build_start, backoff_s):
+        ``build_start`` is the monotonic stamp at which THIS share's
+        first build attempt began (the end of its batch-wait phase) and
+        ``backoff_s`` the backoff slept so far — both feed latency
+        attribution."""
         rep = share[0]
         deadline = self._share_deadline(share)
+        build_start = time.monotonic()
+        backoff = 0.0
         attempt = 0
         while True:
             attempt += 1
             task, err = self._try_dispatch(rep)
             if task is not None:
-                return task, attempt, None
+                return task, attempt, None, build_start, backoff
             if not self._can_retry(attempt, deadline, rep):
-                return None, attempt, err
+                return None, attempt, err, build_start, backoff
             self._count_retry(rep)
-            time.sleep(self.config.retry.backoff_s(attempt, key=rep.req_id))
+            backoff += self._backoff(attempt, rep)
 
     def _await_share(self, task, share: List[QueryRequest], attempt: int,
-                     out: Optional[Dict[int, QueryResult]]) -> None:
+                     out: Optional[Dict[int, QueryResult]],
+                     build_start: float = 0.0,
+                     backoff: float = 0.0) -> None:
         """Wait for a dispatched share; retry failed/hung dispatches under
         the policy (per-request deadline respected across attempts)."""
         rep = share[0]
@@ -525,7 +599,8 @@ class AnalyticsService:
                 value, error, deadline_hit = self._await_task(task, deadline)
                 if error is None:
                     self._fan_out(share, task, None, attempt, out,
-                                  value=value)
+                                  value=value, build_start=build_start,
+                                  backoff=backoff)
                     return
                 if deadline_hit:
                     # every member's deadline passed mid-flight (the share
@@ -539,7 +614,7 @@ class AnalyticsService:
                 self._fan_out(share, task, error, attempt, out)
                 return
             self._count_retry(rep)
-            time.sleep(self.config.retry.backoff_s(attempt, key=rep.req_id))
+            backoff += self._backoff(attempt, rep)
             attempt += 1
             # re-dispatch: whole-plan tasks are idempotent (same compiled
             # executable, same inputs) and morsel partials merge in morsel
@@ -575,15 +650,33 @@ class AnalyticsService:
     # -- terminal-result recording ------------------------------------------
     def _fan_out(self, share: List[QueryRequest], task, error: Optional[str],
                  attempts: int, out: Optional[Dict[int, QueryResult]],
-                 value=None) -> None:
+                 value=None, build_start: float = 0.0,
+                 backoff: float = 0.0) -> None:
         # latency uses the task's own completion stamp, not this loop's
         # join order (a fast query must not inherit a slow peer's
         # wait-loop position)
         done = (task.done_t if task is not None and task.done_t
                 else time.monotonic())
         for req in share:
+            phases = None
+            if error is None and value is not None and task is not None \
+                    and build_start and task.submit_t:
+                # disjoint sub-intervals of [submit_t, done_t], so the sum
+                # can never exceed the end-to-end wall:
+                #   [submit, dequeue] [dequeue, build] (backoff sleeps)
+                #   [sched submit, last morsel] [last morsel, merged]
+                phases = {
+                    "queue_wait": max(0.0, req.dispatch_t - req.submit_t)
+                                  if req.dispatch_t else 0.0,
+                    "batch_wait": max(0.0, build_start - req.dispatch_t)
+                                  if req.dispatch_t else 0.0,
+                    "retry_backoff": backoff,
+                    "execute": max(0.0, task.merge_t - task.submit_t),
+                    "merge": max(0.0, task.done_t - task.merge_t),
+                }
             self._record(req, value=value, error=error, attempts=attempts,
-                         batch_size=len(share), done=done, out=out)
+                         batch_size=len(share), done=done, out=out,
+                         phases=phases)
 
     def _class_counts(self, priority: int) -> Dict[str, int]:
         return self._classes.setdefault(priority, _new_class_counts())
@@ -598,8 +691,10 @@ class AnalyticsService:
                 shed: bool = False, late_expired: bool = False,
                 attempts: int = 1, batch_size: int = 1,
                 done: Optional[float] = None,
-                out: Optional[Dict[int, QueryResult]] = None) -> None:
+                out: Optional[Dict[int, QueryResult]] = None,
+                phases: Optional[Dict[str, float]] = None) -> None:
         """The single terminal-result sink: stats, SLO, result store."""
+        traced = tracing.tracing_enabled()
         done = time.monotonic() if done is None else done
         wait = ((req.dispatch_t if req.dispatch_t else done) - req.submit_t)
         res = QueryResult(
@@ -611,7 +706,20 @@ class AnalyticsService:
             queue_wait_s=max(0.0, wait),
             latency_s=max(0.0, done - req.submit_t),
             batch_size=batch_size, expired=expired, shed=shed,
-            attempts=attempts, priority=req.priority, error=error)
+            attempts=attempts, priority=req.priority, error=error,
+            phases=phases)
+        if traced:
+            if shed:
+                # graceful degradation tripped: leave a postmortem
+                tracing.tracer().flight_dump(
+                    "overload.shed", req=req.req_id, cls=req.priority)
+            # delivery lag: task completion -> terminal result visible
+            tracing.tracer().add_complete(
+                "result.deliver", "service", done, time.monotonic(),
+                trace_id=req.req_id,
+                outcome=("error" if error is not None else
+                         "expired" if expired else
+                         "shed" if shed else "ok"))
         with self._lock:
             cls = self._class_counts(req.priority)
             if error is not None:
@@ -628,6 +736,13 @@ class AnalyticsService:
                 cls["completed"] += 1
                 self._latencies.append(res.latency_s)
                 self._waits.append(res.queue_wait_s)
+                if phases is not None:
+                    self._phases.append(phases)
+                    pw = self._class_phases.get(req.priority)
+                    if pw is None:
+                        pw = self._class_phases[req.priority] = deque(
+                            maxlen=self.config.histogram_window)
+                    pw.append(phases)
             if req.deadline_s is not None:
                 cls["deadline_total"] += 1
                 if error is None and not expired and not shed \
@@ -657,6 +772,9 @@ class AnalyticsService:
             dedup_hits = self._dedup_hits
             window = self._window
             classes = {p: dict(c) for p, c in self._classes.items()}
+            phases = list(self._phases)
+            class_phases = {p: list(w)
+                            for p, w in self._class_phases.items()}
             busy = self._busy_s
             if self._active_drains > 0:   # include the in-progress round
                 busy += time.monotonic() - self._busy_start
@@ -673,6 +791,11 @@ class AnalyticsService:
             cs.retries = c["retries"]
             cs.deadline_total = c["deadline_total"]
             cs.deadline_met = c["deadline_met"]
+        for p, w in class_phases.items():
+            cs = per_class.setdefault(p, ClassStats(priority=p))
+            cs.phase_p50_ms = _phase_pcts(w, 50)
+            cs.phase_p95_ms = _phase_pcts(w, 95)
+            cs.phase_p99_ms = _phase_pcts(w, 99)
         return ServiceStats(
             submitted=qs.submitted, admitted=qs.admitted,
             rejected=qs.rejected_full, expired=qs.expired + expired_late,
@@ -691,10 +814,25 @@ class AnalyticsService:
             queue_wait_p50_ms=_pct(waits, 50) * 1e3,
             queue_wait_p95_ms=_pct(waits, 95) * 1e3,
             queue_wait_p99_ms=_pct(waits, 99) * 1e3,
+            phase_p50_ms=_phase_pcts(phases, 50),
+            phase_p95_ms=_phase_pcts(phases, 95),
+            phase_p99_ms=_phase_pcts(phases, 99),
             plans_tracked=tsum["plans_tracked"],
             telemetry_executions=tsum["executions"],
             drifting_plans=tsum["drifting_plans"],
             replans=tsum["replans"])
+
+    # -- tracing ------------------------------------------------------------
+    def export_trace(self, path: str) -> None:
+        """Write the tracer's current span window as Chrome trace-event
+        JSON (open in perfetto or chrome://tracing). Spans exist only for
+        rounds served under ``tracing.tracing()`` / ``enable_tracing``."""
+        tracing.tracer().trace().save(path)
+
+    def flight_dumps(self):
+        """The flight recorder's postmortem ring (fault trips, sheds,
+        quarantines, worker leaks) — newest last."""
+        return tracing.tracer().flight.dumps()
 
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:
@@ -703,6 +841,9 @@ class AnalyticsService:
         self.stop()
         unjoined = self.scheduler.close(timeout=self.config.close_timeout_s)
         if unjoined:
+            if tracing.tracing_enabled():
+                tracing.tracer().flight_dump("worker.leak",
+                                             unjoined=list(unjoined))
             raise WorkerLeakError(unjoined)
 
     def __enter__(self) -> "AnalyticsService":

@@ -24,6 +24,7 @@ Distributed pieces run in ``run_with_devices`` subprocesses (the parent
 process must keep its real single device for the smoke tests).
 """
 import os
+import re
 
 import numpy as np
 import pytest
@@ -114,8 +115,9 @@ def test_explain_analyze_local_annotates():
 # explain_analyze golden (4-shard mesh)
 # ---------------------------------------------------------------------------
 # REGEN: run the code below with XLA_FLAGS=--xla_force_host_platform_
-# device_count=4 and write stdout to tests/fixtures/explain_analyze_q3.txt
-# ONLY when a lowering/telemetry change is intentional.
+# device_count=4, replace the header's wall=<N>ms token with wall=<WALL>,
+# and write stdout to tests/fixtures/explain_analyze_q3.txt ONLY when a
+# lowering/telemetry change is intentional.
 EXPLAIN_CODE = """
 import numpy as np, jax
 from jax.sharding import Mesh
@@ -137,6 +139,9 @@ print(telemetry.explain_analyze(LOGICAL_QUERIES["q3"], tables, ctx))
 
 def test_explain_analyze_matches_golden():
     got = run_with_devices(EXPLAIN_CODE, n_devices=4).strip("\n")
+    # wall-clock is the one nondeterministic token; the fixture stores the
+    # placeholder form.
+    got = re.sub(r"wall=[0-9.]+ms", "wall=<WALL>", got)
     with open(os.path.join(FIXDIR, "explain_analyze_q3.txt")) as f:
         want = f.read().strip("\n")
     assert got == want, (
