@@ -21,8 +21,8 @@ import jax.numpy as jnp
 from benchmarks.common import Row, run_in_mesh, time_fn
 from repro.analytics import planner
 from repro.analytics.datasets import blanas_join
-from repro.analytics.dist_join_bench import (chain_code, pushdown_code,
-                                             sweep_code)
+from repro.analytics.dist_join_bench import (chain_code, exchange_code,
+                                             pushdown_code, sweep_code)
 from repro.analytics.join import (build_hash_index, build_radix_index,
                                   build_sorted_index, hash_join, index_join,
                                   probe_hash_index, probe_radix_index,
@@ -33,6 +33,7 @@ DIST_BUILDS = {"small_build": 1 << 10, "large_build": 1 << 18}
 DIST_DEVICES = 8
 PUSHDOWN_ROWS, PUSHDOWN_GROUPS = 1 << 18, 1 << 9
 CHAIN_ROWS, CHAIN_DIM = 1 << 17, 1 << 15
+EXCHANGE_PROBE, EXCHANGE_BUILD = 1 << 18, 1 << 14
 
 
 def run() -> List[Row]:
@@ -95,6 +96,22 @@ def run_dist() -> List[Row]:
         rows.append((f"fig7_dist_agg_{tag}", pd[tag]["us"],
                      f"rows={PUSHDOWN_ROWS};groups={PUSHDOWN_GROUPS};"
                      f"moved_rows={pd[tag]['moved_rows']}"))
+
+    # hash-Exchange routing LAYOUT pass: the same partitioned join with
+    # the per-row send layout computed by the stable argsort vs the
+    # radix-histogram prefix sums (both forced), plus which one the cost
+    # model's static exchange_costs crossover picks at this size — the
+    # two lowerings are bit-identical, so this row is purely wall-clock
+    exch = run_in_mesh(exchange_code(build=EXCHANGE_BUILD,
+                                     probes=[EXCHANGE_PROBE],
+                                     devices=DIST_DEVICES),
+                       n_devices=DIST_DEVICES, timeout=900)
+    er = exch[str(EXCHANGE_PROBE)]
+    for impl in ("argsort", "radix"):
+        rows.append((f"fig7_dist_exchange_{impl}", er[impl],
+                     f"probe={EXCHANGE_PROBE};build={EXCHANGE_BUILD};"
+                     f"moved_rows={er['moved_rows']};"
+                     f"cost_model_picks={er['cost_picks']}"))
 
     # chained partitioned joins: occupancy-aware Compact bounds the
     # routed-buffer growth between hops (the max buffer is read off the

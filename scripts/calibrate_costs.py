@@ -29,6 +29,19 @@ the MEASURED crossover build size B* gives
 which is written into the profile so planner.choose_dist_join flips
 strategies where this hardware actually flips.
 
+With ``--exchange`` it measures the hash-Exchange ROUTING LAYOUT
+crossover on the same fake-device child mesh: the partitioned join with
+``exchange_impl`` forced to the stable argsort vs the radix-histogram
+layout at a sweep of probe sizes. The model prices the argsort layout at
+sort_pass_factor * log2(per-shard rows) pass-equivalents and the radix
+layout flat; setting the two equal at the MEASURED crossover probe size
+P* gives
+
+    radix_route_factor = sort_pass_factor * log2(P* / devices)
+
+written into the profile so planner.choose_exchange_impl flips layouts
+where this hardware actually flips.
+
 With ``--refresh PROFILE.json`` it instead runs the TELEMETRY loop: load
 the profile, execute a representative recorded workload (a selective-
 probe partitioned join on a fake-device mesh — the shape whose runtime
@@ -55,6 +68,7 @@ the two remaining hand-set constants:
 
     PYTHONPATH=src python scripts/calibrate_costs.py --out cost_profile.json
     PYTHONPATH=src python scripts/calibrate_costs.py --dist --out cost_profile.json
+    PYTHONPATH=src python scripts/calibrate_costs.py --exchange --out cost_profile.json
     PYTHONPATH=src python scripts/calibrate_costs.py --sweep-groups --out cost_profile.json
     PYTHONPATH=src python scripts/calibrate_costs.py --refresh cost_profile.json
     >>> planner.load_cost_profile("cost_profile.json")
@@ -100,6 +114,41 @@ def calibrate_dist(probe: int, builds, devices: int):
         # largest measured build so the model keeps broadcasting there
         b_star = 2.0 * sweep[-1][0]
     factor = b_star * devices / (probe + b_star)
+    return max(round(float(factor), 4), 0.01), raw
+
+
+def calibrate_exchange(probes, build: int, devices: int,
+                       sort_pass_factor: float):
+    """(radix_route_factor, raw sweep) from the forced-impl Exchange
+    sweep — repro.analytics.dist_join_bench.exchange_code, the SAME
+    snippet fig7_index_join.run_dist records, through the same
+    subprocess-mesh harness.
+
+    choose_exchange_impl compares sort_pass_factor * log2(n) against the
+    flat radix_route_factor at n = per-shard routed rows; equality at the
+    measured crossover probe size P* fits the flat constant."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for p in (root, os.path.join(root, "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    from benchmarks.common import run_in_mesh
+    from repro.analytics.dist_join_bench import exchange_code
+    raw = run_in_mesh(exchange_code(build=build, probes=probes,
+                                    devices=devices),
+                      n_devices=devices, timeout=1800)
+    sweep = sorted((int(p), d) for p, d in raw.items())
+    # crossover: first probe size where the radix layout beats the
+    # argsort; geometric midpoint with its argsort-winning neighbor
+    p_star = None
+    for i, (p, d) in enumerate(sweep):
+        if d["radix"] < d["argsort"]:
+            p_star = (math.sqrt(sweep[i - 1][0] * p) if i else float(p))
+            break
+    if p_star is None:
+        # radix never won in range: pin the crossover just above the
+        # largest measured probe so the model keeps the argsort layout
+        p_star = 2.0 * sweep[-1][0]
+    factor = sort_pass_factor * math.log2(max(p_star / devices, 2.0))
     return max(round(float(factor), 4), 0.01), raw
 
 
@@ -235,7 +284,8 @@ def refresh_from_telemetry(path: str, devices: int) -> None:
     with open(path) as f:
         raw = json.load(f)
     updates = {}
-    for entry in ("dist_route_factor", "compact_margin"):
+    for entry in ("dist_route_factor", "compact_margin",
+                  "filter_selectivity"):
         new = getattr(refreshed, entry)
         if new is not None and new != getattr(profile, entry):
             updates[entry] = new
@@ -276,6 +326,16 @@ def main() -> None:
                     help="also measure the broadcast vs partitioned "
                          "distributed-join crossover on a fake-device mesh "
                          "and fit dist_route_factor")
+    ap.add_argument("--exchange", action="store_true",
+                    help="also measure the argsort vs radix Exchange "
+                         "routing-layout crossover on a fake-device mesh "
+                         "and fit radix_route_factor")
+    ap.add_argument("--exchange-probes", type=int, nargs="+",
+                    default=[1 << b for b in range(10, 19, 2)],
+                    help="probe sizes to sweep for the --exchange "
+                         "crossover")
+    ap.add_argument("--exchange-build", type=int, default=1 << 14,
+                    help="build-side size for the --exchange sweep")
     ap.add_argument("--sweep-groups", action="store_true",
                     help="also sweep n_groups to fit dense_group_limit and "
                          "the partitioned-layout capacity factor")
@@ -369,6 +429,15 @@ def main() -> None:
         profile["dist_probe"] = args.dist_probe
         profile["dist_devices"] = args.dist_devices
         profile["raw_us"]["dist_join"] = raw_dist
+    if args.exchange:
+        # fit against the sort factor just measured above, so both sides
+        # of the choose_exchange_impl comparison share one unit system
+        factor, raw_ex = calibrate_exchange(
+            args.exchange_probes, args.exchange_build, args.dist_devices,
+            profile["sort_pass_factor"])
+        profile["radix_route_factor"] = factor
+        profile["exchange_build"] = args.exchange_build
+        profile["raw_us"]["exchange_impl"] = raw_ex
 
     with open(args.out, "w") as f:
         json.dump(profile, f, indent=2)

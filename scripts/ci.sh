@@ -35,6 +35,15 @@ export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 # fail fast with a readable tree diff before the full suite runs)
 python -m pytest -x -q tests/test_explain_golden.py
 
+# named gate: radix-kernel digit parity — ref and Pallas(interpret) must
+# bin NEGATIVE keys (incl. the engine's -1 routed-padding sentinel)
+# identically at every shift, and the block-padded histogram must match
+# the unpadded oracle bit-exactly; the radix Exchange routing layout is
+# built on both properties, so a drift here corrupts routed buffers
+# before any parity suite would localize it
+python -m pytest -x -q tests/test_kernels_analytics.py \
+    -k "negative_key or padded_bin_counts"
+
 python -m pytest -x -q
 
 # named gate: the telemetry feedback loop — a deliberately mis-priced

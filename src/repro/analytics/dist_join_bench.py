@@ -19,6 +19,15 @@ group-by, aggregate push-down forced on vs off, wall-clock + the physical
 plan's estimated moved rows) and ``chain_code`` (two chained partitioned
 joins, occupancy-aware Compact on vs off, wall-clock + the largest routed
 buffer either plan materializes).
+
+``exchange_code`` (PR 9) measures the hash Exchange ROUTING LAYOUT pass:
+the same partitioned join with ``exchange_impl`` forced to the stable
+argsort and to the radix-histogram layout at a sweep of probe sizes,
+plus the cost model's own static pick and the plan's estimated moved
+rows at each point. Shared by ``fig7_index_join.run_dist`` (two forced
+rows + the pick) and ``calibrate_costs.py --exchange`` (crossover sweep
+fitting ``radix_route_factor``) for the same one-copy reason as the
+join sweep.
 """
 
 # ONE timing helper shared (textually prepended) by every child template:
@@ -78,6 +87,66 @@ def sweep_code(*, probe: int, builds, devices: int) -> str:
     """The runnable child-process source for one (probe, builds) sweep."""
     return SWEEP_CODE.format(probe=probe, builds=sorted(builds),
                              devices=devices)
+
+
+EXCHANGE_CODE = BENCH_SNIPPET + """
+import json, numpy as np, jax, jax.numpy as jnp
+from repro.analytics import plan as L
+from repro.analytics import physical as PH
+from repro.analytics import planner
+from repro.core.config import PlacementPolicy
+
+mesh = jax.make_mesh(({devices},), ("data",))
+rng = np.random.RandomState(17)
+build_n = {build}
+
+lplan = L.LogicalPlan(
+    L.scan("probe").join(L.scan("build"), "pk", "bk", {{"_v": "bv"}})
+     .aggregate(None, 1, count=("count", "_v"), checksum=("sum", "_v")),
+    ("count", "checksum"))
+
+def probe_exchange(phys):
+    # the LARGEST keyed hash Exchange is the probe-side routing pass
+    return max((n for n in PH.walk_unique(phys.root)
+                if isinstance(n, PH.Exchange) and n.key is not None),
+               key=lambda n: n.rows)
+
+res = {{}}
+for probe_n in {probes}:
+    tables = {{
+        "probe": {{"pk": jnp.asarray(
+            rng.randint(0, build_n, probe_n).astype(np.int32))}},
+        "build": {{"bk": jnp.asarray(rng.permutation(build_n)
+                                     .astype(np.int32)),
+                   "bv": jnp.asarray(rng.rand(build_n)
+                                     .astype(np.float32))}}}}
+    row = {{}}
+    for impl in ("argsort", "radix"):
+        ctx = planner.ExecutionContext(executor="xla", mesh=mesh,
+                                       policy=PlacementPolicy.FIRST_TOUCH,
+                                       dist_join="partitioned",
+                                       exchange_impl=impl)
+        cp = planner.compile_plan(lplan, tables, ctx)
+        row[impl] = bench(cp, tables)
+    ctx = planner.ExecutionContext(executor="xla", mesh=mesh,
+                                   policy=PlacementPolicy.FIRST_TOUCH,
+                                   dist_join="partitioned",
+                                   exchange_impl="cost")
+    ex = probe_exchange(planner.compile_plan(lplan, tables, ctx).physical)
+    row["cost_picks"] = ex.impl
+    row["moved_rows"] = ex.moved_rows
+    res[str(probe_n)] = row
+print(json.dumps(res))
+"""
+
+
+def exchange_code(*, build: int, probes, devices: int) -> str:
+    """Child source measuring one partitioned join with the Exchange
+    routing layout forced to argsort and to radix at each probe size,
+    plus the cost model's static pick and the plan's estimated moved
+    rows at that point."""
+    return EXCHANGE_CODE.format(build=build, probes=sorted(probes),
+                                devices=devices)
 
 
 PUSHDOWN_CODE = BENCH_SNIPPET + """

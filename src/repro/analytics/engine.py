@@ -50,6 +50,7 @@ from repro.analytics.columnar import (segment_distinct, segment_median,
                                       stacked_group_sums)
 from repro.analytics.hashing import partition_of
 from repro.analytics.physical import ceil128
+from repro.kernels.radix_partition.ops import block_histograms
 from repro.core.config import PlacementPolicy
 
 
@@ -65,13 +66,17 @@ def route_records(keys: jax.Array, vals: jax.Array, n_shards: int,
     ``vals`` may carry trailing measure dims — (N,) or (N, C) — so a stacked
     multi-aggregate matrix rides through the same routing as its keys (the
     planner's INTERLEAVE Aggregate backend)."""
+    if keys.shape[0] == 0:  # degenerate empty shard: all-padding send layout
+        k_out = jnp.full((n_shards, capacity), -1, keys.dtype)
+        v_out = jnp.zeros((n_shards, capacity) + vals.shape[1:], vals.dtype)
+        return k_out, v_out, jnp.zeros((), jnp.int32)
     order = jnp.argsort(owner, stable=True)
     sk, sv, so = keys[order], vals[order], owner[order]
     counts = jnp.bincount(owner, length=n_shards)
     starts = jnp.cumsum(counts) - counts
     idx = starts[:, None] + jnp.arange(capacity)[None, :]
     valid = jnp.arange(capacity)[None, :] < jnp.minimum(counts, capacity)[:, None]
-    idx = jnp.clip(idx, 0, keys.shape[0] - 1)
+    idx = jnp.clip(idx, 0, max(keys.shape[0] - 1, 0))
     k_out = jnp.where(valid, sk[idx], -1)
     vmask = valid.reshape(valid.shape + (1,) * (sv.ndim - 1))
     v_out = jnp.where(vmask, sv[idx], 0)
@@ -132,15 +137,97 @@ def route_table_rows(cols, weights: jax.Array, owner: jax.Array,
     n_shards * capacity rows per shard; rows beyond a destination's
     capacity are counted in overflow (local, caller psums)."""
     n_rows = weights.shape[0]
+    if n_rows == 0:
+        return _empty_routed(cols, weights, n_shards, capacity)
     order = jnp.argsort(owner, stable=True)
     counts = jnp.bincount(owner, length=n_shards)
     starts = jnp.cumsum(counts) - counts
     slot = jnp.arange(capacity)
-    idx = jnp.clip(starts[:, None] + slot[None, :], 0, n_rows - 1)
+    idx = jnp.clip(starts[:, None] + slot[None, :], 0, max(n_rows - 1, 0))
     valid = slot[None, :] < jnp.minimum(counts, capacity)[:, None]
 
     def exchange(a, fill):
         sent = jnp.where(valid, a[order][idx], fill)
+        return jax.lax.all_to_all(sent, axis, split_axis=0, concat_axis=0,
+                                  tiled=True).reshape(-1)
+
+    out = {c: exchange(a, -1 if jnp.issubdtype(a.dtype, jnp.integer) else 0)
+           for c, a in cols.items()}
+    w = exchange(weights, 0)
+    overflow = jnp.maximum(counts - capacity, 0).sum()
+    return out, w, overflow
+
+
+def _empty_routed(cols, weights: jax.Array, n_shards: int, capacity: int):
+    """Receive-side buffers for the degenerate empty shard (n_rows == 0).
+
+    Under shard_map the row count is a static per-shard shape, so EVERY
+    shard is empty when one is; each peer would only ever send padding, so
+    the all-to-all is elided and the fully-padded receive buffers are built
+    locally. Keeping this out of the main path also keeps the argsort /
+    radix layout math free of ``n_rows - 1 == -1`` clip bounds."""
+    size = n_shards * capacity
+    out = {c: jnp.full((size,),
+                       -1 if jnp.issubdtype(a.dtype, jnp.integer) else 0,
+                       a.dtype)
+           for c, a in cols.items()}
+    w = jnp.zeros((size,), weights.dtype)
+    return out, w, jnp.zeros((), jnp.int32)
+
+
+def radix_route_table_rows(cols, weights: jax.Array, owner: jax.Array,
+                           n_shards: int, capacity: int, axis: str, *,
+                           block: int = 256, mode: Optional[str] = None):
+    """All-to-all route a row set via the radix-partition histogram kernel.
+
+    Same contract and BIT-IDENTICAL send layout as ``route_table_rows``,
+    built without the argsort: per-block owner histograms come from
+    ``block_histograms`` (kernel-mode resolved — the seed's Pallas MXU
+    one-hot reduce on TPU, its oracle elsewhere), an exclusive prefix over
+    blocks gives each block's base slot per destination, and a within-block
+    running count gives each row's stable rank among its owner's rows. Rows
+    then scatter straight into the (n_shards, capacity) send buffer at
+    ``owner * capacity + rank`` — rank order equals position order, so the
+    layout matches the stable argsort exactly and downstream reductions are
+    bit-identical across the two paths. Rows ranked past ``capacity`` drop
+    into the surfaced overflow count, exactly as the argsort path's
+    ``valid`` mask does.
+
+    ``owner`` is padded with zeros to a ``block`` multiple for the kernel
+    (padding sits at the END, so real rows' ranks are unaffected) and the
+    destination-0 count is corrected before the prefix sum. ``n_bins`` is
+    the owner-domain [0, n_shards) rounded up to a power of two, as the
+    digit mask requires."""
+    n_rows = weights.shape[0]
+    if n_rows == 0:
+        return _empty_routed(cols, weights, n_shards, capacity)
+    n_bins = 1 << max(1, (n_shards - 1).bit_length())
+    pad = -n_rows % block
+    owner = owner.astype(jnp.int32)
+    owner_p = jnp.pad(owner, (0, pad)) if pad else owner
+    hist = block_histograms(owner_p, n_bins=n_bins, shift=0, block=block,
+                            mode=mode)                  # (n_blocks, n_bins)
+    counts_all = hist.sum(axis=0)
+    if pad:
+        counts_all = counts_all.at[0].add(-pad)
+    counts = counts_all[:n_shards]
+    # Stable rank of each row among its destination's rows, without a sort:
+    # exclusive block prefix (base slot of each block per bin) + exclusive
+    # within-block running count of the row's own bin.
+    block_base = jnp.cumsum(hist, axis=0) - hist        # (n_blocks, n_bins)
+    ob = owner_p.reshape(-1, block)                     # (n_blocks, block)
+    oh = (ob[:, :, None] ==
+          jnp.arange(n_bins, dtype=jnp.int32)[None, None, :]).astype(jnp.int32)
+    within = jnp.cumsum(oh, axis=1) - 1                 # (blocks, block, bins)
+    rank_in_block = jnp.take_along_axis(within, ob[:, :, None], axis=2)[..., 0]
+    base = jnp.take_along_axis(block_base, ob, axis=1)
+    rank = (base + rank_in_block).reshape(-1)[:n_rows]
+    pos = jnp.where(rank < capacity, owner * capacity + rank,
+                    n_shards * capacity)                # OOB -> dropped
+
+    def exchange(a, fill):
+        sent = jnp.full((n_shards * capacity,), fill, a.dtype)
+        sent = sent.at[pos].set(a, mode="drop").reshape(n_shards, capacity)
         return jax.lax.all_to_all(sent, axis, split_axis=0, concat_axis=0,
                                   tiled=True).reshape(-1)
 

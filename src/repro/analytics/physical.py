@@ -100,10 +100,15 @@ class PScan:
 
 @dataclass(frozen=True)
 class PFilter:
+    """Row mask. ``pushed`` marks a filter the planner's
+    Filter-below-Exchange peephole moved beneath a hash Exchange (it
+    logically sat above the consuming join): rows it kills become dead
+    padding BEFORE they reach the wire."""
     child: "PNode"
     pred: L.Expr
     rows: int
     est: int
+    pushed: bool = False
 
 
 @dataclass(frozen=True)
@@ -128,7 +133,11 @@ class Exchange:
     per-shard wire volume reported by explain(). "gather", "allreduce"
     and "reduce_scatter" execute FUSED inside the consuming PAggregate —
     the node exists so every policy's wire volume is priced on one
-    axis."""
+    axis. ``impl`` picks the routing layout pass for key-routing hash
+    exchanges: "argsort" (stable argsort by owner) or "radix" (the
+    radix-partition histogram kernel's prefix-sum layout,
+    engine.radix_route_table_rows) — chosen by planner.lower per
+    Exchange (exchange_costs) and bit-identical by construction."""
     child: "PNode"
     kind: str       # broadcast | hash | gather | allreduce | reduce_scatter
     key: Optional[str] = None
@@ -137,6 +146,7 @@ class Exchange:
     rows: int = 0
     est: int = 0
     moved_rows: int = 0
+    impl: str = "argsort"                   # argsort | radix layout pass
 
 
 @dataclass(frozen=True)
@@ -371,6 +381,25 @@ def pushdown_profitable(n_groups: int, child_rows: int) -> bool:
     return n_groups < child_rows
 
 
+def filters_below(node: PNode) -> int:
+    """Number of PFilter nodes stacked directly below ``node`` (through
+    Project/Compact wrappers). The Exchange moved-rows estimate consults
+    this: a filter's est is NOT discounted (capacity/compact budgets must
+    stay occupancy-safe), so each filter on the path instead multiplies
+    the priced wire payload by the profile's filter_selectivity. The walk
+    stops at any node that produces fresh rows (scan, join, exchange,
+    aggregate)."""
+    count = 0
+    while True:
+        if isinstance(node, PFilter):
+            count += 1
+            node = node.child
+        elif isinstance(node, (PProject, Compact)):
+            node = node.child
+        else:
+            return count
+
+
 def routes_once(child: PNode, key: Optional[str]) -> bool:
     """Rule 2's test — True when ``child``'s rows are already co-located
     by ``key`` (an upstream hash Exchange on the same column did the
@@ -405,13 +434,15 @@ def describe(plan: Union[PhysicalPlan, PNode], indent: int = 0,
         line = f"PScan {plan.table} rows={plan.rows}"
     elif isinstance(plan, PFilter):
         line = f"PFilter {L.expr_str(plan.pred)}"
+        if plan.pushed:
+            line += " pushed=below-exchange"
     elif isinstance(plan, PProject):
         cols = ", ".join(f"{n}={L.expr_str(e)}" for n, e in plan.cols)
         line = f"PProject {cols}"
     elif isinstance(plan, Exchange):
         det = f"Exchange {plan.kind}"
         if plan.key is not None:
-            det += f" key={plan.key} method={plan.method}"
+            det += f" key={plan.key} method={plan.method} impl={plan.impl}"
         elif plan.kind == "hash":
             det += " key=<group-partials>"
         if plan.capacity:

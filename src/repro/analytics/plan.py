@@ -429,6 +429,19 @@ def base_scan(node: Node, column: str) -> Optional[Scan]:
             return None
 
 
+def expr_cols(e: Expr) -> frozenset:
+    """The set of column names an expression reads — the oracle the
+    planner's Filter-below-Exchange peephole consults to decide whether a
+    predicate only touches pre-route (probe-side) columns."""
+    if isinstance(e, Col):
+        return frozenset((e.name,))
+    if isinstance(e, Lit):
+        return frozenset()
+    if isinstance(e, UnOp):
+        return expr_cols(e.operand)
+    return expr_cols(e.lhs) | expr_cols(e.rhs)
+
+
 def expr_str(e: Expr) -> str:
     if isinstance(e, Col):
         return e.name

@@ -102,6 +102,7 @@ from repro.analytics.engine import (compact_routed_rows, gather_rows,
                                     merge_partial_table,
                                     placed_group_median,
                                     pushdown_group_sums,
+                                    radix_route_table_rows,
                                     replicated_group_median, route_owner,
                                     route_table_rows, routing_capacity)
 from repro.analytics.plan import (holistic_selector, is_holistic,
@@ -127,13 +128,17 @@ class ExecutionContext:
     for partitioned-join routing: "hash" (default; multiplicative hash,
     robust to clustered/strided key spaces) or "modulo" (the legacy
     dense-id map — dist_hash_join pins it to reproduce the retired W3
-    plans bit-identically). ``agg_pushdown``: None = push distributive
-    aggregates below the exchange when n_groups < per-shard rows, or
-    force True/False. ``route_once``: elide exchanges whose child is
-    already placed by the same key (False disables). ``compact``: None =
-    insert occupancy-aware Compact nodes before re-routing padded
-    buffers (COMPACT_MARGIN occupancy headroom), False disables, a float
-    overrides the margin."""
+    plans bit-identically). ``exchange_impl`` picks the routing LAYOUT
+    pass of key-routing hash Exchanges: "cost" (default; exchange_costs
+    chooses per Exchange from the routed rows), or force "argsort" /
+    "radix" (the radix-partition histogram kernel path — bit-identical
+    results, different layout cost). ``agg_pushdown``: None = push
+    distributive aggregates below the exchange when n_groups < per-shard
+    rows, or force True/False. ``route_once``: elide exchanges whose
+    child is already placed by the same key (False disables).
+    ``compact``: None = insert occupancy-aware Compact nodes before
+    re-routing padded buffers (COMPACT_MARGIN occupancy headroom), False
+    disables, a float overrides the margin."""
 
     executor: str = "cost"
     mode: Optional[str] = None               # kernel lowering mode
@@ -145,6 +150,7 @@ class ExecutionContext:
     capacity_factor: float = 2.0
     dist_join: Optional[str] = None
     dist_route: str = "hash"
+    exchange_impl: str = "cost"
     agg_pushdown: Optional[bool] = None
     route_once: bool = True
     compact: Union[None, bool, int, float] = None
@@ -159,6 +165,9 @@ class ExecutionContext:
                 f"unknown distributed join strategy {self.dist_join!r}")
         if self.dist_route not in ("hash", "modulo"):
             raise ValueError(f"unknown routing method {self.dist_route!r}")
+        if self.exchange_impl not in ("argsort", "radix", "cost"):
+            raise ValueError(
+                f"unknown exchange impl {self.exchange_impl!r}")
         if (not isinstance(self.compact, bool) and self.compact is not None
                 and (not isinstance(self.compact, (int, float))
                      or self.compact < 1.0)):
@@ -176,8 +185,8 @@ class ExecutionContext:
         # DIFFERENT margins (True == 1 == 1.0 in Python)
         return (self.executor, self.mode, mesh_key, self.policy, self.axis,
                 self.join, self.n_partitions, self.capacity_factor,
-                self.dist_join, self.dist_route, self.agg_pushdown,
-                self.route_once, self.compact_margin())
+                self.dist_join, self.dist_route, self.exchange_impl,
+                self.agg_pushdown, self.route_once, self.compact_margin())
 
     # -- rewrite-knob resolution -------------------------------------------
     def compact_margin(self) -> Optional[float]:
@@ -203,6 +212,17 @@ COMPACT_MARGIN = 1.5     # Compact budget: margin x estimated alive rows.
 #   Routing capacity_factor absorbs per-destination ROUTING skew; this
 #   margin absorbs occupancy-estimate error of an already-routed buffer.
 #   Alive rows beyond the budget surface as _overflow, never vanish.
+RADIX_ROUTE_FACTOR = 2.5  # radix Exchange layout: flat pass-equivalents
+#   (block histograms + prefix sums are O(n) regardless of n_rows), vs the
+#   argsort layout's sort_pass_factor * log2(n_rows) — crossover at
+#   2^(radix/sort) ~ 1024 per-shard rows with the hand-set constants;
+#   scripts/calibrate_costs.py --exchange fits it from the measured one.
+FILTER_SELECTIVITY = 0.75  # est alive fraction surviving one PFilter.
+#   Discounts ONLY Exchange.moved_rows (the priced wire payload) — never
+#   est/capacity/Compact budgets, so a selectivity prior can never shrink
+#   a buffer and surface phantom overflow. 1.5 (COMPACT_MARGIN) x 0.75 >=
+#   1 keeps that safe even if it ever did. telemetry.refresh_profile
+#   replaces it with the observed alive_out/alive_in ratio.
 
 
 @dataclass(frozen=True)
@@ -225,6 +245,8 @@ class CostProfile:
     fused_per_col: float = FUSED_PER_COL
     sort_pass_factor: float = SORT_PASS_FACTOR
     dist_route_factor: float = DIST_ROUTE_FACTOR
+    radix_route_factor: float = RADIX_ROUTE_FACTOR
+    filter_selectivity: float = FILTER_SELECTIVITY
     dense_group_limit: int = DENSE_GROUP_LIMIT
     partition_capacity_factor: Optional[float] = None
     compact_margin: Optional[float] = None
@@ -267,6 +289,10 @@ def load_cost_profile(path: str) -> CostProfile:
         sort_pass_factor=float(raw.get("sort_pass_factor", SORT_PASS_FACTOR)),
         dist_route_factor=float(raw.get("dist_route_factor",
                                         DIST_ROUTE_FACTOR)),
+        radix_route_factor=float(raw.get("radix_route_factor",
+                                         RADIX_ROUTE_FACTOR)),
+        filter_selectivity=float(raw.get("filter_selectivity",
+                                         FILTER_SELECTIVITY)),
         dense_group_limit=int(raw.get("dense_group_limit",
                                       DENSE_GROUP_LIMIT)),
         partition_capacity_factor=(None if pcf is None else float(pcf)),
@@ -365,6 +391,31 @@ def choose_dist_join(n_probe: int, n_build: int, n_shards: int,
     if n_shards < 2:
         return "broadcast"       # nothing to move: routing is pure waste
     costs = dist_join_costs(n_probe, n_build, n_shards, profile)
+    return min(costs, key=costs.get)
+
+
+def exchange_costs(n_rows: int, profile: Optional[CostProfile] = None
+                   ) -> Dict[str, float]:
+    """Pass-equivalent LAYOUT cost of each hash-Exchange routing impl for
+    ``n_rows`` per-shard routed rows. Both paths ship the same bytes and
+    produce bit-identical buffers; what differs is how the send layout is
+    built: "argsort" pays a stable sort (sort_pass_factor * log2(n)),
+    "radix" pays a flat histogram + prefix-sum pass (radix_route_factor,
+    measured by scripts/calibrate_costs.py --exchange). argsort wins small
+    buffers, radix wins past the crossover."""
+    p = profile or _COST_PROFILE
+    return {
+        "argsort": p.sort_pass_factor * math.log2(max(n_rows, 2)),
+        "radix": p.radix_route_factor,
+    }
+
+
+def choose_exchange_impl(n_rows: int, ctx: "ExecutionContext",
+                         profile: Optional[CostProfile] = None) -> str:
+    """"argsort" vs "radix" for one key-routing hash Exchange."""
+    if ctx.exchange_impl != "cost":
+        return ctx.exchange_impl
+    costs = exchange_costs(n_rows, profile)
     return min(costs, key=costs.get)
 
 
@@ -652,9 +703,49 @@ class _Lowering:
         per = (r + (-r % self.n)) // self.n if self.distributed else r
         return PH.PScan(node.table, rows=per, est=per)
 
-    def _filter(self, node: L.Filter) -> PH.PFilter:
+    def _filter(self, node: L.Filter) -> PH.PNode:
         c = self.node(node.child)
+        pushed = self._filter_below_exchange(c, node.pred)
+        if pushed is not None:
+            return pushed
         return PH.PFilter(c, node.pred, rows=c.rows, est=c.est)
+
+    def _filter_below_exchange(self, c: PH.PNode,
+                               pred: L.Expr) -> Optional[PH.PNode]:
+        """Filter-below-Exchange peephole: a Filter over a partitioned
+        PJoin whose predicate reads only PRE-ROUTE columns (none of the
+        join's take columns, so every referenced column already exists on
+        the probe side below its hash Exchange) is pushed beneath the
+        probe routing. Rows the predicate kills become dead padding BEFORE
+        the all-to-all — they re-route round-robin with zero weight — so
+        the wire carries fewer alive rows, not just a cheaper layout.
+        Results are bit-identical: the filter mask multiplies into the
+        same selection weights either side of the routing, and dead rows
+        can never match a join key or enter an aggregate. The Exchange's
+        ``moved_rows`` estimate shrinks by the profile's
+        filter_selectivity per pushed filter (capacity and est are
+        untouched — occupancy budgets stay safe); telemetry's observed
+        alive_in/alive_out refreshes the selectivity."""
+        if not (self.distributed and isinstance(c, PH.PJoin)
+                and c.dist == "partitioned"):
+            return None
+        ex = c.probe
+        if not (isinstance(ex, PH.Exchange) and ex.kind == "hash"
+                and ex.key is not None):
+            return None
+        cols = L.expr_cols(pred)
+        if not cols or any(name in cols for name, _src in c.take):
+            return None              # predicate reads a post-join column
+        inner = PH.PFilter(ex.child, pred, rows=ex.child.rows,
+                           est=ex.child.est, pushed=True)
+        sel = self.profile.filter_selectivity ** PH.filters_below(inner)
+        moved = int(ex.est * sel) * (self.n - 1) // self.n
+        routed = PH.Exchange(inner, "hash", key=ex.key,
+                             capacity=ex.capacity, method=ex.method,
+                             rows=ex.rows, est=ex.est, moved_rows=moved,
+                             impl=ex.impl)
+        return PH.PJoin(routed, c.build, c.probe_key, c.build_key, c.take,
+                        c.strategy, c.dist, rows=c.rows, est=c.est)
 
     def _project(self, node: L.Project) -> PH.PProject:
         c = self.node(node.child)
@@ -713,9 +804,13 @@ class _Lowering:
         side = PH.maybe_compact(side, self.margin or 0.0,
                                 self.margin is not None)       # rule 3
         cap = routing_capacity(side.rows, self.n, self.ctx.capacity_factor)
+        sel = self.profile.filter_selectivity ** PH.filters_below(side)
         return PH.Exchange(side, "hash", key=key, capacity=cap,
                            method=method, rows=self.n * cap, est=side.est,
-                           moved_rows=side.est * (self.n - 1) // self.n)
+                           moved_rows=int(side.est * sel)
+                           * (self.n - 1) // self.n,
+                           impl=choose_exchange_impl(side.rows, self.ctx,
+                                                     self.profile))
 
     # -- aggregates ---------------------------------------------------------
     def _aggregate(self, node: L.Aggregate) -> PH.PAggregate:
@@ -817,9 +912,13 @@ class _Lowering:
         rchild = PH.maybe_compact(child, self.margin or 0.0,
                                   self.margin is not None)
         cap = routing_capacity(rchild.rows, self.n, ctx.capacity_factor)
+        sel = self.profile.filter_selectivity ** PH.filters_below(rchild)
         ex = PH.Exchange(rchild, "hash", key=node.key, capacity=cap,
                          method="modulo", rows=self.n * cap, est=rchild.est,
-                         moved_rows=rchild.est * (self.n - 1) // self.n)
+                         moved_rows=int(rchild.est * sel)
+                         * (self.n - 1) // self.n,
+                         impl=choose_exchange_impl(rchild.rows, self.ctx,
+                                                   self.profile))
         n_slots = (G + (-G % self.n)) // self.n
         layout = choose_aggregate(self.n * cap, n_slots + 1, C,
                                   ctx.executor, self.profile)
@@ -901,7 +1000,17 @@ class _LocalExecutor:
 
     def _pfilter(self, node: PH.PFilter) -> Table:
         t = self.run(node.child)
-        return t.filter(eval_expr(node.pred, t))
+        out = t.filter(eval_expr(node.pred, t))
+        self._record_filter(node, t, out)
+        return out
+
+    def _record_filter(self, node: PH.PFilter, t: Table,
+                       out: Table) -> None:
+        if self.record:
+            # observed selectivity (alive_out / alive_in) is what
+            # telemetry.refresh_profile fits filter_selectivity from
+            self._note(node, alive_in=(t.weights() > 0).sum(),
+                       alive_out=(out.weights() > 0).sum())
 
     def _pproject(self, node: PH.PProject) -> Table:
         t = self.run(node.child)
@@ -1081,8 +1190,14 @@ class _DistributedExecutor(_LocalExecutor):
         keys = child.col(node.key).astype(jnp.int32)
         w0 = child.weights()
         owner = route_owner(keys, w0 > 0, self.n, node.method)
-        cols, w, ovf = route_table_rows(child.columns, w0, owner, self.n,
-                                        node.capacity, self.ctx.axis)
+        if node.impl == "radix":
+            cols, w, ovf = radix_route_table_rows(
+                child.columns, w0, owner, self.n, node.capacity,
+                self.ctx.axis, mode=self.ctx.mode)
+        else:
+            cols, w, ovf = route_table_rows(child.columns, w0, owner,
+                                            self.n, node.capacity,
+                                            self.ctx.axis)
         ovf_total = jax.lax.psum(ovf, self.ctx.axis).astype(jnp.int32)
         self.overflow = self.overflow + ovf_total
         if self.record:
@@ -1095,6 +1210,12 @@ class _DistributedExecutor(_LocalExecutor):
             self._note(node, alive_in=self._alive(w0), moved=moved,
                        alive_out=self._alive(w), overflow=ovf_total)
         return Table(cols, w)
+
+    def _record_filter(self, node: PH.PFilter, t: Table,
+                       out: Table) -> None:
+        if self.record:
+            self._note(node, alive_in=self._alive(t.weights()),
+                       alive_out=self._alive(out.weights()))
 
     def _compact(self, node: PH.Compact) -> Table:
         t = self.run(node.child)
@@ -1577,13 +1698,26 @@ def explain(plan: L.LogicalPlan, tables,
             # routing key at all
             if node.key is not None:
                 detail = f"kind={node.kind}, key={node.key}"
-            elif node.kind == "hash":
+                # key-routing hash exchange: the layout-pass impl is a
+                # planner choice, priced alongside the wire estimate
+                # (moved_rows stays FIRST — consumers index costs[0])
+                costs = ((("moved_rows", float(node.moved_rows)),)
+                         + tuple(exchange_costs(node.child.rows).items()))
+                decisions.append(Decision(
+                    "Exchange", f"{detail}, rows={node.rows}",
+                    f"{node.kind}/{node.impl}", costs))
+                return
+            if node.kind == "hash":
                 detail = f"kind={node.kind}, key=<group-partials>"
             else:
                 detail = f"kind={node.kind}"
             decisions.append(Decision(
                 "Exchange", f"{detail}, rows={node.rows}", node.kind,
                 (("moved_rows", float(node.moved_rows)),)))
+        elif isinstance(node, PH.PFilter) and node.pushed:
+            decisions.append(Decision(
+                "FilterBelowExchange", L.expr_str(node.pred),
+                "pushed"))
         elif isinstance(node, PH.Compact):
             decisions.append(Decision(
                 "Compact", f"capacity={node.capacity}, "

@@ -382,6 +382,11 @@ def refresh_profile(profile=None, reg: Optional[StatsRegistry] = None):
       for overflowing/skewed routings).
     * ``compact_margin`` — sized so the worst observed Compact occupancy
       fits with DRIFT_BAND headroom; any Compact overflow grows it.
+    * ``filter_selectivity`` — replaced by the observed alive_out/alive_in
+      ratio of the PFilter whose log deviates most from the prior: the
+      constant the Filter-below-Exchange rewrite discounts Exchange
+      ``moved_rows`` by, so the wire estimate tracks what selective
+      predicates actually let through.
     * ``dense_group_limit`` — NEVER auto-refreshed (a VMEM model, not a
       row estimate); occupancy drift on dense aggregates is visible in
       ``drift_report()`` instead.
@@ -397,6 +402,8 @@ def refresh_profile(profile=None, reg: Optional[StatsRegistry] = None):
     profile = profile or planner.current_cost_profile()
     route_ratio: Optional[float] = None
     margin_need: Optional[float] = None
+    sel_obs: Optional[float] = None
+    prior_sel = max(profile.filter_selectivity, 1e-9)
     for _key, ps in reg.plans():
         n = max(ps.phys.n_shards, 1)
         nodes = ps.node_list()
@@ -409,6 +416,13 @@ def refresh_profile(profile=None, reg: Optional[StatsRegistry] = None):
                 if route_ratio is None or abs(math.log(max(r, 1e-9))) > \
                         abs(math.log(max(route_ratio, 1e-9))):
                     route_ratio = r
+            if (isinstance(node, PH.PFilter)
+                    and ns.last.get("alive_in", 0) > 0):
+                sel = ns.last.get("alive_out", 0) / ns.last["alive_in"]
+                r = max(sel, 1e-9) / prior_sel
+                if sel_obs is None or abs(math.log(r)) > abs(math.log(
+                        max(sel_obs, 1e-9) / prior_sel)):
+                    sel_obs = sel
             if isinstance(node, PH.Compact) and "alive_in" in ns.last:
                 est = max(ns.est.get("alive_in", 0), 1)
                 occ = ns.last["alive_in"] / est
@@ -422,6 +436,12 @@ def refresh_profile(profile=None, reg: Optional[StatsRegistry] = None):
         scale = min(max(route_ratio, 1.0 / _REFRESH_CLAMP), _REFRESH_CLAMP)
         updates["dist_route_factor"] = round(
             max(profile.dist_route_factor * scale, 0.01), 4)
+    if sel_obs is not None and not \
+            (1.0 / DRIFT_BAND) <= sel_obs / prior_sel <= DRIFT_BAND:
+        scale = min(max(sel_obs / prior_sel, 1.0 / _REFRESH_CLAMP),
+                    _REFRESH_CLAMP)
+        updates["filter_selectivity"] = round(
+            min(max(profile.filter_selectivity * scale, 0.01), 1.0), 4)
     if margin_need is not None:
         base = (profile.compact_margin
                 if profile.compact_margin is not None else None)

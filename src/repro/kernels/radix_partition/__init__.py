@@ -1,1 +1,3 @@
-from repro.kernels.radix_partition.ops import block_histograms, radix_partition
+from repro.kernels.radix_partition.ops import (block_histograms,
+                                               padded_bin_counts,
+                                               radix_partition)

@@ -26,6 +26,28 @@ def block_histograms(keys: jax.Array, *, n_bins: int, shift: int = 0,
     return block_histograms_ref(keys, n_bins=n_bins, shift=shift, block=block)
 
 
+def padded_bin_counts(keys: jax.Array, *, n_bins: int, shift: int = 0,
+                      block: int = 1024,
+                      mode: Optional[str] = None) -> jax.Array:
+    """Total per-digit counts via the block-histogram kernel, for any N.
+
+    Keys are padded with zeros to a block multiple; padding lands in the
+    digit-0 bin ((0 >>> shift) & mask == 0 under logical shift), so the
+    count of that sentinel bin is corrected before returning. N == 0 is a
+    static degenerate case: all-zero counts."""
+    n = keys.shape[0]
+    if n == 0:
+        return jnp.zeros((n_bins,), jnp.int32)
+    pad = -n % block
+    padded = jnp.pad(keys, (0, pad)) if pad else keys
+    hist = block_histograms(padded, n_bins=n_bins, shift=shift, block=block,
+                            mode=mode)
+    counts = hist.sum(axis=0)
+    if pad:
+        counts = counts.at[0].add(-pad)
+    return counts
+
+
 def radix_partition(keys: jax.Array, values: jax.Array, *, n_bins: int,
                     shift: int = 0, block: int = 1024,
                     mode: Optional[str] = None
@@ -36,10 +58,8 @@ def radix_partition(keys: jax.Array, values: jax.Array, *, n_bins: int,
     by digit. Histogram via the kernel; scatter via a stable sort on the
     digit (XLA's radix sort — the TPU-native scatter)."""
     digits = jax.lax.shift_right_logical(keys, shift) & (n_bins - 1)
-    hist = block_histograms(keys, n_bins=n_bins, shift=shift, block=block,
-                            mode=mode) if keys.shape[0] % block == 0 else None
-    counts = (hist.sum(axis=0) if hist is not None
-              else jnp.bincount(digits, length=n_bins))
+    counts = padded_bin_counts(keys, n_bins=n_bins, shift=shift, block=block,
+                               mode=mode)
     starts = jnp.cumsum(counts) - counts
     order = jnp.argsort(digits, stable=True)
     return keys[order], values[order], starts

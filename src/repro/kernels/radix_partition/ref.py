@@ -15,7 +15,7 @@ def block_histograms_ref(keys: jax.Array, *, n_bins: int, shift: int,
                          block: int) -> jax.Array:
     """keys: (N,) int32, N % block == 0. Returns (N//block, n_bins) int32
     histograms of the radix digit (keys >> shift) & (n_bins-1) per block."""
-    digits = (keys >> shift) & (n_bins - 1)
+    digits = jax.lax.shift_right_logical(keys, shift) & (n_bins - 1)
     blocks = digits.reshape(-1, block)
     oh = jax.nn.one_hot(blocks, n_bins, dtype=jnp.int32)
     return oh.sum(axis=1)

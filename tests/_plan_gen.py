@@ -92,8 +92,17 @@ def make_plan(seed: int) -> L.LogicalPlan:
     if joined:
         node = node.join(L.scan("dim"), "fk", "pk",
                          {"_dv": "dv", "_dk": "dk"})
-        if rng.rand() < 0.3:
+        r = rng.rand()
+        if r < 0.3:
+            # predicate on a TAKEN column: needs the joined rows, so the
+            # partitioned lowering must NOT push it below the Exchange
             node = node.filter(L.col("_dv") <= 0.8)
+        elif r < 0.55:
+            # predicate on a PROBE-side column only: under a distributed
+            # partitioned join the Filter-below-Exchange peephole pushes
+            # it below the probe routing — these seeds pin the rewrite's
+            # bit-exactness across every executor and placement
+            node = node.filter(L.col("d") >= float(rng.randint(5, 40)))
     attached = rng.rand() < 0.35
     if attached:
         # q18's HAVING idiom: gather a per-key1 COUNT back into the rows

@@ -10,7 +10,9 @@ from repro.kernels.hash_aggregate.ref import (hash_aggregate_multi_ref,
                                               hash_aggregate_ref)
 from repro.kernels.join_probe import join_probe
 from repro.kernels.join_probe.ref import join_probe_ref
-from repro.kernels.radix_partition import block_histograms, radix_partition
+from repro.kernels.radix_partition import (block_histograms,
+                                           padded_bin_counts,
+                                           radix_partition)
 from repro.kernels.radix_partition.ref import block_histograms_ref
 
 
@@ -23,6 +25,64 @@ def test_histograms_interpret(rng, n_bins, shift, block):
                            mode="interpret")
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
     assert int(np.asarray(got).sum()) == block * 4  # conservation
+
+
+@pytest.mark.parametrize("shift", [0, 8, 16])
+def test_histograms_negative_key_parity(rng, shift):
+    """ref vs Pallas(interpret) on NEGATIVE keys — including the engine's
+    -1 routed-padding sentinel. Digit extraction must be the LOGICAL
+    shift in both implementations: an arithmetic shift smears the sign
+    bit into every digit position above it, so -1 would land in a
+    different bin per backend whenever shift > 0."""
+    n_bins, block = 64, 256
+    keys = rng.randint(-(1 << 24), 1 << 24, block * 4).astype(np.int32)
+    keys[::7] = -1                    # the routing layer's padding key
+    keys = jnp.asarray(keys)
+    ref = block_histograms_ref(keys, n_bins=n_bins, shift=shift,
+                               block=block)
+    got = block_histograms(keys, n_bins=n_bins, shift=shift, block=block,
+                           mode="interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    # oracle: logical shift == unsigned view of the same bit pattern
+    digits = (np.asarray(keys).view(np.uint32) >> shift) & (n_bins - 1)
+    np.testing.assert_array_equal(np.asarray(ref).sum(0),
+                                  np.bincount(digits, minlength=n_bins))
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+@pytest.mark.parametrize("n", [1, 255, 256, 257, 1000])
+def test_padded_bin_counts_match_unpadded_oracle(rng, mode, n):
+    """Block padding with the corrected sentinel bin is bit-exact against
+    the unpadded bincount oracle at every misalignment (the engine's
+    routed buffers are rarely block-aligned)."""
+    for shift in (0, 8, 16):
+        keys = rng.randint(-(1 << 24), 1 << 24, n).astype(np.int32)
+        counts = padded_bin_counts(jnp.asarray(keys), n_bins=64,
+                                   shift=shift, block=256, mode=mode)
+        digits = (keys.view(np.uint32) >> shift) & 63
+        np.testing.assert_array_equal(np.asarray(counts),
+                                      np.bincount(digits, minlength=64))
+
+
+def test_padded_bin_counts_empty():
+    counts = padded_bin_counts(jnp.zeros((0,), jnp.int32), n_bins=16,
+                               block=256, mode="ref")
+    np.testing.assert_array_equal(np.asarray(counts), np.zeros(16))
+
+
+def test_radix_partition_unaligned_matches_oracle(rng):
+    """N % block != 0 no longer drops to the bincount fallback: the
+    padded kernel histogram must reproduce the oracle starts bit-exactly
+    and keep the stable digit ordering."""
+    keys_np = rng.randint(0, 1 << 16, 1000).astype(np.int32)
+    keys = jnp.asarray(keys_np)
+    ko, _vo, starts = radix_partition(keys, keys.astype(jnp.float32),
+                                      n_bins=16, block=256, mode="ref")
+    counts = np.bincount(keys_np & 15, minlength=16)
+    np.testing.assert_array_equal(np.asarray(starts),
+                                  np.cumsum(counts) - counts)
+    digits = np.asarray(ko) & 15
+    assert (np.diff(digits) >= 0).all()
 
 
 def test_radix_partition_orders_digits(rng):
