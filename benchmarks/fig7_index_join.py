@@ -22,7 +22,8 @@ from benchmarks.common import Row, run_in_mesh, time_fn
 from repro.analytics import planner
 from repro.analytics.datasets import blanas_join
 from repro.analytics.dist_join_bench import (chain_code, exchange_code,
-                                             pushdown_code, sweep_code)
+                                             pushdown_code, sweep_code,
+                                             topk_code)
 from repro.analytics.join import (build_hash_index, build_radix_index,
                                   build_sorted_index, hash_join, index_join,
                                   probe_hash_index, probe_radix_index,
@@ -34,6 +35,7 @@ DIST_DEVICES = 8
 PUSHDOWN_ROWS, PUSHDOWN_GROUPS = 1 << 18, 1 << 9
 CHAIN_ROWS, CHAIN_DIM = 1 << 17, 1 << 15
 EXCHANGE_PROBE, EXCHANGE_BUILD = 1 << 18, 1 << 14
+TOPK_ROWS, TOPK_GROUPS, TOPK_K = 1 << 18, 1 << 14, 16
 
 
 def run() -> List[Row]:
@@ -112,6 +114,21 @@ def run_dist() -> List[Row]:
                      f"probe={EXCHANGE_PROBE};build={EXCHANGE_BUILD};"
                      f"moved_rows={er['moved_rows']};"
                      f"cost_model_picks={er['cost_picks']}"))
+
+    # distributed TopK: the replicated lowering selects on the merged
+    # (replicated) group table; the candidates lowering converges only
+    # k rows per shard through a gather Exchange — both bit-identical
+    # (asserted in the child), so the row is wall-clock + wire volume
+    tk = run_in_mesh(topk_code(rows=TOPK_ROWS, groups=TOPK_GROUPS,
+                               k=TOPK_K, devices=DIST_DEVICES),
+                     n_devices=DIST_DEVICES, timeout=900)
+    for mode in ("replicated", "candidates"):
+        rows.append((f"fig7_dist_topk_{mode}", tk[mode],
+                     f"rows={TOPK_ROWS};groups={TOPK_GROUPS};k={TOPK_K};"
+                     f"moved_rows={tk['moved_rows']};"
+                     f"observed_moved={tk['observed_moved']};"
+                     f"wire_budget={tk['wire_budget']};"
+                     f"cost_model_picks={tk['cost_picks']}"))
 
     # chained partitioned joins: occupancy-aware Compact bounds the
     # routed-buffer growth between hops (the max buffer is read off the

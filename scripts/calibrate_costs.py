@@ -42,6 +42,16 @@ P* gives
 written into the profile so planner.choose_exchange_impl flips layouts
 where this hardware actually flips.
 
+With ``--morsel`` it measures the serving scheduler's SPLIT-PROBE
+crossover in-process (no mesh): a PK-FK join pipeline dispatched as one
+whole-plan morsel vs split into per-pool probe morsels (build side
+replicated per pool) at a sweep of probe sizes. Below the crossover the
+per-morsel dispatch overhead loses to one fused dispatch; the first
+probe size where splitting wins (geometric midpoint with its
+single-winning neighbor) is written as ``morsel_split_rows`` — the
+threshold ``planner.lower`` marks PJoin probe phases morsel-splittable
+at, cache-keyed like the other fitted constants.
+
 With ``--refresh PROFILE.json`` it instead runs the TELEMETRY loop: load
 the profile, execute a representative recorded workload (a selective-
 probe partitioned join on a fake-device mesh — the shape whose runtime
@@ -69,6 +79,7 @@ the two remaining hand-set constants:
     PYTHONPATH=src python scripts/calibrate_costs.py --out cost_profile.json
     PYTHONPATH=src python scripts/calibrate_costs.py --dist --out cost_profile.json
     PYTHONPATH=src python scripts/calibrate_costs.py --exchange --out cost_profile.json
+    PYTHONPATH=src python scripts/calibrate_costs.py --morsel --out cost_profile.json
     PYTHONPATH=src python scripts/calibrate_costs.py --sweep-groups --out cost_profile.json
     PYTHONPATH=src python scripts/calibrate_costs.py --refresh cost_profile.json
     >>> planner.load_cost_profile("cost_profile.json")
@@ -150,6 +161,72 @@ def calibrate_exchange(probes, build: int, devices: int,
         p_star = 2.0 * sweep[-1][0]
     factor = sort_pass_factor * math.log2(max(p_star / devices, 2.0))
     return max(round(float(factor), 4), 0.01), raw
+
+
+def calibrate_morsel(probes, n_pools: int, workers: int,
+                     morsels_per_pool: int = 4):
+    """(morsel_split_rows, raw sweep) from the in-process serving
+    scheduler: single-morsel whole-plan dispatch vs split-probe dispatch
+    of the SAME join pipeline, per probe size.
+
+    Both sides run through MorselScheduler.run — the exact dispatch path
+    build_task takes in production — with the split decision forced each
+    way via the profile's morsel_split_rows (n+1 = never split, 1 =
+    always split), so the fitted threshold prices exactly the overhead
+    the planner's mark trades against."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.analytics import plan as L
+    from repro.analytics import planner
+    from repro.analytics.planner import ExecutionContext
+    from repro.analytics.service.scheduler import MorselScheduler
+
+    rng = np.random.RandomState(7)
+    dim_rows = 256
+    base = planner.current_cost_profile()
+    raw = {}
+    wins = []                          # (probe_rows, split_won) ascending
+    try:
+        for n in sorted(probes):
+            tables = {
+                "fact": {"fk": jnp.asarray(rng.randint(
+                             0, dim_rows, n).astype(np.int32)),
+                         "fv": jnp.asarray(rng.rand(n).astype(np.float32))},
+                "dim": {"pk": jnp.asarray(np.arange(dim_rows,
+                                                    dtype=np.int32)),
+                        "dv": jnp.asarray(rng.rand(dim_rows).astype(
+                            np.float32))},
+            }
+            p = L.LogicalPlan(
+                L.scan("fact").join(L.scan("dim"), "fk", "pk", {"dv": "dv"})
+                .aggregate("fk", dim_rows, s=("sum", "fv"),
+                           c=("count", "fv")), None)
+            ctx = ExecutionContext()
+            morsel = max(n // (n_pools * morsels_per_pool), 1)
+            t = {}
+            for tag, threshold in (("single", n + 1), ("split", 1)):
+                planner.set_cost_profile(dataclasses.replace(
+                    base, morsel_split_rows=threshold))
+                with MorselScheduler(n_pools=n_pools,
+                                     workers_per_pool=workers,
+                                     morsel_rows=morsel) as sched:
+                    t[tag] = time_fn(lambda: sched.run(p, tables, ctx))
+            raw[str(n)] = {k: round(v * 1e6, 1) for k, v in t.items()}
+            wins.append((n, t["split"] < t["single"]))
+    finally:
+        planner.set_cost_profile(base)
+    p_star = None
+    for i, (n, won) in enumerate(wins):
+        if won:
+            p_star = (math.sqrt(wins[i - 1][0] * n) if i else float(n))
+            break
+    if p_star is None:
+        # splitting never won in range: pin the threshold just above the
+        # largest measured probe so the planner keeps whole-plan dispatch
+        p_star = 2.0 * wins[-1][0]
+    return max(int(round(p_star)), 1), raw
 
 
 def sweep_groups(rows: int, groups_sweep, cols: int, mode,
@@ -336,6 +413,15 @@ def main() -> None:
                          "crossover")
     ap.add_argument("--exchange-build", type=int, default=1 << 14,
                     help="build-side size for the --exchange sweep")
+    ap.add_argument("--morsel", action="store_true",
+                    help="also measure the serving scheduler's whole-plan "
+                         "vs split-probe dispatch crossover in-process and "
+                         "fit morsel_split_rows")
+    ap.add_argument("--morsel-probes", type=int, nargs="+",
+                    default=[1 << b for b in range(8, 17, 2)],
+                    help="probe sizes to sweep for the --morsel crossover")
+    ap.add_argument("--morsel-pools", type=int, default=2)
+    ap.add_argument("--morsel-workers", type=int, default=2)
     ap.add_argument("--sweep-groups", action="store_true",
                     help="also sweep n_groups to fit dense_group_limit and "
                          "the partitioned-layout capacity factor")
@@ -438,6 +524,12 @@ def main() -> None:
         profile["radix_route_factor"] = factor
         profile["exchange_build"] = args.exchange_build
         profile["raw_us"]["exchange_impl"] = raw_ex
+    if args.morsel:
+        threshold, raw_morsel = calibrate_morsel(
+            args.morsel_probes, args.morsel_pools, args.morsel_workers)
+        profile["morsel_split_rows"] = threshold
+        profile["morsel_pools"] = args.morsel_pools
+        profile["raw_us"]["morsel_split"] = raw_morsel
 
     with open(args.out, "w") as f:
         json.dump(profile, f, indent=2)

@@ -44,6 +44,14 @@ python -m pytest -x -q tests/test_explain_golden.py
 python -m pytest -x -q tests/test_kernels_analytics.py \
     -k "negative_key or padded_bin_counts"
 
+# named gate: morsel parity — split-probe dispatch (build sides
+# pool-replicated, probe morsels merged in morsel order) must stay
+# BIT-IDENTICAL to the serial executor across the ThreadPlacement x
+# PlacementPolicy grid, the build must materialize once per pool (never
+# per morsel), and the distributed-TopK candidates lowering must move
+# <= k x n_shards rows while matching the replicated lowering bit-exactly
+python -m pytest -x -q tests/test_morsel_probe.py
+
 python -m pytest -x -q
 
 # named gate: the telemetry feedback loop — a deliberately mis-priced
@@ -58,7 +66,8 @@ python scripts/drift_gate.py
 # open, keep every request's phase attribution <= its wall latency with
 # one non-empty flight-recorder dump per injected fault, and an untraced
 # round must allocate ZERO spans (the tracing flag stays out of the
-# plan-cache key). The script configures its own 4 fake host devices.
+# plan-cache key) — plus one morsel.run span per split probe morsel on a
+# traced split-probe request. Configures its own 4 fake host devices.
 python scripts/trace_gate.py
 
 if [ -f "$BASELINE" ]; then

@@ -200,6 +200,46 @@ def main() -> int:
         return 1
     print("trace_gate: zero-overhead OK (untraced round allocated 0 "
           "spans; tracing flag not in the plan-cache key)")
+
+    # -- 6. split-probe morsel spans (ISSUE 10) ------------------------------
+    # one traced q3 through a fresh service: the probe side splits into
+    # per-pool morsels, and the trace must carry one morsel.run span PER
+    # dispatched morsel, tied to the request, with the request's phase
+    # attribution still summing to <= its wall latency (morsels overlap
+    # across pools, so execute is wall-clock, not a per-morsel sum)
+    tracing.tracer().clear()
+    with tracing.tracing() as tr:
+        with AnalyticsService(config()) as svc:
+            rid = submit_query(svc, "q3", data, context=ctx)
+            res3 = svc.drain()[rid]
+            st3 = svc.stats()
+        spans = tr.trace().spans
+    morsel_spans = [s for s in spans
+                    if s.name == "morsel.run" and s.trace_id == rid]
+    if len(morsel_spans) < 2:
+        print(f"trace_gate: FAIL — split-probe q3 produced only "
+              f"{len(morsel_spans)} morsel.run spans (probe did not "
+              "split, or spans lost their trace_id)")
+        return 1
+    if len(morsel_spans) != st3.morsels:
+        print(f"trace_gate: FAIL — scheduler dispatched {st3.morsels} "
+              f"morsels but the trace has {len(morsel_spans)} morsel.run "
+              "spans (one span per split probe morsel)")
+        return 1
+    pools = {s.pid for s in morsel_spans}
+    if res3.value is None or res3.phases is None:
+        print(f"trace_gate: FAIL — traced split-probe request failed: "
+              f"{res3.error}")
+        return 1
+    total3 = sum(res3.phases.values())
+    if total3 > res3.latency_s + 1e-6:
+        print(f"trace_gate: FAIL — split-probe request phase sum "
+              f"{total3:.6f}s exceeds wall {res3.latency_s:.6f}s: "
+              f"{res3.phases}")
+        return 1
+    print(f"trace_gate: split-probe spans OK ({len(morsel_spans)} "
+          f"morsel.run spans across pools {sorted(pools)}; phase sum "
+          f"{total3 * 1e3:.2f}ms <= wall {res3.latency_s * 1e3:.2f}ms)")
     print("trace_gate: OK")
     return 0
 

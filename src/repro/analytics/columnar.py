@@ -116,6 +116,22 @@ class Table:
         return Table(merged, self.mask, cache)
 
 
+def concat_slices(parts):
+    """Concatenate (columns, mask) row-slice pairs, in order, into one
+    (columns, mask) pair.
+
+    The merge primitive of the serving tier's split-probe path: each part
+    is one morsel's slice of a per-row pipeline's output, so concatenation
+    in slice order rebuilds the unsliced table bit-for-bit (a row concat,
+    never a float re-ordering). ``mask`` is None only when every part's
+    mask is None (a maskless pipeline stays maskless)."""
+    cols0, mask0 = parts[0]
+    cols = {c: jnp.concatenate([p[0][c] for p in parts]) for c in cols0}
+    mask = (None if mask0 is None
+            else jnp.concatenate([p[1] for p in parts]))
+    return cols, mask
+
+
 def pkfk_join(fact: Table, dim: Table, fact_key: str, dim_key: str,
               take: Mapping[str, str]) -> Table:
     """Gather dim columns into the fact table through the PK (sorted index).

@@ -234,3 +234,57 @@ def chain_code(*, rows: int, dim: int, devices: int) -> str:
     occupancy-aware Compact pass on vs off: wall-clock plus the largest
     routed-buffer rows either plan materializes."""
     return CHAIN_CODE.format(rows=rows, dim=dim, devices=devices)
+
+
+TOPK_CODE = BENCH_SNIPPET + """
+import json, numpy as np, jax, jax.numpy as jnp
+from repro.analytics import plan as L
+from repro.analytics import physical as PH
+from repro.analytics import planner, telemetry
+from repro.core.config import PlacementPolicy
+
+mesh = jax.make_mesh(({devices},), ("data",))
+rng = np.random.RandomState(19)
+N, G, K = {rows}, {groups}, {k}
+tables = {{"t": {{"k": jnp.asarray(rng.randint(0, G, N).astype(np.int32)),
+                  "v": jnp.asarray(rng.rand(N).astype(np.float32))}}}}
+lplan = L.LogicalPlan(
+    L.scan("t").aggregate("k", G, c=("count", "v"), s=("sum", "v"))
+     .top_k("c", K, "top_idx"), ("c", "top_idx"))
+
+res = {{}}
+outs = {{}}
+for mode in ("replicated", "candidates"):
+    ctx = planner.ExecutionContext(executor="xla", mesh=mesh,
+                                   policy=PlacementPolicy.INTERLEAVE,
+                                   dist_topk=mode)
+    cp = planner.compile_plan(lplan, tables, ctx)
+    outs[mode] = cp(tables)
+    res[mode] = bench(cp, tables)
+    if mode == "candidates":
+        res["moved_rows"] = cp.physical.root.child.moved_rows  # k*(n-1)
+        with telemetry.recording() as reg:
+            tcp = planner.compile_plan(lplan, tables, ctx)
+            tcp(tables)
+        ps = reg.get(tcp.cache_key)
+        nodes = ps.node_list()
+        ex = tcp.physical.root.child
+        ns = [s for i, s in ps.nodes.items() if nodes[i] is ex][0]
+        res["observed_moved"] = ns.last["moved"]   # k*(n-1)*n total
+# both lowerings are bit-identical — counts and TopK indices are exact
+for key in ("c", "top_idx"):
+    assert np.array_equal(np.asarray(outs["replicated"][key]),
+                          np.asarray(outs["candidates"][key])), key
+res["cost_picks"] = planner.choose_dist_topk(
+    G, K, {devices}, planner.ExecutionContext())
+res["wire_budget"] = K * {devices}
+print(json.dumps(res))
+"""
+
+
+def topk_code(*, rows: int, groups: int, k: int, devices: int) -> str:
+    """Child source measuring one distributed order-by-limit with the
+    TopK lowering forced to replicated and to candidates (bit-identity
+    asserted in-process): wall-clock for both, the candidate Exchange's
+    estimated and telemetry-observed wire rows, and the cost pick."""
+    return TOPK_CODE.format(rows=rows, groups=groups, k=k, devices=devices)

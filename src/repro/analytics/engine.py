@@ -38,15 +38,15 @@ PREFERRED.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.analytics.columnar import (segment_distinct, segment_median,
-                                      segment_quantile,
+from repro.analytics.columnar import (concat_slices, segment_distinct,
+                                      segment_median, segment_quantile,
                                       stacked_group_sums)
 from repro.analytics.hashing import partition_of
 from repro.analytics.physical import ceil128
@@ -352,15 +352,32 @@ def morsel_group_sums(keys: jax.Array, vals: jax.Array, n_groups: int, *,
         n_partitions=n_partitions, capacity_factor=capacity_factor)
 
 
-def merge_morsel_partials(partials: Sequence[Tuple[jax.Array, jax.Array]]
-                          ) -> Tuple[jax.Array, jax.Array]:
-    """Left-fold per-morsel (sums, overflow) partials in morsel order.
+def merge_morsel_partials(partials: Sequence[Tuple[Any, jax.Array]]
+                          ) -> Tuple[Any, jax.Array]:
+    """Merge per-morsel partials in morsel order.
 
-    The fold order is part of the result's float semantics: merging in
-    sequence-number order (not completion order) keeps served answers
-    deterministic under work stealing."""
+    Two partial shapes flow through here:
+
+    * distributive aggregates — (sums, overflow) pairs, left-folded by
+      addition. The fold order is part of the result's float semantics:
+      merging in sequence-number order (not completion order) keeps
+      served answers deterministic under work stealing.
+    * split-probe pipelines — ((columns_dict, mask), overflow): each
+      morsel returns its slice of the pre-aggregate intermediate table,
+      and concatenating the slices in sequence order reconstructs the
+      serial table bit-for-bit (every on-path operator is per-row, so
+      row lo..hi of the serial run IS morsel (lo, hi)'s output).
+    """
     if not partials:
         raise ValueError("no morsel partials to merge")
+    head = partials[0][0]
+    if isinstance(head, tuple) and len(head) == 2 and isinstance(
+            head[0], dict):
+        merged = concat_slices([p[0] for p in partials])
+        overflow = partials[0][1]
+        for _, o in partials[1:]:
+            overflow = overflow + o
+        return merged, overflow
     sums, overflow = partials[0]
     for s, o in partials[1:]:
         sums = sums + s

@@ -163,6 +163,13 @@ class Compact:
 
 @dataclass(frozen=True)
 class PJoin:
+    """PK-FK join. ``morsel_split`` marks a LOCAL sorted-strategy probe
+    phase the planner judged large enough to split into per-pool morsels
+    (probe rows >= CostProfile.morsel_split_rows): the serving scheduler
+    may then slice the probe side row-range-wise while the build side's
+    pooled sort index is replicated once per worker pool
+    (planner.probe_split / JoinIndexPool.replica). Purely advisory — the
+    executors ignore it, so serial execution is untouched."""
     probe: "PNode"
     build: "PNode"
     probe_key: str
@@ -172,6 +179,7 @@ class PJoin:
     dist: Optional[str] = None              # None | broadcast | partitioned
     rows: int = 0
     est: int = 0
+    morsel_split: bool = False              # probe phase is morsel-splittable
 
 
 @dataclass(frozen=True)
@@ -209,10 +217,18 @@ class PAggregate:
 
 @dataclass(frozen=True)
 class PTopK:
+    """Order-by-limit. ``dist`` records the distributed lowering:
+    "replicated" selects on the merged (replicated) group table — free of
+    movement of its own but only because the table was already replicated
+    upstream; "candidates" selects each shard's local top-k over the group
+    slots it owns and converges only k rows per shard through the child
+    gather Exchange (k * n_shards candidate rows on the wire instead of
+    the whole group table). None = single-device plan."""
     child: "PNode"
     col: str
     k: int
     index_name: str
+    dist: Optional[str] = None              # None | replicated | candidates
     rows: int = 0
     est: int = 0
 
@@ -356,7 +372,8 @@ def ceil128(n: int) -> int:
     return max(128, -(-int(n) // 128) * 128)
 
 
-def maybe_compact(child: PNode, margin: float, enabled: bool) -> PNode:
+def maybe_compact(child: PNode, margin: float, enabled: bool,
+                  selectivity: float = 1.0) -> PNode:
     """Rule 3 — occupancy-aware compaction: before re-routing a buffer
     whose physical rows exceed its occupancy budget (``margin`` x
     estimated alive rows, 128-row tiles), insert a Compact so the next
@@ -365,10 +382,19 @@ def maybe_compact(child: PNode, margin: float, enabled: bool) -> PNode:
     routing input by another capacity_factor (the ROADMAP padding-growth
     bug). ``margin`` is the occupancy-estimate headroom (COMPACT_MARGIN
     or the ExecutionContext.compact override), distinct from the routing
-    capacity_factor, which absorbs per-destination routing skew."""
+    capacity_factor, which absorbs per-destination routing skew.
+
+    ``selectivity`` folds the (telemetry-refreshed) filter-selectivity
+    estimate of the buffer's stacked PFilters into the budget — a buffer
+    known to be mostly dead after filtering compacts tighter. The
+    effective margin is CLAMPED at 1.0 x est: a mis-estimated selectivity
+    may waste headroom, but it can never shrink the budget below the est
+    the routing capacities were sized from (alive rows beyond the budget
+    still surface as _overflow, never vanish)."""
     if not enabled:
         return child
-    cap = ceil128(margin * max(child.est, 1))
+    eff = max(margin * min(max(selectivity, 0.0), 1.0), 1.0)
+    cap = ceil128(eff * max(child.est, 1))
     if cap >= child.rows:
         return child                 # buffer already tight: nothing to cut
     return Compact(child, capacity=cap, rows=cap, est=child.est)
@@ -377,7 +403,10 @@ def maybe_compact(child: PNode, margin: float, enabled: bool) -> PNode:
 def pushdown_profitable(n_groups: int, child_rows: int) -> bool:
     """Rule 1's cost test — aggregate push-down ships one partial-sums row
     per group instead of one row per record, so it wins exactly when the
-    group domain is smaller than the per-shard input."""
+    group domain is smaller than the per-shard input. Callers price
+    ``child_rows`` as the estimated ALIVE input (est discounted by the
+    profile's filter_selectivity per stacked PFilter), so a drifted
+    selectivity refreshed by telemetry moves the crossover."""
     return n_groups < child_rows
 
 
@@ -455,6 +484,8 @@ def describe(plan: Union[PhysicalPlan, PNode], indent: int = 0,
         det = f"PJoin {plan.probe_key}={plan.build_key} {plan.strategy}"
         if plan.dist:
             det += f" dist={plan.dist}"
+        if plan.morsel_split:
+            det += " morsel_split"
         line = f"{det} rows={plan.rows}"
     elif isinstance(plan, PPartialAggregate):
         line = (f"PPartialAggregate by {plan.key} groups={plan.n_groups} "
@@ -470,6 +501,8 @@ def describe(plan: Union[PhysicalPlan, PNode], indent: int = 0,
         line = det
     elif isinstance(plan, PTopK):
         line = f"PTopK {plan.k} by {plan.col}"
+        if plan.dist:
+            line += f" dist={plan.dist}"
     elif isinstance(plan, PAttach):
         line = f"PAttach {dict(plan.cols)} via {plan.key}"
     else:

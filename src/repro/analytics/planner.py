@@ -138,7 +138,14 @@ class ExecutionContext:
     child is already placed by the same key (False disables).
     ``compact``: None = insert occupancy-aware Compact nodes before
     re-routing padded buffers (COMPACT_MARGIN occupancy headroom), False
-    disables, a float overrides the margin."""
+    disables, a float overrides the margin. ``dist_topk`` picks the
+    distributed TopK lowering: "cost" (default; topk_costs chooses from
+    the group-table size vs the candidate volume), or force "replicated"
+    (select on the merged replicated group table) / "candidates" (each
+    shard selects local top-k candidates over the group slots it owns
+    and a gather Exchange converges only k * n_shards candidate rows —
+    bit-identical results, no group-table replication priced on the
+    TopK)."""
 
     executor: str = "cost"
     mode: Optional[str] = None               # kernel lowering mode
@@ -151,6 +158,7 @@ class ExecutionContext:
     dist_join: Optional[str] = None
     dist_route: str = "hash"
     exchange_impl: str = "cost"
+    dist_topk: str = "cost"
     agg_pushdown: Optional[bool] = None
     route_once: bool = True
     compact: Union[None, bool, int, float] = None
@@ -168,6 +176,9 @@ class ExecutionContext:
         if self.exchange_impl not in ("argsort", "radix", "cost"):
             raise ValueError(
                 f"unknown exchange impl {self.exchange_impl!r}")
+        if self.dist_topk not in ("cost", "replicated", "candidates"):
+            raise ValueError(
+                f"unknown distributed TopK lowering {self.dist_topk!r}")
         if (not isinstance(self.compact, bool) and self.compact is not None
                 and (not isinstance(self.compact, (int, float))
                      or self.compact < 1.0)):
@@ -186,7 +197,8 @@ class ExecutionContext:
         return (self.executor, self.mode, mesh_key, self.policy, self.axis,
                 self.join, self.n_partitions, self.capacity_factor,
                 self.dist_join, self.dist_route, self.exchange_impl,
-                self.agg_pushdown, self.route_once, self.compact_margin())
+                self.dist_topk, self.agg_pushdown, self.route_once,
+                self.compact_margin())
 
     # -- rewrite-knob resolution -------------------------------------------
     def compact_margin(self) -> Optional[float]:
@@ -218,11 +230,21 @@ RADIX_ROUTE_FACTOR = 2.5  # radix Exchange layout: flat pass-equivalents
 #   2^(radix/sort) ~ 1024 per-shard rows with the hand-set constants;
 #   scripts/calibrate_costs.py --exchange fits it from the measured one.
 FILTER_SELECTIVITY = 0.75  # est alive fraction surviving one PFilter.
-#   Discounts ONLY Exchange.moved_rows (the priced wire payload) — never
-#   est/capacity/Compact budgets, so a selectivity prior can never shrink
-#   a buffer and surface phantom overflow. 1.5 (COMPACT_MARGIN) x 0.75 >=
-#   1 keeps that safe even if it ever did. telemetry.refresh_profile
-#   replaces it with the observed alive_out/alive_in ratio.
+#   Feeds three pricing decisions: Exchange.moved_rows (the priced wire
+#   payload), the aggregate push-down crossover (pushdown_profitable is
+#   priced on est * selectivity^filters, not physical rows), and the
+#   Compact budget (maybe_compact folds it into the margin, CLAMPED at
+#   1.0 x est so a selectivity prior can never shrink a buffer below its
+#   estimated alive rows and surface phantom overflow — alive rows beyond
+#   any budget still land in _overflow, never vanish).
+#   telemetry.refresh_profile replaces it with the observed
+#   alive_out/alive_in ratio, so all three decisions adapt to drift.
+MORSEL_SPLIT_ROWS = 2048  # smallest LOCAL sorted-join probe side worth
+#   splitting into per-pool morsels: below this, per-morsel dispatch
+#   overhead (a jit call + partial merge per morsel) beats the
+#   parallelism. Marks PJoin.morsel_split during lowering; the serving
+#   scheduler's probe_split path honors the mark. Fitted by
+#   scripts/calibrate_costs.py --morsel from the measured crossover.
 
 
 @dataclass(frozen=True)
@@ -248,6 +270,7 @@ class CostProfile:
     radix_route_factor: float = RADIX_ROUTE_FACTOR
     filter_selectivity: float = FILTER_SELECTIVITY
     dense_group_limit: int = DENSE_GROUP_LIMIT
+    morsel_split_rows: int = MORSEL_SPLIT_ROWS
     partition_capacity_factor: Optional[float] = None
     compact_margin: Optional[float] = None
     source: str = "builtin"
@@ -295,6 +318,8 @@ def load_cost_profile(path: str) -> CostProfile:
                                          FILTER_SELECTIVITY)),
         dense_group_limit=int(raw.get("dense_group_limit",
                                       DENSE_GROUP_LIMIT)),
+        morsel_split_rows=int(raw.get("morsel_split_rows",
+                                      MORSEL_SPLIT_ROWS)),
         partition_capacity_factor=(None if pcf is None else float(pcf)),
         source=str(raw.get("backend", path))))
 
@@ -416,6 +441,44 @@ def choose_exchange_impl(n_rows: int, ctx: "ExecutionContext",
     if ctx.exchange_impl != "cost":
         return ctx.exchange_impl
     costs = exchange_costs(n_rows, profile)
+    return min(costs, key=costs.get)
+
+
+def topk_costs(n_groups: int, k: int, n_shards: int,
+               profile: Optional[CostProfile] = None) -> Dict[str, float]:
+    """Row-transfer-equivalent cost of each distributed TopK lowering.
+
+    replicated   selects on the merged group table, which must therefore
+                 be replicated on every shard: the TopK is charged the
+                 (n-1)/n of the G group rows each shard receives beyond
+                 the slots it owns (the replication the merge collective
+                 would otherwise not need — LOCAL_ALLOC's reduce_scatter,
+                 for instance, is owner-sharded by nature).
+    candidates   each shard selects its local top-k over the ~G/n group
+                 slots it owns; a gather Exchange converges k rows per
+                 shard — k * n_shards candidate rows on the wire,
+                 independent of the group-table size.
+
+    The crossover: candidates wins once G(n-1)/n > kn, i.e. for any group
+    domain meaningfully larger than k * n (the common case — a TopK's k
+    is tiny next to its group table)."""
+    del profile                      # priced in raw rows, no fitted factor
+    n = max(int(n_shards), 2)
+    return {
+        "replicated": float(n_groups) * (n - 1) / n,
+        "candidates": float(k) * n,
+    }
+
+
+def choose_dist_topk(n_groups: int, k: int, n_shards: int,
+                     ctx: "ExecutionContext",
+                     profile: Optional[CostProfile] = None) -> str:
+    """"replicated" vs "candidates" for one distributed TopK."""
+    if ctx.dist_topk != "cost":
+        return ctx.dist_topk
+    if n_shards < 2:
+        return "replicated"          # nothing to move: candidates is waste
+    costs = topk_costs(n_groups, k, n_shards, profile)
     return min(costs, key=costs.get)
 
 
@@ -557,6 +620,7 @@ class JoinIndexPool:
     def __init__(self, maxsize: int = 256):
         self._lru = LRUCache(maxsize)
         self.builds = 0
+        self.replicas = 0
 
     def get(self, table: str, column: str, arr) -> Tuple[jax.Array, jax.Array]:
         key = (table, column, id(arr))
@@ -574,6 +638,33 @@ class JoinIndexPool:
             self._sweep_dead()
         return idx
 
+    def replica(self, table: str, column: str, arr,
+                pool_id: int) -> Tuple[jax.Array, jax.Array]:
+        """A per-worker-pool copy of ``get``'s (order, sorted_keys) pair —
+        the build-side replication of the paper's socket-local working
+        sets. The base index is computed ONCE (``builds`` counts sorts);
+        each pool then gets its own buffer copy (``replicas`` counts
+        them), so every probe morsel a pool executes hits a pool-local
+        build structure instead of contending on one shared buffer.
+        Values are bit-identical to the base index by construction."""
+        key = (table, column, id(arr), "replica", int(pool_id))
+        hit = self._lru.get(key)
+        if hit is not None and hit[0]() is arr:
+            return hit[1]
+        order, sk = self.get(table, column, arr)     # base: built once
+        with self._lru._lock:
+            # double-check under the lock: two workers of the SAME pool
+            # can race their pool's first morsel, and "one replica per
+            # pool" is the accounting invariant tests pin down
+            hit = self._lru.get(key)
+            if hit is not None and hit[0]() is arr:
+                return hit[1]
+            idx = (jnp.copy(order), jnp.copy(sk))
+            self._lru.put(key, (weakref.ref(arr), idx))
+            self.replicas += 1
+            self._sweep_dead()
+        return idx
+
     def _sweep_dead(self) -> None:
         with self._lru._lock:
             dead = [k for k, (ref, _) in self._lru._d.items()
@@ -587,6 +678,7 @@ class JoinIndexPool:
     def clear(self) -> None:
         self._lru.clear()
         self.builds = 0
+        self.replicas = 0
 
 
 _INDEX_POOL = JoinIndexPool()
@@ -605,6 +697,131 @@ def required_indexes(root: L.Node) -> Tuple[Tuple[str, str], ...]:
             if sc is not None and (sc.table, node.build_key) not in out:
                 out.append((sc.table, node.build_key))
     return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# morsel-split probe analysis (the serving scheduler's split-probe oracle)
+# ---------------------------------------------------------------------------
+def _physical_base_scan(node: PH.PNode, column: str) -> Optional[PH.PScan]:
+    """The PScan whose ``column`` reaches ``node`` value-identical (same
+    rows, same order, never overwritten), or None. The physical twin of
+    L.base_scan: it certifies that the pooled (order, sorted_keys) index
+    built from the base table's column array is valid for this node's
+    Table — Filter only masks, a local Join's output rows ARE its probe
+    rows, Project/Attach only add columns (unless they shadow
+    ``column``)."""
+    while True:
+        if isinstance(node, PH.PScan):
+            return node
+        if isinstance(node, PH.PFilter):
+            node = node.child
+        elif isinstance(node, PH.PProject):
+            if any(n == column for n, _ in node.cols):
+                return None
+            node = node.child
+        elif isinstance(node, PH.PJoin):
+            if node.dist is not None or any(n == column
+                                            for n, _ in node.take):
+                return None
+            node = node.probe
+        elif isinstance(node, PH.PAttach):
+            if any(n == column for n, _ in node.cols):
+                return None
+            node = node.child
+        else:
+            return None
+
+
+@dataclass(frozen=True)
+class PreludeSpec:
+    """One subtree of a split-probe plan that executes ONCE per task (not
+    per morsel): a join build side or an Attach source. ``is_table`` says
+    whether its result is a Table (serialized as (columns, mask) across
+    the jit boundary) or a replicated dict of group arrays; ``index`` is
+    the (table, column) pooled sort index a pool-local replica must seed
+    into the reconstructed build Table's index_cache (None for Attach
+    sources, which need no index)."""
+    node: PH.PNode
+    is_table: bool
+    index: Optional[Tuple[str, str]]
+
+
+@dataclass(frozen=True)
+class ProbeSplit:
+    """probe_split()'s answer: the pieces the serving scheduler needs to
+    run a marked join-probe pipeline as per-pool morsels. ``scan`` is the
+    probe-side base scan (the morsel axis), ``pipeline_root`` the
+    aggregate's input (the per-morsel pipeline: every node between scan
+    and aggregate is per-row deterministic, so concatenating the morsel
+    outputs in morsel order reproduces the serial intermediate table
+    bit-for-bit), ``preludes`` the once-per-task subtrees, ``root`` /
+    ``outputs`` what the finalize step runs over the merged table."""
+    root: PH.PNode
+    outputs: Optional[Tuple[str, ...]]
+    scan: PH.PScan
+    pipeline_root: PH.PNode
+    preludes: Tuple[PreludeSpec, ...]
+    n_rows: int
+
+
+def probe_split(phys: PH.PhysicalPlan) -> Optional[ProbeSplit]:
+    """Decompose a LOCAL physical plan into a morsel-splittable probe
+    pipeline, or None when the plan must run whole.
+
+    Splittable = (optional PTopK over) a PAggregate whose child chain
+    down to one PScan is Filter/Project/Join/Attach where EVERY join is
+    ``morsel_split``-marked (sorted strategy, probe side past the
+    cost-model crossover) with a resolvable base-scan build index. Each
+    on-path operator is per-row deterministic over the probe rows, so a
+    row-range slice of the scan yields exactly that slice of the serial
+    intermediate table — the bit-identity guarantee the whole-plan path
+    already had, kept under intra-query parallelism. Declines (returns
+    None) rather than degrade: an unresolvable build index would force a
+    per-morsel argsort (defeating once-per-pool replication), and a
+    kernel-strategy join changes overflow semantics under slicing."""
+    if phys.n_shards != 1:
+        return None
+    node = phys.root
+    while isinstance(node, PH.PTopK):
+        node = node.child
+    if not isinstance(node, PH.PAggregate):
+        return None
+    preludes: List[PreludeSpec] = []
+    path: List[PH.PNode] = []
+    cur = node.child
+    while not isinstance(cur, PH.PScan):
+        path.append(cur)
+        if isinstance(cur, (PH.PFilter, PH.PProject)):
+            cur = cur.child
+        elif isinstance(cur, PH.PJoin):
+            if not cur.morsel_split:
+                return None          # cost model declined (or kernel join)
+            base = _physical_base_scan(cur.build, cur.build_key)
+            if base is None:
+                return None          # no poolable build index: stay whole
+            preludes.append(PreludeSpec(
+                cur.build, True, (base.table, cur.build_key)))
+            cur = cur.probe
+        elif isinstance(cur, PH.PAttach):
+            src = cur.source
+            preludes.append(PreludeSpec(
+                src, not isinstance(src, (PH.PAggregate, PH.PTopK)), None))
+            cur = cur.child
+        else:
+            return None
+    if not any(p.index is not None for p in preludes):
+        return None                  # no join probe to parallelize
+    scan = cur
+    path.append(scan)
+    # a prelude subtree structurally EQUAL to a path node would collide
+    # in the executor's structural memo (the path is seeded with
+    # morsel-sliced values, the prelude with whole-table ones) — decline
+    # such self-join-like shapes instead of guessing
+    path_set = set(path)
+    if any(p.node in path_set for p in preludes):
+        return None
+    return ProbeSplit(phys.root, phys.outputs, scan, node.child,
+                      tuple(preludes), scan.rows)
 
 
 # ---------------------------------------------------------------------------
@@ -759,8 +976,29 @@ class _Lowering:
 
     def _topk(self, node: L.TopK) -> PH.PTopK:
         c = self.node(node.child)
+        if not self.distributed:
+            return PH.PTopK(c, node.col, node.k, node.index_name,
+                            rows=node.k, est=node.k)
+        # distributed TopK: the child aggregate's merged group table is
+        # replicated, so selecting on it directly ("replicated") is
+        # correct but charges the TopK the table's replication. The
+        # "candidates" lowering instead selects each shard's local top-k
+        # over the ~G/n group slots it owns and converges only k rows per
+        # shard through an explicit gather Exchange — k * n_shards
+        # candidate rows on the wire, bit-identical results (within-shard
+        # ties keep ascending global slot order, the shard-major gather
+        # preserves it, and lax.top_k's lowest-index tie-break matches
+        # the replicated selection).
+        G = c.rows
+        choice = choose_dist_topk(G, node.k, self.n, self.ctx, self.profile)
+        if choice == "candidates":
+            ex = PH.Exchange(c, "gather", rows=node.k * self.n,
+                             est=node.k * self.n,
+                             moved_rows=node.k * (self.n - 1))
+            return PH.PTopK(ex, node.col, node.k, node.index_name,
+                            dist="candidates", rows=node.k, est=node.k)
         return PH.PTopK(c, node.col, node.k, node.index_name,
-                        rows=node.k, est=node.k)
+                        dist="replicated", rows=node.k, est=node.k)
 
     # -- joins --------------------------------------------------------------
     def _join(self, node: L.Join) -> PH.PJoin:
@@ -768,9 +1006,21 @@ class _Lowering:
         build = self.node(node.build)
         if not self.distributed:
             strategy = choose_join(probe.rows, build.rows, self.ctx)
+            # morsel-splittable probe phase: the sorted-index gather is
+            # per-probe-row deterministic against a fixed build index, so
+            # the serving scheduler may slice the probe side into
+            # per-pool morsels (build side replicated per pool) with
+            # bit-identical results. The kernel join's partition-overflow
+            # semantics change under row slicing, so only the sorted
+            # strategy is markable; small probes stay whole-plan (the
+            # per-morsel dispatch overhead loses below the fitted
+            # morsel_split_rows crossover).
+            split = (strategy == "sorted"
+                     and probe.rows >= self.profile.morsel_split_rows)
             return PH.PJoin(probe, build, node.probe_key, node.build_key,
                             node.take, strategy, None,
-                            rows=probe.rows, est=probe.est)
+                            rows=probe.rows, est=probe.est,
+                            morsel_split=split)
         n_probe, n_build = probe.rows * self.n, build.rows * self.n
         if self.observed is not None:
             obs = self.observed(node.probe_key, node.build_key)
@@ -801,8 +1051,10 @@ class _Lowering:
         if (self.ctx.route_once
                 and PH.placed_key(side) == (key, method)):
             return side              # rule 2: an upstream routing suffices
-        side = PH.maybe_compact(side, self.margin or 0.0,
-                                self.margin is not None)       # rule 3
+        side = PH.maybe_compact(
+            side, self.margin or 0.0, self.margin is not None,
+            self.profile.filter_selectivity
+            ** PH.filters_below(side))                         # rule 3
         cap = routing_capacity(side.rows, self.n, self.ctx.capacity_factor)
         sel = self.profile.filter_selectivity ** PH.filters_below(side)
         return PH.Exchange(side, "hash", key=key, capacity=cap,
@@ -892,9 +1144,17 @@ class _Lowering:
                 child.rows, G, C, ctx.executor, self.profile))
             return PH.PAggregate(child, node.key, G, node.aggs, layout,
                                  "placed", med, rows=G, est=G)
+        # the push-down crossover is priced on the estimated ALIVE input
+        # (est discounted by the telemetry-refreshed filter selectivity
+        # per stacked filter), not the physical buffer rows: a heavily
+        # filtered input ships fewer records than its buffer suggests,
+        # which moves the G-vs-records crossover
+        alive = max(int(child.est
+                        * self.profile.filter_selectivity
+                        ** PH.filters_below(child)), 1)
         pushdown = (ctx.agg_pushdown is True
                     or (ctx.agg_pushdown is None
-                        and PH.pushdown_profitable(G, child.rows)))
+                        and PH.pushdown_profitable(G, alive)))
         if pushdown:
             # rule 1: partial-aggregate below the exchange, ship ~G
             # partial rows instead of the records
@@ -910,7 +1170,9 @@ class _Lowering:
                                  "pushdown", med, rows=G, est=G)
         # record routing: the classic INTERLEAVE all-to-all of the data
         rchild = PH.maybe_compact(child, self.margin or 0.0,
-                                  self.margin is not None)
+                                  self.margin is not None,
+                                  self.profile.filter_selectivity
+                                  ** PH.filters_below(child))
         cap = routing_capacity(rchild.rows, self.n, ctx.capacity_factor)
         sel = self.profile.filter_selectivity ** PH.filters_below(rchild)
         ex = PH.Exchange(rchild, "hash", key=node.key, capacity=cap,
@@ -1240,6 +1502,40 @@ class _DistributedExecutor(_LocalExecutor):
         self._note(node, probe_alive=self._alive(probe.weights()),
                    build_alive=build_alive,
                    out_alive=self._alive(joined.weights()))
+
+    def _ptopk(self, node: PH.PTopK) -> Dict[str, jax.Array]:
+        if node.dist != "candidates":
+            # "replicated": select on the merged (replicated) group table
+            # — the inherited single-device lowering is already correct
+            return super()._ptopk(node)
+        # candidates: the child is a gather Exchange over the aggregate.
+        # Each shard owns a contiguous slot range of the group table
+        # (ceil(G/n) slots), selects its local top-k with GLOBAL slot
+        # indices, and only the (k,) candidate pairs converge. Bit-exact
+        # vs the replicated lowering: within a shard lax.top_k breaks
+        # ties by ascending index, the shard-major all_gather preserves
+        # ascending global index among equal values across shards, and
+        # the final lax.top_k over the k*n candidates breaks its ties by
+        # candidate position — which is exactly ascending global index.
+        ex = node.child
+        g = self.run(ex.child)
+        vals = g[node.col]
+        G = vals.shape[0]
+        n, axis = self.n, self.ctx.axis
+        slots = (G + (-G % n)) // n
+        me = jax.lax.axis_index(axis)
+        owned = (jnp.arange(G) // slots) == me
+        local_vals, local_idx = jax.lax.top_k(
+            jnp.where(owned, vals, -jnp.inf), node.k)
+        cand_vals = jax.lax.all_gather(local_vals, axis, tiled=True)
+        cand_idx = jax.lax.all_gather(local_idx, axis, tiled=True)
+        if self.record:
+            # the gather's wire volume: k candidate rows per shard, each
+            # landing on the n-1 shards that did not produce it
+            self._note(ex, alive_in=node.k * n,
+                       moved=node.k * (n - 1) * n)
+        top_vals, pos = jax.lax.top_k(cand_vals, node.k)
+        return {node.col: top_vals, node.index_name: cand_idx[pos]}
 
     def _ppartialaggregate(self, node: PH.PPartialAggregate):
         """Local (n_groups, C) stacked partial sums — the below-the-
@@ -1718,6 +2014,12 @@ def explain(plan: L.LogicalPlan, tables,
             decisions.append(Decision(
                 "FilterBelowExchange", L.expr_str(node.pred),
                 "pushed"))
+        elif isinstance(node, PH.PTopK) and node.dist is not None:
+            G = _strip_movement(node.child).rows
+            decisions.append(Decision(
+                "DistTopK", f"col={node.col}, k={node.k}, groups={G}, "
+                f"shards={n}", node.dist,
+                tuple(topk_costs(G, node.k, n).items())))
         elif isinstance(node, PH.Compact):
             decisions.append(Decision(
                 "Compact", f"capacity={node.capacity}, "

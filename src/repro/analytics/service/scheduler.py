@@ -12,10 +12,18 @@ The execution analog of the paper's thread-placement axis (Figs 3/4):
     — the work unit that makes load balancing possible at all. Plans
     whose root is a distributive Aggregate over a Scan/Filter/Project
     chain are split into per-morsel partial aggregations merged in morsel
-    order (engine.merge_morsel_partials — deterministic under stealing);
-    everything else (joins, TopK, distributed contexts) executes as one
-    whole-plan morsel through the planner's CompiledPlan handle, which is
-    bit-identical to a serial ``run_query`` by construction.
+    order (engine.merge_morsel_partials — deterministic under stealing).
+    Join-probe pipelines the planner marked ``morsel_split`` take the
+    SPLIT-PROBE path (_probe_split_decompose): the build sides run once
+    per task, each worker pool probes against its OWN replica of the
+    pooled build index (JoinIndexPool.replica — the paper's socket-local
+    working set, built once per pool, never per morsel), and the
+    per-morsel intermediate tables concatenate in morsel order so the
+    served result stays bit-identical to serial execution. Everything
+    else (kernel joins, distributed contexts, sub-threshold probes)
+    executes as one whole-plan morsel through the planner's CompiledPlan
+    handle, which is bit-identical to a serial ``run_query`` by
+    construction.
   * **ThreadPlacement** mirrors benchmarks/fig3_fig4_thread_placement.py:
     OS_DEFAULT round-robins morsels over pools in arrival order (the
     topology-oblivious baseline), DENSE packs a query's morsels onto one
@@ -142,7 +150,7 @@ class QueryTask:
         tasks, whose unit is the per-morsel partial executable."""
         return None if self.compiled is None else self.compiled.physical
 
-    def _run_morsel(self, m: _Morsel) -> None:
+    def _run_morsel(self, m: _Morsel, pool_id: int = 0) -> None:
         try:
             with self._lock:
                 if self._poison is not None:
@@ -157,8 +165,11 @@ class QueryTask:
                 with self._lock:
                     self.result = out
             else:
+                # the EXECUTING pool's id, not home_pool: a stolen morsel
+                # must probe against the thief's build replica
                 part = jax.block_until_ready(
-                    self.morsel_fn(self.tables, m.lo, length=m.length))
+                    self.morsel_fn(self.tables, m.lo, length=m.length,
+                                   pool=pool_id))
                 with self._lock:
                     self._partials[m.seq] = part
         except BaseException as e:  # noqa: BLE001 — surfaced to waiter
@@ -336,15 +347,18 @@ class MorselScheduler:
         """Compile (through the plan cache) and wrap a plan as a task.
 
         Decomposable plans (distributive Aggregate over a Scan chain, no
-        mesh) become per-morsel partials when ``morsel_rows`` is set; all
-        others become a single whole-plan morsel whose result is
-        bit-identical to serial execution by construction. Whole-plan
-        dispatch goes through ``planner.compile_plan`` and therefore the
-        EXPLICIT physical plan (lowered once, cached as the plan-cache
-        value; inspectable via ``task.physical``) — the scheduler never
-        re-derives strategy decisions at dispatch time. The whole-plan
-        executable is only compiled on that fallback path — a split task
-        must not push a never-invoked entry into the bounded plan cache."""
+        mesh) become per-morsel partials when ``morsel_rows`` is set;
+        planner-marked join-probe pipelines become split-probe tasks
+        (build sides once per task, probe morsels per pool — see the
+        module docstring); all others become a single whole-plan morsel
+        whose result is bit-identical to serial execution by
+        construction. Whole-plan dispatch goes through
+        ``planner.compile_plan`` and therefore the EXPLICIT physical plan
+        (lowered once, cached as the plan-cache value; inspectable via
+        ``task.physical``) — the scheduler never re-derives strategy
+        decisions at dispatch time. The whole-plan executable is only
+        compiled on that fallback path — a split task must not push a
+        never-invoked entry into the bounded plan cache."""
         ctx = ctx or ExecutionContext()
         # fault hook: one dispatch ordinal per build attempt (retries
         # re-tick); an injected build failure raises HERE, before any
@@ -352,7 +366,8 @@ class MorselScheduler:
         ordinal = (self.faults.begin_dispatch()
                    if self.faults is not None else None)
         if self.morsel_rows is not None and ctx.mesh is None:
-            split = _morsel_decompose(plan, tables, ctx)
+            split = (_morsel_decompose(plan, tables, ctx)
+                     or _probe_split_decompose(plan, tables, ctx))
             if split is not None:
                 morsel_fn, finalize, n_rows = split
                 task = QueryTask(None, tables, morsel_fn, finalize,
@@ -539,7 +554,7 @@ class MorselScheduler:
             if delay > 0.0:
                 time.sleep(delay)
             t0 = time.monotonic()
-            m.task._run_morsel(m)
+            m.task._run_morsel(m, pool.pool_id)
             t1 = time.monotonic()
             if tracing.tracing_enabled():
                 tracing.tracer().add_complete(
@@ -650,6 +665,10 @@ def _morsel_decompose(plan: L.LogicalPlan, tables, ctx: ExecutionContext):
          profile),
         lambda: jax.jit(partial, static_argnames=("length",)))
 
+    def morsel_fn(tbls, lo, *, length, pool=0):
+        del pool             # partial sums need no pool-local structures
+        return fn(tbls, lo, length=length)
+
     src = [c for _, (op, c) in root.aggs
            if op in ("sum", "avg")]
     src = list(dict.fromkeys(src))          # distinct, insertion order
@@ -661,9 +680,122 @@ def _morsel_decompose(plan: L.LogicalPlan, tables, ctx: ExecutionContext):
             out = {k: out[k] for k in plan.outputs}
         return out
 
-    return fn, finalize, n_rows
+    return morsel_fn, finalize, n_rows
 
 
 def _no_order_stats(op, col):
     raise ValueError(f"order statistic {op!r} is not distributive — "
                      "plan should not have been morsel-decomposed")
+
+
+# ---------------------------------------------------------------------------
+# split-probe decomposition of planner-marked join pipelines
+# ---------------------------------------------------------------------------
+def _build_probe_split(plan: L.LogicalPlan, ctx: ExecutionContext, tables,
+                       profile):
+    """Plan-cache value for a split-probe candidate: the string "whole"
+    when the planner declines (cached, so repeat dispatches skip the
+    re-analysis), else (probe_split, prelude_jit, morsel_jit, final_jit).
+
+    Three executables because the three phases run at different
+    cadences: the prelude (join build sides, Attach sources) once per
+    TASK, the probe pipeline once per MORSEL (row-range specialized via
+    the static ``length``, like the distributive-aggregate path), and
+    the finalize (aggregate + TopK over the merged intermediate table)
+    once per task after the morsel-order merge."""
+    phys = planner.lower(plan, ctx,
+                         {t: next(iter(c.values())).shape[0]
+                          for t, c in tables.items()}, profile)
+    split = planner.probe_split(phys)
+    if split is None:
+        return "whole"
+    preludes = split.preludes
+
+    def run_prelude(tbls, indexes):
+        ex = planner._LocalExecutor(tbls, ctx, indexes, profile)
+        vals = []
+        for p in preludes:
+            v = ex.run(p.node)
+            # Tables serialize as (columns, mask) across the jit
+            # boundary — index_cache is host state and is re-seeded per
+            # morsel from the pool replicas instead
+            vals.append((v.columns, v.mask) if p.is_table else v)
+        return vals, ex.overflow
+
+    def run_morsel(tbls, prelude_vals, replicas, lo, *, length):
+        ex = planner._LocalExecutor(tbls, ctx, {}, profile)
+        ri = 0
+        for p, v in zip(preludes, prelude_vals):
+            if p.is_table:
+                cols, mask = v
+                cache = {}
+                if p.index is not None:
+                    # the pool-local build replica seeds key_index, so a
+                    # sorted join never re-argsorts inside a morsel
+                    cache = {p.index[1]: replicas[ri]}
+                    ri += 1
+                ex._memo[p.node] = Table(dict(cols), mask, cache)
+            else:
+                ex._memo[p.node] = v
+        ex._memo[split.scan] = Table(
+            morsel_slice_columns(tbls[split.scan.table], lo, length))
+        t = ex.run(split.pipeline_root)
+        return (t.columns, t.mask), ex.overflow
+
+    def run_final(merged, overflow):
+        cols, mask = merged
+        ex = planner._LocalExecutor({}, ctx, {}, profile)
+        ex._memo[split.pipeline_root] = Table(dict(cols), mask)
+        ex.overflow = ex.overflow + overflow
+        out = dict(ex.run(split.root))
+        out["_overflow"] = ex.overflow
+        if split.outputs is not None:
+            out = {k: out[k] for k in split.outputs}
+        return out
+
+    return (split, jax.jit(run_prelude),
+            jax.jit(run_morsel, static_argnames=("length",)),
+            jax.jit(run_final))
+
+
+def _probe_split_decompose(plan: L.LogicalPlan, tables,
+                           ctx: ExecutionContext):
+    """(morsel_fn, finalize, n_rows) for a planner-marked split-probe
+    join pipeline, else None.
+
+    The division of labor mirrors the paper's socket-local working sets:
+    the build side is materialized ONCE per task (prelude), its pooled
+    sort index replicated ONCE per worker pool
+    (JoinIndexPool.replica), and every probe morsel — wherever stealing
+    lands it — probes the executing pool's replica. Per-morsel outputs
+    are row slices of the serial intermediate table, so the morsel-order
+    concat + finalize reproduces serial ``run_query`` bit-for-bit (the
+    distributive-aggregate path cannot promise that; this path can,
+    because the merge is a concat, not a float re-ordering)."""
+    profile = planner.current_cost_profile()
+    bundle = planner.cached_executable(
+        ("morsel-probe", plan, ctx.cache_key(),
+         planner.table_signature(tables), profile),
+        lambda: _build_probe_split(plan, ctx, tables, profile))
+    if bundle == "whole":
+        return None
+    split, prelude_jit, morsel_jit, final_jit = bundle
+    join_pool = planner.join_index_pool()
+    indexes = {f"{t}.{c}": join_pool.get(t, c, tables[t][c])
+               for t, c in planner.required_indexes(plan.root)}
+    # the prelude runs ONCE per task — its values are closed over by
+    # every morsel of this task
+    prelude_vals, prelude_ovf = prelude_jit(tables, indexes)
+    specs = [p.index for p in split.preludes if p.index is not None]
+
+    def morsel_fn(tbls, lo, *, length, pool=0):
+        # per-POOL build replicas (an LRU hit after each pool's first
+        # morsel), fetched by the EXECUTING pool — including on steals
+        replicas = [join_pool.replica(t, c, tbls[t][c], pool)
+                    for t, c in specs]
+        return morsel_jit(tbls, prelude_vals, replicas, lo, length=length)
+
+    def finalize(merged, overflow):
+        return final_jit(merged, overflow + prelude_ovf)
+
+    return morsel_fn, finalize, split.n_rows

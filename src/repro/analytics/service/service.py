@@ -26,7 +26,12 @@ attempts); the scheduler's heartbeat/EWMA sweep quarantines dead or
 straggling pools between wait ticks and requeues their backlog, so the
 service keeps serving on a shrunk pool set. Results stay bit-identical
 to serial execution because whole-plan dispatch is idempotent and morsel
-partials merge in morsel order regardless of which pool ran them.
+partials merge in morsel order regardless of which pool ran them — on
+the split-probe path (scheduler._probe_split_decompose: join probe
+morsels over pool-replicated build sides) the merge is a morsel-order
+row CONCATENATION feeding one finalize, so no reduction is ever
+reassociated and re-dispatch after a fault reproduces the serial answer
+bit-for-bit.
 
 Every admitted request gets EXACTLY ONE terminal ``QueryResult``: a
 value, ``expired`` (deadline passed — at dequeue, between rounds, or

@@ -48,6 +48,27 @@ def context_capacity_factor(seed: int) -> float:
     return DIST_CAPACITY_FACTORS[seed % len(DIST_CAPACITY_FACTORS)]
 
 
+# morsel-forced grid (PR 10): per-seed probe morsel sizes small enough
+# that the 768-row fact table splits into >= 3 morsels, varied so the
+# scheduler's backlog/steal paths see different shapes per seed
+MORSEL_ROWS_CHOICES = (96, 160, 256)
+
+
+def context_morsel_rows(seed: int) -> int:
+    """Deterministic per-seed morsel size for the split-probe grid."""
+    return MORSEL_ROWS_CHOICES[seed % len(MORSEL_ROWS_CHOICES)]
+
+
+DIST_TOPK_MODES = ("replicated", "candidates")
+
+
+def context_dist_topk(seed: int) -> str:
+    """Deterministic per-seed FORCED distributed-TopK lowering: the fuzz
+    runs BOTH forced modes for parity and uses this to alternate which
+    one gets the telemetry-tracked wire-accounting pass."""
+    return DIST_TOPK_MODES[seed % len(DIST_TOPK_MODES)]
+
+
 def make_tables(seed: int = 0):
     """Deterministic base tables: a fact table and a joinable dimension.
 

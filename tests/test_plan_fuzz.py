@@ -38,13 +38,16 @@ overflow equals the plan's ``_overflow`` output, and the join/aggregate
 alive counts agree bit-exactly across placements and with the local
 reference (they are relational facts, independent of the lowering).
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
 from conftest import run_with_devices
 from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
-from _plan_gen import (_root_aggregate, exact_output, make_plan, make_tables,
-                       plan_agg_ops, plan_has_join)
+from _plan_gen import (MORSEL_ROWS_CHOICES, _root_aggregate,
+                       context_morsel_rows, exact_output, make_plan,
+                       make_tables, plan_agg_ops, plan_has_join)
 
 from repro.analytics import plan as L
 from repro.analytics import planner, telemetry
@@ -52,6 +55,7 @@ from repro.analytics.planner import ExecutionContext, execute_plan
 
 LOCAL_SEEDS = range(48)
 DIST_SEEDS = range(16)
+MORSEL_SEEDS = range(24)
 
 
 def _check_parity(got, ref, ops, tag):
@@ -120,13 +124,69 @@ def test_fuzz_local_hypothesis_seeds(seed):
     _run_local_seed(seed)
 
 
+def test_fuzz_morsel_scheduler_parity():
+    """Morsel-forced grid (PR 10): the same generated plans dispatched
+    through MorselScheduler with the split threshold shrunk below the
+    768-row fact table, per-seed morsel sizes from _plan_gen.
+
+    Join plans take the split-probe path (build side pool-replicated,
+    probe morsels merged in morsel order) and must be BIT-IDENTICAL to
+    the serial executor — the probe phase computes per-row values, so
+    splitting it cannot reassociate any reduction. Join-free distributive
+    plans take the legacy partial-sums path (tolerance tier for
+    sums/avgs, its documented trade). Per-pool executed/steal counters
+    must account for exactly the dispatched morsels."""
+    import jax.numpy as jnp
+    from repro.analytics.service.scheduler import (MorselScheduler,
+                                                   ThreadPlacement)
+    base = planner.current_cost_profile()
+    planner.set_cost_profile(dataclasses.replace(base, morsel_split_rows=64))
+    split_probe_seeds = 0
+    try:
+        raw = make_tables()
+        tables = {t: {c: jnp.asarray(v) for c, v in cols.items()}
+                  for t, cols in raw.items()}
+        ctx = ExecutionContext(executor="cost", join="sorted")
+        for mr in MORSEL_ROWS_CHOICES:
+            seeds = [s for s in MORSEL_SEEDS if context_morsel_rows(s) == mr]
+            with MorselScheduler(n_pools=2, workers_per_pool=2,
+                                 morsel_rows=mr,
+                                 placement=ThreadPlacement.SPARSE) as sched:
+                for seed in seeds:
+                    plan = make_plan(seed)
+                    ops = plan_agg_ops(plan)
+                    ref = execute_plan(plan, tables, ctx)
+                    task = sched.build_task(plan, tables, ctx)
+                    got = sched.submit(task).wait()
+                    probe_split = task.split and plan_has_join(plan)
+                    if probe_split:
+                        split_probe_seeds += 1
+                        assert len(task.morsels) >= 2, seed
+                        assert set(got) == set(ref), seed
+                        for k in ref:
+                            np.testing.assert_array_equal(
+                                np.asarray(got[k]), np.asarray(ref[k]),
+                                err_msg=f"morsel seed={seed}/{k}")
+                    else:
+                        _check_parity(got, ref, ops,
+                                      f"morsel seed={seed}")
+                st = sched.stats()
+                assert sum(st.executed_per_pool) == st.morsels_dispatched
+                assert 0 <= st.steals <= st.morsels_dispatched
+    finally:
+        planner.set_cost_profile(base)
+    # roughly half the generated plans join: the grid must actually have
+    # exercised the split-probe path, not silently served everything whole
+    assert split_probe_seeds >= len(MORSEL_SEEDS) // 4, split_probe_seeds
+
+
 DIST_FUZZ = """
 import sys
 sys.path.insert(0, {testdir!r})
 import numpy as np, jax
 from _plan_gen import (_root_aggregate, context_capacity_factor,
-                       exact_output, make_plan, make_tables, plan_agg_ops,
-                       plan_has_join)
+                       context_dist_topk, exact_output, make_plan,
+                       make_tables, plan_agg_ops, plan_has_join)
 from repro.analytics import plan as L, planner, telemetry
 import repro.analytics.physical as PH
 from repro.analytics.planner import ExecutionContext, execute_plan
@@ -192,6 +252,7 @@ for seed in {seeds!r}:
     ops = plan_agg_ops(plan)
     ref = execute_plan(plan, tables, ExecutionContext(executor="xla"))
     cf = context_capacity_factor(seed)
+    has_topk = any(isinstance(n, L.TopK) for n in L.walk(plan.root))
     contexts = [("ft", ExecutionContext(executor="xla", mesh=mesh,
                                         policy=PlacementPolicy.FIRST_TOUCH,
                                         capacity_factor=cf)),
@@ -244,10 +305,48 @@ for seed in {seeds!r}:
         assert other[1] == recorded[0][1], (seed, recorded)
     if len(recorded) == 3:
         assert recorded[1] == recorded[2], (seed, recorded)
-    has_topk = any(isinstance(n, L.TopK) for n in L.walk(plan.root))
     if recorded and not has_topk and _root_aggregate(plan).key is not None:
         occ = int(np.count_nonzero(np.asarray(ref["_count"]) > 0))
         assert occ in recorded[0][1], (seed, occ, recorded[0])
+    # PR 10: distributed-TopK lowerings forced BOTH ways must stay
+    # bit-identical to the local reference (top_idx is exact: the
+    # candidates path's tie-breaks reproduce replicated's
+    # ascending-index rule by construction). The cost default above
+    # already ran whichever one topk_costs picked; the per-seed tracked
+    # pass pins the wire accounting of the chosen lowering.
+    if has_topk:
+        k = plan.root.k
+        for mode in ("replicated", "candidates"):
+            tctx = ExecutionContext(executor="xla", mesh=mesh,
+                                    policy=PlacementPolicy.INTERLEAVE,
+                                    capacity_factor=cf, dist_topk=mode)
+            check(execute_plan(plan, tables, tctx), ref, ops, seed,
+                  "tk-" + mode)
+        mode = context_dist_topk(seed)
+        tctx = ExecutionContext(executor="xla", mesh=mesh,
+                                policy=PlacementPolicy.INTERLEAVE,
+                                capacity_factor=cf, dist_topk=mode)
+        with telemetry.recording() as reg:
+            cp = planner.compile_plan(plan, tables, tctx)
+            tout = cp(tables)
+        check(tout, ref, ops, seed, "tk-" + mode + "+rec")
+        ps = reg.get(cp.cache_key)
+        nodes = ps.node_list()
+        topks = [n for n in nodes if isinstance(n, PH.PTopK)]
+        assert len(topks) == 1 and topks[0].dist == mode, (seed, mode)
+        if mode == "candidates":
+            # movement-free contract: only k rows per shard converge
+            # through the gather — k * n_shards candidates total, and
+            # the observed wire volume equals the estimate exactly
+            ex = topks[0].child
+            assert isinstance(ex, PH.Exchange) and ex.kind == "gather", ex
+            assert ex.moved_rows == k * 3 <= k * 4, (seed, ex)
+            ns = [s for i, s in ps.nodes.items() if nodes[i] is ex][0]
+            assert ns.last["alive_in"] == k * 4, (seed, ns.last)
+            assert ns.last["moved"] == k * 3 * 4, (seed, ns.last)
+        else:
+            # replicated selects on the merged table: no TopK Exchange
+            assert not isinstance(topks[0].child, PH.Exchange), seed
 
 # PR-9 empty-alive guard: a predicate no fact row satisfies (d is drawn
 # from [0, 100)) kills every row on EVERY shard before the partitioned

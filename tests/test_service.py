@@ -158,10 +158,35 @@ def test_morsel_boundary_correctness(data, name):
                                        err_msg=f"{name}/{k}")
 
 
-def test_non_decomposable_plans_serve_whole(data):
-    """Joins/TopK (q3, q5, q18) must NOT be morsel-split — they execute as
-    one whole-plan morsel and stay bit-identical even with morsel_rows
-    set."""
+def test_split_probe_plans_serve_bit_identical(data):
+    """Join pipelines (q3, q5, q18) become SPLIT-PROBE tasks when
+    morsel_rows is set: each probe side fans out into per-pool morsels
+    (the exact count: ceil(probe_rows / morsel_rows) per query) and the
+    served result stays bit-identical to serial run_query — the merge is
+    a morsel-order row concat, never a float re-ordering."""
+    ctx = ExecutionContext(executor="cost")
+    refs = {n: run_query(n, data, context=ctx) for n in ("q3", "q5", "q18")}
+    with AnalyticsService(ServiceConfig(n_pools=2, workers_per_pool=1,
+                                        morsel_rows=1000)) as svc:
+        rids = {n: submit_query(svc, n, data, context=ctx) for n in refs}
+        results = svc.drain()
+        st = svc.stats()
+    n_li = data.tables["lineitem"]["l_orderkey"].shape[0]
+    n_ord = data.tables["orders"]["o_orderkey"].shape[0]
+    # q3 and q5 probe lineitem; q18's on-path probe is orders
+    expect = 2 * -(-n_li // 1000) + -(-n_ord // 1000)
+    assert st.morsels == expect
+    for name, rid in rids.items():
+        _assert_bit_identical(results[rid].value, refs[name], name)
+
+
+def test_sub_threshold_probes_serve_whole(data):
+    """Below the profile's morsel_split_rows the planner declines to
+    split: the same joins dispatch as ONE whole-plan morsel each (the
+    cost model's call, not a capability limit) and stay bit-identical."""
+    import dataclasses
+    planner.set_cost_profile(dataclasses.replace(
+        planner.current_cost_profile(), morsel_split_rows=1 << 30))
     ctx = ExecutionContext(executor="cost")
     refs = {n: run_query(n, data, context=ctx) for n in ("q3", "q5", "q18")}
     with AnalyticsService(ServiceConfig(n_pools=2, workers_per_pool=1,
